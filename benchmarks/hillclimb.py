@@ -1,0 +1,86 @@
+"""§Perf hillclimb driver: run named config variants for the three chosen
+cells, print before/after roofline deltas, write artifacts.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--cell mixtral] [--fast]
+
+Must run in its own process (forces the 512-device XLA flag via dryrun
+import). Variants encode the hypotheses logged in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+CELLS = {
+    # "baseline" rows are the pre-embed-fix matrix artifacts; every fresh
+    # compile includes the chunked one-hot embedding backward (it4).
+    "mixtral": ("mixtral-8x22b", "train_4k", [
+        ("baseline", {}),
+        ("embed_fix", {}),
+        ("embed_fix+probs_bf16", {"attn_probs_bf16": True}),
+    ]),
+    "jamba": ("jamba-1.5-large-398b", "train_4k", [
+        ("baseline", {}),
+        ("embed_fix+ssm_bf16", {"ssm_scan_bf16": True}),
+        ("embed_fix+ssm_bf16+loss512", {"ssm_scan_bf16": True,
+                                        "loss_chunk": 512}),
+    ]),
+    "commandr": ("command-r-plus-104b", "prefill_32k", [
+        ("baseline", {}),
+        ("embed_fix+probs_bf16", {"attn_probs_bf16": True}),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS))
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "artifacts", "hillclimb.json"))
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import ARTIFACT_DIR, lower_cell  # sets XLA_FLAGS
+    results = {}
+    cells = {args.cell: CELLS[args.cell]} if args.cell else CELLS
+    for key, (arch, shape, variants) in cells.items():
+        print(f"=== {arch} x {shape} ===", flush=True)
+        base = None
+        results[key] = []
+        for name, overrides in variants:
+            # reuse the matrix artifact for the baseline variant
+            art = os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__16x16.json")
+            if name == "baseline" and os.path.exists(art):
+                rec = json.load(open(art))
+            else:
+                rec = lower_cell(arch, shape, multi_pod=False,
+                                 cfg_overrides=overrides)
+            rl = rec["roofline"]
+            row = dict(variant=name, overrides=overrides,
+                       compute_ms=rl["compute_s"] * 1e3,
+                       memory_ms=rl["memory_s"] * 1e3,
+                       collective_ms=rl["collective_s"] * 1e3,
+                       useful=rl["useful_flops_ratio"],
+                       hbm_gib=rec["bytes_per_device"] / 2**30,
+                       dominant=rl["dominant"])
+            results[key].append(row)
+            if base is None:
+                base = row
+                delta = ""
+            else:
+                dom = base["dominant"].replace("_s", "_ms")
+                delta = (f"  [dominant {dom}: "
+                         f"{base[dom]:.0f} -> {row[dom]:.0f} ms, "
+                         f"{100*(base[dom]-row[dom])/max(base[dom],1e-9):+.1f}%]")
+            print(f"{name:24s} comp={row['compute_ms']:9.1f} "
+                  f"mem={row['memory_ms']:9.1f} coll={row['collective_ms']:9.1f} "
+                  f"useful={row['useful']:5.2f} hbm={row['hbm_gib']:7.2f}GiB"
+                  f"{delta}", flush=True)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

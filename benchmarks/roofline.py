@@ -1,0 +1,94 @@
+"""§Roofline: read the dry-run JSON artifacts and print the per-(arch x
+shape x mesh) three-term roofline table + dominant bottleneck + the
+MODEL_FLOPS/HLO_FLOPs useful ratio. Also derives the paper-integration
+demand vectors (repro.core.workloads) per cell."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_records(art_dir: str = ART):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(art_dir: str = ART):
+    recs = load_records(art_dir)
+    if not recs:
+        print(f"[roofline] no dry-run artifacts in {art_dir} — run "
+              "`python -m repro.launch.dryrun` first")
+        return {"rows": []}
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+
+    print("=" * 132)
+    print("Roofline table (single-pod 16x16 unless noted) — terms in ms/step; "
+          "dominant term capitalized")
+    print("=" * 132)
+    header = (f"{'cell':<42s} {'mesh':>8s} {'compute':>9s} {'memory':>9s} "
+              f"{'coll':>9s} {'dom':>10s} {'useful':>7s} {'HBM GiB':>8s} "
+              f"{'MFU-bound':>9s}")
+    print(header)
+    print("-" * 132)
+    rows = []
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["cell"])):
+        rl = r["roofline"]
+        dom = rl["dominant"].replace("_s", "")
+        # achievable MFU if only the dominant term bounds the step
+        step_time = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        mfu_bound = (r["model_flops_per_device"] / 197e12) / max(step_time, 1e-12)
+        row = dict(cell=r["cell"], mesh=r["mesh"],
+                   compute_ms=rl["compute_s"] * 1e3,
+                   memory_ms=rl["memory_s"] * 1e3,
+                   collective_ms=rl["collective_s"] * 1e3,
+                   dominant=dom, useful=rl["useful_flops_ratio"],
+                   hbm_gib=r["bytes_per_device"] / 2**30,
+                   mfu_bound=mfu_bound)
+        rows.append(row)
+        print(f"{row['cell']:<42s} {row['mesh']:>8s} {row['compute_ms']:>9.1f} "
+              f"{row['memory_ms']:>9.1f} {row['collective_ms']:>9.1f} "
+              f"{dom.upper():>10s} {row['useful']:>7.2f} "
+              f"{row['hbm_gib']:>8.2f} {row['mfu_bound']:>9.3f}")
+    if skipped:
+        print("-" * 132)
+        for r in skipped:
+            print(f"SKIP {r['cell']} [{r['mesh']}]: {r['reason'][:90]}")
+    if errors:
+        print("-" * 132)
+        for r in errors:
+            print(f"ERROR {r['cell']} [{r['mesh']}]: {r['error'][:90]}")
+
+    # paper-integration: fleet demand from the dry-run records
+    try:
+        from repro.core.workloads import demand_from_dryrun_record
+        train_cells = [r for r in ok if r["kind"] == "train"
+                       and r["mesh"] == "16x16"]
+        if train_cells:
+            print("-" * 132)
+            print("Allocator demand vectors (chips, HBM GB, ICI GB/s, host "
+                  "RAM GB) @ 1s step budget — paper-core integration:")
+            for r in train_cells[:5]:
+                d = demand_from_dryrun_record(r)
+                print(f"  {r['cell']:<42s} chips={d[0]:8.1f} hbm={d[1]:9.0f} "
+                      f"ici={d[2]:8.1f} ram={d[3]:5.0f}")
+    except Exception as e:
+        print("workloads integration skipped:", e)
+
+    print("-" * 132)
+    print(f"{len(ok)} ok / {len(skipped)} skipped / {len(errors)} errors")
+    return {"rows": rows, "n_ok": len(ok), "n_skipped": len(skipped),
+            "n_errors": len(errors)}
+
+
+if __name__ == "__main__":
+    run()

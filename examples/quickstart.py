@@ -1,0 +1,51 @@
+"""Quickstart: the paper in 40 lines — build the catalogs, take a scenario,
+run the Kubernetes Cluster Autoscaler baseline and the convex-optimization
+allocator, compare cost/utilization/fragmentation.
+
+  PYTHONPATH=src python examples/quickstart.py [--scenario s4_memory]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import (build_scenarios, evaluate, make_cloud_catalog,
+                        optimize, simulate_cluster_autoscaler)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="s4_memory")
+    ap.add_argument("--bnb", action="store_true",
+                    help="polish with branch-and-bound")
+    args = ap.parse_args()
+
+    catalog = make_cloud_catalog()          # 940 Azure-like + 940 Linode-like
+    scenario = {s.name: s for s in build_scenarios(catalog)}[args.scenario]
+    print(f"scenario: {scenario.title}")
+    print(f"demand:   cpu={scenario.demand[0]:.0f} mem={scenario.demand[1]:.0f}GB "
+          f"net={scenario.demand[2]:.0f} storage={scenario.demand[3]:.0f}GB")
+
+    ca = simulate_cluster_autoscaler(catalog, scenario.pools, scenario.demand)
+    ca_metrics = evaluate(catalog, ca.counts, scenario.demand)
+    print(f"\nCluster Autoscaler : ${ca_metrics.total_cost:.3f}/hr  "
+          f"util={ca_metrics.utilization_pct:.1f}%  "
+          f"over={ca_metrics.overprovision_pct:.0f}%  "
+          f"types={ca_metrics.instance_diversity}")
+
+    res = optimize(catalog, scenario, n_starts=6, use_bnb=args.bnb)
+    m = res.metrics
+    print(f"Convex optimization: ${m.total_cost:.3f}/hr  "
+          f"util={m.utilization_pct:.1f}%  over={m.overprovision_pct:.0f}%  "
+          f"types={m.instance_diversity}")
+    save = 100 * (ca_metrics.total_cost - m.total_cost) / ca_metrics.total_cost
+    print(f"\nsavings: {save:.1f}%")
+    used = np.nonzero(res.counts)[0]
+    print("chosen instances:")
+    for j in used:
+        it = catalog.instances[j]
+        print(f"  {int(res.counts[j])} x {it.name:22s} "
+              f"({it.cpu:.0f} vCPU, {it.mem_gb:.0f}GB, ${it.hourly_price}/hr)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from . import checkpoint
+from .checkpoint import AsyncCheckpointer, load_latest, save, load

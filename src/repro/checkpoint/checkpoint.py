@@ -1,0 +1,131 @@
+"""Sharded checkpointing: atomic, restart-safe, async-capable.
+
+Layout: <dir>/step_<N>/
+    manifest.json            — tree structure, shapes, dtypes, step metadata
+    arr_<i>.npy              — one file per leaf (local/addressable data)
+    _COMMITTED               — written LAST; absence => partial checkpoint
+
+Restart = load_latest(): picks the newest COMMITTED step. Async mode hands
+the (host-synced) arrays to a writer thread — training continues while the
+previous step serializes (the standard overlap trick); ``wait()`` joins.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    """Synchronous sharded save with atomic commit."""
+    leaves, treedef = _flatten(tree)
+    step_dir = os.path.join(path, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        np.save(os.path.join(tmp_dir, f"arr_{i}.npy"), arr)
+        manifest["leaves"].append({"shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp_dir, "_COMMITTED"), "w") as f:
+        f.write(str(time.time()))
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)   # atomic publish
+    return step_dir
+
+
+def load(step_dir: str, like: Any) -> Tuple[int, Any, dict]:
+    """Load into the structure of ``like`` (shape/dtype-checked)."""
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_like, treedef = _flatten(like)
+    assert manifest["n_leaves"] == len(leaves_like), (
+        f"checkpoint has {manifest['n_leaves']} leaves, expected "
+        f"{len(leaves_like)} — incompatible tree")
+    leaves = []
+    for i, ref in enumerate(leaves_like):
+        arr = np.load(os.path.join(step_dir, f"arr_{i}.npy"))
+        want = tuple(np.shape(ref))
+        assert tuple(arr.shape) == want, (i, arr.shape, want)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return manifest["step"], tree, manifest.get("extra", {})
+
+
+def latest_step_dir(path: str) -> Optional[str]:
+    if not os.path.isdir(path):
+        return None
+    steps = sorted(d for d in os.listdir(path)
+                   if d.startswith("step_") and not d.endswith(".tmp")
+                   and os.path.exists(os.path.join(path, d, "_COMMITTED")))
+    return os.path.join(path, steps[-1]) if steps else None
+
+
+def load_latest(path: str, like: Any):
+    """Returns (step, tree, extra) or None — the restart entry point."""
+    d = latest_step_dir(path)
+    if d is None:
+        return None
+    return load(d, like)
+
+
+class AsyncCheckpointer:
+    """Overlap serialization with compute: save() returns immediately after
+    device->host transfer; a single writer thread serializes in order."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # sync copy
+
+        def run():
+            try:
+                save(self.path, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._err = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.path)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, d), ignore_errors=True)

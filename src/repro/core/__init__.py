@@ -1,0 +1,38 @@
+"""repro.core — the paper's contribution: convex-optimization cloud resource
+allocation (objective eq.1, KKT, solver, rounding, branch-and-bound,
+multi-start, incremental adoption, CA baseline, controller)."""
+from .problem import AllocationProblem, PenaltyParams
+# NOTE: the bare function `objective` is NOT re-exported — it would shadow the
+# `repro.core.objective` module attribute. Use `objective_value` or the module.
+from .objective import objective as objective_value
+from .objective import (objective_terms, grad_objective,
+                        constraint_residuals, is_feasible)
+from .solver import SolverConfig, SolveResult, solve_relaxation
+from .multistart import multistart_solve, make_starts
+from .rounding import greedy_round, round_and_polish, scale_down
+from .branch_bound import branch_and_bound, BnBResult
+from .incremental import project_l1_ball, project_incremental, solve_incremental
+from .kkt import kkt_report, KKTReport
+from .catalog import Catalog, InstanceType, make_cloud_catalog, make_tpu_catalog
+from .autoscaler import NodePool, simulate_cluster_autoscaler, default_pools_for
+from .metrics import AllocationMetrics, evaluate, per_dim_utilization
+from .scenarios import Scenario, build_scenarios, scaled_scenario
+from .api import optimize, problem_from_scenario, OptimizeResult
+from .controller import InfrastructureOptimizationController, ControllerStep
+from .pareto import grid_search, sensitivity, pareto_mask
+from . import workloads
+
+__all__ = [
+    "AllocationProblem", "PenaltyParams", "objective_value", "objective_terms",
+    "grad_objective", "constraint_residuals", "is_feasible", "SolverConfig",
+    "SolveResult", "solve_relaxation", "multistart_solve", "make_starts",
+    "greedy_round", "round_and_polish", "scale_down", "branch_and_bound",
+    "BnBResult", "project_l1_ball", "project_incremental", "solve_incremental",
+    "kkt_report", "KKTReport", "Catalog", "InstanceType", "make_cloud_catalog",
+    "make_tpu_catalog", "NodePool", "simulate_cluster_autoscaler",
+    "default_pools_for", "AllocationMetrics", "evaluate", "per_dim_utilization",
+    "Scenario", "build_scenarios", "scaled_scenario", "optimize",
+    "problem_from_scenario", "OptimizeResult",
+    "InfrastructureOptimizationController", "ControllerStep", "grid_search",
+    "sensitivity", "pareto_mask", "workloads",
+]

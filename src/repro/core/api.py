@@ -1,0 +1,81 @@
+"""High-level allocation pipeline: scenario -> problem -> multistart convex
+solve -> greedy rounding (-> optional branch-and-bound) -> metrics.
+
+This is the "optimization approach" column of the paper's comparison
+methodology (§IV.B.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .branch_bound import branch_and_bound
+from .catalog import Catalog
+from .metrics import AllocationMetrics, evaluate
+from .multistart import multistart_solve
+from .problem import AllocationProblem, PenaltyParams
+from .rounding import round_and_polish
+from .scenarios import Scenario
+from .solver import SolverConfig
+
+
+@dataclass
+class OptimizeResult:
+    counts: np.ndarray
+    relaxed: np.ndarray
+    metrics: AllocationMetrics
+    fun: float
+    used_bnb: bool
+
+
+def problem_from_scenario(catalog: Catalog, scenario: Scenario,
+                          params: Optional[PenaltyParams] = None,
+                          normalize: bool = True,
+                          ) -> AllocationProblem:
+    """Build the problem; with ``normalize`` (default) each resource row of K
+    is divided by the demand d_r (so d == 1 in solver units). This
+    conditions the problem — otherwise storage-GB (O(100)) dominates both the
+    shortage penalty and the greedy-rounding score over CPU cores (O(10)).
+    Metrics are always computed in raw units against the catalog."""
+    K, E, c = catalog.matrices()
+    d = scenario.demand.astype(np.float32)
+    if normalize:
+        scale = 1.0 / np.maximum(d, 1e-9)
+        K = K * scale[:, None]
+        d = np.ones_like(d)
+    prob = AllocationProblem.create(K, E, c, d, params=params)
+    if scenario.allowed_idx is not None:
+        # existing nodes stay allowed even if outside the approved list
+        allowed = np.asarray(scenario.allowed_idx)
+        existing_idx = np.nonzero(scenario.existing > 0)[0]
+        prob = prob.restrict(np.unique(np.concatenate([allowed, existing_idx])))
+    if scenario.existing is not None and scenario.existing.any():
+        prob = prob.with_existing(scenario.existing.astype(np.float32))
+    return prob
+
+
+def optimize(catalog: Catalog, scenario: Scenario,
+             params: Optional[PenaltyParams] = None,
+             n_starts: int = 8, seed: int = 0,
+             use_bnb: bool = False, bnb_nodes: int = 24,
+             cfg: Optional[SolverConfig] = None) -> OptimizeResult:
+    prob = problem_from_scenario(catalog, scenario, params)
+    ms = multistart_solve(prob, n_starts=n_starts, seed=seed, cfg=cfg)
+    x_rel = ms.best.x
+    if use_bnb:
+        bnb = branch_and_bound(prob, np.asarray(x_rel), max_nodes=bnb_nodes)
+        x_int, used = bnb.x, True
+        if float(ms.fun_int) < bnb.fun:   # keep the multistart incumbent
+            x_int = np.asarray(ms.x_int)
+    else:
+        x_int, used = np.asarray(ms.x_int), False
+    import repro.core.objective as obj
+    fun = float(obj.objective(prob, jnp.asarray(x_int, jnp.float32)))
+    return OptimizeResult(
+        counts=np.asarray(x_int, np.float64),
+        relaxed=np.asarray(x_rel, np.float64),
+        metrics=evaluate(catalog, np.asarray(x_int), scenario.demand),
+        fun=fun, used_bnb=used)

@@ -1,0 +1,96 @@
+"""Infrastructure Optimization Controller (paper §I.C bullet 3 + §III.E).
+
+Maintains a cluster allocation against a time-varying demand stream, replanning
+each tick under the incremental-adoption constraint ||x - x_cur||_1 <= delta.
+This is the production control loop: bounded churn, warm-started solves,
+failure-driven replans (used by repro.distributed.elastic for TPU fleets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .catalog import Catalog
+from .incremental import solve_incremental
+from .metrics import AllocationMetrics, evaluate
+from .multistart import multistart_solve
+from .problem import AllocationProblem, PenaltyParams
+from .rounding import round_and_polish
+
+
+@dataclass
+class ControllerStep:
+    demand: np.ndarray
+    counts: np.ndarray
+    metrics: AllocationMetrics
+    churn: float                 # ||x_t - x_{t-1}||_1
+    replanned: bool
+
+
+@dataclass
+class InfrastructureOptimizationController:
+    catalog: Catalog
+    delta_max: float = 8.0                       # max L1 churn per tick
+    params: Optional[PenaltyParams] = None
+    n_starts: int = 4
+    allowed_idx: Optional[np.ndarray] = None
+    x_current: np.ndarray = None                 # set on first step
+    history: List[ControllerStep] = field(default_factory=list)
+
+    def _problem(self, demand: np.ndarray) -> AllocationProblem:
+        K, E, c = self.catalog.matrices()
+        prob = AllocationProblem.create(K, E, c, demand.astype(np.float32),
+                                        params=self.params)
+        if self.allowed_idx is not None:
+            prob = prob.restrict(self.allowed_idx)
+        return prob
+
+    def step(self, demand: np.ndarray) -> ControllerStep:
+        demand = np.asarray(demand, np.float64)
+        prob = self._problem(demand)
+        if self.x_current is None:
+            # cold start: full multistart solve, no churn bound
+            ms = multistart_solve(prob, n_starts=self.n_starts)
+            x = np.asarray(round_and_polish(prob, ms.best.x), np.float64)
+            replanned = True
+        else:
+            x_rel = solve_incremental(
+                prob, jnp.asarray(self.x_current, jnp.float32),
+                jnp.asarray(self.delta_max, jnp.float32))
+            x = np.asarray(round_and_polish(prob, x_rel), np.float64)
+            # rounding may exceed the churn bound slightly when demand jumps;
+            # that's the feasibility-first tradeoff (shortage beats churn).
+            replanned = False
+        churn = float(np.abs(x - (self.x_current if self.x_current is not None
+                                  else np.zeros_like(x))).sum())
+        self.x_current = x
+        step = ControllerStep(demand=demand, counts=x,
+                              metrics=evaluate(self.catalog, x, demand),
+                              churn=churn, replanned=replanned)
+        self.history.append(step)
+        return step
+
+    def replan_on_failure(self, failed_counts: np.ndarray,
+                          demand: np.ndarray) -> ControllerStep:
+        """Remove failed nodes from the current allocation, then replan with
+        the churn bound relaxed by the failure size (we must at least replace
+        what died)."""
+        assert self.x_current is not None, "controller has no allocation yet"
+        failed = np.minimum(np.asarray(failed_counts, np.float64), self.x_current)
+        self.x_current = self.x_current - failed
+        old_delta = self.delta_max
+        self.delta_max = float(old_delta + failed.sum())
+        try:
+            out = self.step(demand)
+        finally:
+            self.delta_max = old_delta
+        return out
+
+    def total_cost(self) -> float:
+        return sum(s.metrics.total_cost for s in self.history)
+
+    def total_churn(self) -> float:
+        return sum(s.churn for s in self.history)

@@ -1,0 +1,157 @@
+"""The five-term objective of eq. (1), its analytic gradient (eq. 6), and the
+constraint machinery (log-barrier / quadratic penalty) used by the solver.
+
+Pure jnp — every function here is jit- and vmap-safe. The fused Pallas kernel
+in ``repro.kernels.alloc_objective`` implements the batched (multi-start)
+objective+gradient and is validated against THESE functions, which act as the
+oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .problem import AllocationProblem
+
+# ---------------------------------------------------------------------------
+# Objective terms (paper eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def objective_terms(prob: AllocationProblem, x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Return each named term of f(x). x: (n,)."""
+    P = prob.params
+    Kx = prob.K @ x                       # (m,)
+    Ex = prob.E @ x                       # (p,)
+    base_cost = prob.c @ x
+    # alpha * p - alpha * 1^T e^{-b1 Ex}  ==  alpha * sum(1 - e^{-b1 Ex})
+    consolidation = P.alpha * jnp.sum(1.0 - jnp.exp(-P.beta1 * Ex))
+    volume_discount = -P.gamma * jnp.sum(jnp.log1p(P.beta2 * Ex))
+    shortage = jnp.maximum(prob.d - Kx, 0.0)
+    shortage_pen = P.beta3 * jnp.sum(shortage**2)
+    return {
+        "base_cost": base_cost,
+        "consolidation": consolidation,
+        "volume_discount": volume_discount,
+        "shortage": shortage_pen,
+    }
+
+
+def objective(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
+    t = objective_terms(prob, x)
+    return t["base_cost"] + t["consolidation"] + t["volume_discount"] + t["shortage"]
+
+
+def grad_objective(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
+    """Analytic gradient, mirroring the stationarity expression (eq. 6/8):
+
+      grad = c + a*b1*E^T e^{-b1 Ex} - g*b2*E^T 1/(1+b2 Ex)
+               - 2*b3*K^T diag(s)(d - Kx)
+    """
+    P = prob.params
+    Kx = prob.K @ x
+    Ex = prob.E @ x
+    g_consol = P.alpha * P.beta1 * (prob.E.T @ jnp.exp(-P.beta1 * Ex))
+    g_volume = -P.gamma * P.beta2 * (prob.E.T @ (1.0 / (1.0 + P.beta2 * Ex)))
+    shortage = jnp.maximum(prob.d - Kx, 0.0)
+    g_short = -2.0 * P.beta3 * (prob.K.T @ shortage)
+    return prob.c + g_consol + g_volume + g_short
+
+
+def value_and_grad(prob: AllocationProblem, x: jnp.ndarray):
+    return objective(prob, x), grad_objective(prob, x)
+
+
+# ---------------------------------------------------------------------------
+# Constraint handling (paper eq. 2): d - mu <= Kx <= d + g
+# ---------------------------------------------------------------------------
+
+
+def constraint_residuals(prob: AllocationProblem, x: jnp.ndarray):
+    """Positive residual == satisfied. Returns (lower (m,), upper (m,))."""
+    Kx = prob.K @ x
+    return Kx - (prob.d - prob.mu), (prob.d + prob.g) - Kx
+
+
+def constraint_violation(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
+    lo, hi = constraint_residuals(prob, x)
+    return jnp.sum(jnp.maximum(-lo, 0.0) ** 2) + jnp.sum(jnp.maximum(-hi, 0.0) ** 2)
+
+
+def is_feasible(prob: AllocationProblem, x: jnp.ndarray, tol: float = 1e-4):
+    lo, hi = constraint_residuals(prob, x)
+    box = jnp.all(x >= prob.lb - tol) & jnp.all(x <= prob.ub + tol)
+    return jnp.all(lo >= -tol) & jnp.all(hi >= -tol) & box
+
+
+def barrier(prob: AllocationProblem, x: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Log-barrier for the two-sided Kx constraint. Returns +inf outside the
+    strict interior (handled by the line search rejecting such points)."""
+    lo, hi = constraint_residuals(prob, x)
+    safe = (lo > 0).all() & (hi > 0).all()
+    val = -(1.0 / t) * (jnp.sum(jnp.log(jnp.where(lo > 0, lo, 1.0)))
+                        + jnp.sum(jnp.log(jnp.where(hi > 0, hi, 1.0))))
+    return jnp.where(safe, val, jnp.inf)
+
+
+def barrier_grad(prob: AllocationProblem, x: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    lo, hi = constraint_residuals(prob, x)
+    lo = jnp.maximum(lo, 1e-9)
+    hi = jnp.maximum(hi, 1e-9)
+    return -(1.0 / t) * (prob.K.T @ (1.0 / lo)) + (1.0 / t) * (prob.K.T @ (1.0 / hi))
+
+
+def penalty(prob: AllocationProblem, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Smooth quadratic exact-ish penalty used when no strict interior exists."""
+    return w * constraint_violation(prob, x)
+
+
+def penalty_grad(prob: AllocationProblem, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    lo, hi = constraint_residuals(prob, x)
+    g_lo = prob.K.T @ jnp.maximum(-lo, 0.0)   # d(sum max(-lo,0)^2)/dx = 2 K^T max(-lo,0) * d(-lo)/dKx ...
+    g_hi = prob.K.T @ jnp.maximum(-hi, 0.0)
+    return w * (-2.0 * g_lo + 2.0 * g_hi)
+
+
+# ---------------------------------------------------------------------------
+# Composite objective used by the solver
+# ---------------------------------------------------------------------------
+
+
+def composite(
+    prob: AllocationProblem,
+    x: jnp.ndarray,
+    barrier_t: jnp.ndarray,
+    penalty_w: jnp.ndarray,
+    use_barrier: jnp.ndarray,
+) -> jnp.ndarray:
+    """f(x) + (barrier | penalty). ``use_barrier`` is a traced bool."""
+    f = objective(prob, x)
+    b = barrier(prob, x, barrier_t)
+    q = penalty(prob, x, penalty_w)
+    return f + jnp.where(use_barrier, b, q)
+
+
+def composite_grad(
+    prob: AllocationProblem,
+    x: jnp.ndarray,
+    barrier_t: jnp.ndarray,
+    penalty_w: jnp.ndarray,
+    use_barrier: jnp.ndarray,
+) -> jnp.ndarray:
+    gf = grad_objective(prob, x)
+    gb = barrier_grad(prob, x, barrier_t)
+    gq = penalty_grad(prob, x, penalty_w)
+    return gf + jnp.where(use_barrier, gb, gq)
+
+
+# ---------------------------------------------------------------------------
+# Projection
+# ---------------------------------------------------------------------------
+
+
+def project(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
+    """Project onto the box [lb, ub] intersected with the mask support."""
+    return jnp.clip(x, prob.lb, prob.ub) * prob.mask

@@ -1,0 +1,112 @@
+"""Parameter tuning (paper §III.D): grid search over (alpha, beta1, beta2,
+beta3, gamma), Pareto-frontier extraction over (cost, fragmentation,
+diversity), and sensitivity analysis. The grid is vmapped — one compiled
+solve evaluates the whole parameter grid batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.objective as obj
+from .problem import AllocationProblem, PenaltyParams
+from .rounding import greedy_round
+from .solver import SolverConfig, solve_relaxation
+
+
+@dataclass
+class GridPoint:
+    params: Dict[str, float]
+    cost: float
+    fragmentation: int
+    diversity: int
+    objective: float
+    on_frontier: bool = False
+
+
+def _eval_grid(prob: AllocationProblem, grid: PenaltyParams,
+               cfg: SolverConfig, x0: jnp.ndarray):
+    def one(params: PenaltyParams):
+        p = prob._replace(params=params)
+        res = solve_relaxation(p, x0, cfg)
+        x_int = greedy_round(p, res.x)
+        cost = p.c @ x_int
+        used = (x_int > 0.5).astype(jnp.float32)
+        frag = jnp.sum((p.E @ used) > 0.5)
+        div = jnp.sum(used)
+        return cost, frag, div, obj.objective(p, x_int)
+
+    return jax.jit(jax.vmap(one))(grid)
+
+
+def pareto_mask(points: np.ndarray) -> np.ndarray:
+    """points (N, k): smaller is better on every axis. Returns frontier mask."""
+    N = points.shape[0]
+    mask = np.ones(N, bool)
+    for i in range(N):
+        if not mask[i]:
+            continue
+        dominated = (np.all(points <= points[i], axis=1)
+                     & np.any(points < points[i], axis=1))
+        if dominated.any():
+            mask[i] = False
+    return mask
+
+
+def grid_search(prob: AllocationProblem,
+                alphas: Sequence[float] = (0.1, 1.0, 5.0),
+                gammas: Sequence[float] = (0.05, 0.2, 1.0),
+                beta1s: Sequence[float] = (0.5,),
+                beta2s: Sequence[float] = (0.05,),
+                beta3s: Sequence[float] = (50.0,),
+                cfg: SolverConfig = SolverConfig(max_iters=200, barrier_rounds=2),
+                ) -> List[GridPoint]:
+    combos = [(a, b1, b2, b3, g)
+              for a in alphas for b1 in beta1s for b2 in beta2s
+              for b3 in beta3s for g in gammas]
+    grid = PenaltyParams(
+        alpha=jnp.asarray([c[0] for c in combos], jnp.float32),
+        beta1=jnp.asarray([c[1] for c in combos], jnp.float32),
+        beta2=jnp.asarray([c[2] for c in combos], jnp.float32),
+        beta3=jnp.asarray([c[3] for c in combos], jnp.float32),
+        gamma=jnp.asarray([c[4] for c in combos], jnp.float32),
+    )
+    x0 = jnp.zeros(prob.n, jnp.float32)
+    cost, frag, div, fval = _eval_grid(prob, grid, cfg, x0)
+    pts = np.stack([np.asarray(cost), np.asarray(frag, np.float64)], axis=1)
+    frontier = pareto_mask(pts)
+    out = []
+    for i, (a, b1, b2, b3, g) in enumerate(combos):
+        out.append(GridPoint(
+            params=dict(alpha=a, beta1=b1, beta2=b2, beta3=b3, gamma=g),
+            cost=float(cost[i]), fragmentation=int(frag[i]),
+            diversity=int(div[i]), objective=float(fval[i]),
+            on_frontier=bool(frontier[i])))
+    return out
+
+
+def sensitivity(prob: AllocationProblem, base: PenaltyParams,
+                rel_step: float = 0.1,
+                cfg: SolverConfig = SolverConfig(max_iters=200, barrier_rounds=2),
+                ) -> Dict[str, float]:
+    """d(cost)/d(log param) central differences — which knob matters most."""
+    names = ["alpha", "beta1", "beta2", "beta3", "gamma"]
+    x0 = jnp.zeros(prob.n, jnp.float32)
+
+    def cost_at(params: PenaltyParams) -> float:
+        p = prob._replace(params=params)
+        res = solve_relaxation(p, x0, cfg)
+        x_int = greedy_round(p, res.x)
+        return float(p.c @ x_int)
+
+    out = {}
+    for nm in names:
+        v = float(getattr(base, nm))
+        hi = base._replace(**{nm: jnp.asarray(v * (1 + rel_step), jnp.float32)})
+        lo = base._replace(**{nm: jnp.asarray(v * (1 - rel_step), jnp.float32)})
+        out[nm] = (cost_at(hi) - cost_at(lo)) / (2 * rel_step)
+    return out

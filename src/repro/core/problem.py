@@ -1,0 +1,110 @@
+"""Problem container for the paper's allocation model (§II.A).
+
+Everything is a pytree of jnp arrays so problems can be jit-ed, vmap-ed
+(e.g. over parameter grids for Pareto sweeps) and donated.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PenaltyParams(NamedTuple):
+    """The five scalar knobs of eq. (1). Stored as 0-d arrays so that a
+    vmap over a grid of parameter settings is a first-class operation."""
+
+    alpha: jnp.ndarray   # provider-consolidation weight
+    beta1: jnp.ndarray   # sharpness of the 1 - e^{-b1 z} indicator approx
+    beta2: jnp.ndarray   # volume-discount curvature
+    beta3: jnp.ndarray   # shortage-penalty weight
+    gamma: jnp.ndarray   # volume-discount weight
+
+    @classmethod
+    def create(cls, alpha=0.02, beta1=1.0, beta2=0.1, beta3=10.0, gamma=0.005):
+        # Defaults tuned via pareto.grid_search on the five paper scenarios:
+        # penalties must live on the same scale as $/hr base costs (0.1-1.5),
+        # otherwise consolidation (<= alpha*p) dominates the allocation.
+        f = lambda v: jnp.asarray(v, dtype=jnp.float32)
+        return cls(f(alpha), f(beta1), f(beta2), f(beta3), f(gamma))
+
+
+class AllocationProblem(NamedTuple):
+    """Paper §II.A: min f(x) s.t. d - mu <= Kx <= d + g, x >= 0 (int relaxed).
+
+    Shapes: K (m, n), E (p, n), c (n,), d/mu/g (m,).
+    ``lb``/``ub`` are per-variable box bounds — identity boxes for the root
+    problem; branch-and-bound tightens them per node. ``mask`` zeroes out
+    instance types that a scenario forbids (enterprise-approved lists etc.).
+    """
+
+    K: jnp.ndarray
+    E: jnp.ndarray
+    c: jnp.ndarray
+    d: jnp.ndarray
+    mu: jnp.ndarray
+    g: jnp.ndarray
+    params: PenaltyParams
+    lb: jnp.ndarray
+    ub: jnp.ndarray
+    mask: jnp.ndarray  # 1.0 = allowed, 0.0 = forbidden
+
+    @property
+    def n(self) -> int:
+        return self.c.shape[-1]
+
+    @property
+    def m(self) -> int:
+        return self.d.shape[-1]
+
+    @property
+    def p(self) -> int:
+        return self.E.shape[-2]
+
+    @classmethod
+    def create(
+        cls,
+        K,
+        E,
+        c,
+        d,
+        mu: Optional[np.ndarray] = None,
+        g: Optional[np.ndarray] = None,
+        params: Optional[PenaltyParams] = None,
+        lb=None,
+        ub=None,
+        mask=None,
+        ub_default: float = 1e4,
+    ) -> "AllocationProblem":
+        K = jnp.asarray(K, jnp.float32)
+        E = jnp.asarray(E, jnp.float32)
+        c = jnp.asarray(c, jnp.float32)
+        d = jnp.asarray(d, jnp.float32)
+        m, n = K.shape
+        mu = jnp.zeros(m, jnp.float32) if mu is None else jnp.asarray(mu, jnp.float32)
+        # Default waste cap: generous (20x demand) — the paper's scenarios
+        # frequently *require* heavy over-provisioning (Fig. 2 bottom), so a
+        # tight cap would make the integer problem infeasible.
+        g = 19.0 * d if g is None else jnp.asarray(g, jnp.float32)
+        params = params if params is not None else PenaltyParams.create()
+        lb = jnp.zeros(n, jnp.float32) if lb is None else jnp.asarray(lb, jnp.float32)
+        ub = (
+            jnp.full((n,), ub_default, jnp.float32)
+            if ub is None
+            else jnp.asarray(ub, jnp.float32)
+        )
+        mask = jnp.ones(n, jnp.float32) if mask is None else jnp.asarray(mask, jnp.float32)
+        return cls(K, E, c, d, mu, g, params, lb, ub, mask)
+
+    def restrict(self, allowed_idx) -> "AllocationProblem":
+        """Return a problem where only ``allowed_idx`` instance types may be
+        used (others get mask 0 and ub 0)."""
+        mask = jnp.zeros(self.n, jnp.float32).at[jnp.asarray(allowed_idx)].set(1.0)
+        return self._replace(mask=mask, ub=self.ub * mask)
+
+    def with_existing(self, x_existing) -> "AllocationProblem":
+        """Lower-bound the allocation by an existing deployment (nodes that
+        are already running and must be kept — scenario 2/4 setups)."""
+        x_existing = jnp.asarray(x_existing, jnp.float32)
+        return self._replace(lb=jnp.maximum(self.lb, x_existing))

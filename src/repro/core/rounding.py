@@ -1,0 +1,97 @@
+"""Greedy rounding strategy — paper §III.B, implemented verbatim:
+
+  1. x_hat = floor(x*)
+  2. delta = d - K x_hat
+  3. while delta has positive components:
+       pick i maximizing  sum_{r: delta_r>0} K_ri * delta_r / c_i
+       x_hat_i += 1; recompute delta
+
+jit-able via ``lax.while_loop``; the iteration count is bounded by the number
+of unit increments needed, capped at ``max_adds``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .problem import AllocationProblem
+
+
+@partial(jax.jit, static_argnames=("max_adds",))
+def greedy_round(prob: AllocationProblem, x_star: jnp.ndarray,
+                 max_adds: int = 4096) -> jnp.ndarray:
+    """Round a fractional solution to a feasible integer allocation."""
+    x0 = jnp.floor(jnp.clip(x_star, prob.lb, prob.ub)) * prob.mask
+    # deficits measured against the hard lower bound d - mu (primal feas.)
+    target = prob.d - prob.mu
+
+    def deficit(x):
+        return target - prob.K @ x
+
+    def cond(state):
+        x, it = state
+        return jnp.any(deficit(x) > 1e-6) & (it < max_adds)
+
+    def body(state):
+        x, it = state
+        delta = deficit(x)
+        pos = jnp.maximum(delta, 0.0)
+        score = (prob.K.T @ pos) / jnp.maximum(prob.c, 1e-9)       # (n,)
+        # never pick masked-out or at-upper-bound types
+        ok = (prob.mask > 0) & (x < prob.ub)
+        score = jnp.where(ok, score, -jnp.inf)
+        i = jnp.argmax(score)
+        return x.at[i].add(1.0), it + 1
+
+    x, _ = jax.lax.while_loop(cond, body, (x0, jnp.asarray(0)))
+    return x
+
+
+def round_and_polish(prob: AllocationProblem, x_star: jnp.ndarray,
+                     max_adds: int = 4096) -> jnp.ndarray:
+    """Paper's greedy rounding plus two beyond-paper polish passes:
+      * also try the ceil() candidate (keeps all fractional types instead of
+        dropping them at floor()),
+      * scale-down pass: drop units whose removal stays feasible,
+        most-expensive first (mirrors CA's scale-down).
+    Picks the feasible candidate with the lower objective."""
+    import repro.core.objective as obj
+
+    a = scale_down(prob, greedy_round(prob, x_star, max_adds=max_adds))
+    ceil_start = jnp.ceil(jnp.clip(x_star, prob.lb, prob.ub)) * prob.mask
+    # tiny fractions should not force a whole node: drop < 0.05 before ceil
+    ceil_start = jnp.where(x_star - jnp.floor(x_star) < 0.05,
+                           jnp.floor(x_star), ceil_start)
+    b = scale_down(prob, greedy_round(prob, ceil_start, max_adds=max_adds))
+    fa, fb = obj.objective(prob, a), obj.objective(prob, b)
+    feas_a = obj.is_feasible(prob, a, 1e-3)
+    feas_b = obj.is_feasible(prob, b, 1e-3)
+    pick_a = jnp.where(feas_a == feas_b, fa <= fb, feas_a)
+    return jnp.where(pick_a, a, b)
+
+
+@partial(jax.jit, static_argnames=("max_removes",))
+def scale_down(prob: AllocationProblem, x: jnp.ndarray,
+               max_removes: int = 4096) -> jnp.ndarray:
+    target = prob.d - prob.mu
+
+    def removable(x):
+        """cost of each type whose decrement keeps K x >= target."""
+        Kx = prob.K @ x
+        slack_ok = jnp.all(Kx[:, None] - prob.K >= target[:, None] - 1e-6, axis=0)
+        can = slack_ok & (x >= 1.0) & (x - 1.0 >= prob.lb)
+        return jnp.where(can, prob.c, -jnp.inf)
+
+    def cond(state):
+        x, it = state
+        return jnp.any(jnp.isfinite(removable(x)) & (removable(x) > 0)) & (it < max_removes)
+
+    def body(state):
+        x, it = state
+        i = jnp.argmax(removable(x))
+        return x.at[i].add(-1.0), it + 1
+
+    x, _ = jax.lax.while_loop(cond, body, (x, jnp.asarray(0)))
+    return x

@@ -1,0 +1,82 @@
+"""Elastic scaling — where the PAPER'S ALLOCATOR becomes the framework's
+brain: on failure (or load change) the Infrastructure Optimization
+Controller replans the accelerator fleet under the incremental-adoption
+churn bound (paper §III.E), and the runtime rebuilds the mesh and reshards
+the checkpoint.
+
+Flow:
+  demand  = roofline-derived demand vector (repro.core.workloads) for the
+            jobs that must keep running
+  replan  = controller.replan_on_failure(failed, demand)  (convex solve)
+  rebuild = next_mesh_shape() -> make_mesh -> reshard params from checkpoint
+            (deterministic data pipeline re-shards itself by step index)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (InfrastructureOptimizationController, make_tpu_catalog)
+from repro.core.workloads import JobSpec, demand_from_job
+
+
+@dataclass
+class FleetPlan:
+    counts: np.ndarray            # catalog counts (slice types)
+    total_chips: int
+    cost_per_hour: float
+    mesh_shape: Tuple[int, ...]   # (data, model) for the training job
+
+
+def _mesh_from_chips(chips: int, model_parallel: int = 16) -> Tuple[int, int]:
+    data = max(1, chips // model_parallel)
+    return (data, model_parallel)
+
+
+class ElasticFleet:
+    """Owns the controller + current plan for ONE training job (extend with
+    a job list for fleet-level planning — see examples/autoscale_controller)."""
+
+    def __init__(self, job: JobSpec, delta_max: float = 64.0,
+                 model_parallel: int = 16):
+        self.catalog = make_tpu_catalog()
+        self.job = job
+        self.model_parallel = model_parallel
+        self.controller = InfrastructureOptimizationController(
+            catalog=self.catalog, delta_max=delta_max, n_starts=4)
+
+    def _to_plan(self, counts: np.ndarray) -> FleetPlan:
+        K, _, c = self.catalog.matrices()
+        chips = float(K[0] @ counts)   # resource 0 = chips-equivalent
+        return FleetPlan(
+            counts=counts, total_chips=int(chips),
+            cost_per_hour=float(c @ counts),
+            mesh_shape=_mesh_from_chips(int(chips), self.model_parallel))
+
+    def initial_plan(self) -> FleetPlan:
+        demand = demand_from_job(self.job)
+        step = self.controller.step(demand)
+        return self._to_plan(step.counts)
+
+    def replan_after_failure(self, failed_counts: np.ndarray) -> FleetPlan:
+        demand = demand_from_job(self.job)
+        step = self.controller.replan_on_failure(failed_counts, demand)
+        return self._to_plan(step.counts)
+
+    def replan_for_demand(self, scale: float) -> FleetPlan:
+        job = dataclasses.replace(self.job, hlo_flops=self.job.hlo_flops * scale)
+        step = self.controller.step(demand_from_job(job))
+        return self._to_plan(step.counts)
+
+
+def reshard_params(params, old_mesh, new_mesh, axes_tree, rules):
+    """Reshard a param tree onto a new mesh (post-failure rebuild). With the
+    checkpoint path, this is load(step_dir) -> device_put with new shardings;
+    live resharding (no checkpoint) is a device_put across meshes."""
+    import jax
+    from repro.distributed import sharding as shd
+    shardings = shd.make_shardings(axes_tree, new_mesh, rules, params)
+    return jax.device_put(params, shardings)

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the perf-critical layers. Each kernel package has:
+  kernel.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target),
+  ops.py    — jit'd public wrapper (interpret=True on CPU for validation),
+  ref.py    — pure-jnp oracle the kernel is tested against.
+"""

@@ -1,0 +1,40 @@
+"""Public wrapper: pads n to the 128-lane boundary and the start batch to the
+block size, dispatches to the Pallas kernel, slices back. ``interpret=True``
+on CPU (validation); on TPU pass interpret=False for the compiled kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import AllocationProblem
+from .kernel import alloc_objective_pallas
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def batched_value_and_grad(prob: AllocationProblem, X: jnp.ndarray,
+                           block_s: int = 128, interpret: bool = True):
+    """(f (S,), grad (S, n)) for a batch of allocations X (S, n)."""
+    S, n = X.shape
+    Xp = _pad_to(_pad_to(X.astype(jnp.float32), 128, 1), block_s, 0)
+    Kp = _pad_to(prob.K.astype(jnp.float32), 128, 1)
+    Ep = _pad_to(prob.E.astype(jnp.float32), 128, 1)
+    cp = _pad_to(prob.c.astype(jnp.float32), 128, 0)
+    P = prob.params
+    scalars = jnp.stack([P.alpha, P.beta1, P.beta2, P.beta3, P.gamma,
+                         jnp.float32(prob.p), jnp.float32(0), jnp.float32(0)])
+    f, g = alloc_objective_pallas(Xp, Kp, Ep, cp, prob.d.astype(jnp.float32),
+                                  scalars.astype(jnp.float32),
+                                  block_s=block_s, interpret=interpret)
+    return f[:S], g[:S, :n]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: batched (multi-start) objective + gradient of eq. (1).
+
+Shapes: X (S, n) batch of allocation vectors; K (m, n); E (p, n); c (n,);
+d (m,); params scalars. Returns (f (S,), grad (S, n)).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def alloc_objective_ref(X, K, E, c, d, alpha, beta1, beta2, beta3, gamma):
+    X = X.astype(jnp.float32)
+    KX = jnp.einsum("mn,sn->sm", K, X)               # (S, m)
+    EX = jnp.einsum("pn,sn->sp", E, X)               # (S, p)
+    p = E.shape[0]
+
+    base = X @ c                                      # (S,)
+    consol = alpha * (p - jnp.sum(jnp.exp(-beta1 * EX), axis=-1))
+    volume = -gamma * jnp.sum(jnp.log1p(beta2 * EX), axis=-1)
+    short = jnp.maximum(d[None, :] - KX, 0.0)         # (S, m)
+    shortage = beta3 * jnp.sum(short**2, axis=-1)
+    f = base + consol + volume + shortage
+
+    g_consol = alpha * beta1 * jnp.einsum("sp,pn->sn", jnp.exp(-beta1 * EX), E)
+    g_volume = -gamma * beta2 * jnp.einsum(
+        "sp,pn->sn", 1.0 / (1.0 + beta2 * EX), E)
+    g_short = -2.0 * beta3 * jnp.einsum("sm,mn->sn", short, K)
+    grad = c[None, :] + g_consol + g_volume + g_short
+    return f, grad

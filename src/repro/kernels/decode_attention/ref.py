@@ -1,0 +1,24 @@
+"""Oracle for the decode-attention kernel: one query token per sequence
+against a (possibly partially-valid) KV cache.
+
+q (B, 1, H, dh); k/v caches (B, G, S, dh); valid (S,) bool -> (B, 1, H, dh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid):
+    B, _, H, dh = q.shape
+    G = k_cache.shape[1]
+    R = H // G
+    qr = q.reshape(B, G, R, dh)
+    s = jnp.einsum("bgrd,bgsd->bgrs", qr, k_cache).astype(jnp.float32)
+    s = s / jnp.sqrt(dh).astype(jnp.float32)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bgsd->bgrd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, dh)

@@ -1,0 +1,26 @@
+"""Oracle for the flash-attention kernel: full-score causal (+sliding window)
+GQA attention in pure jnp. q (B,S,H,dh), k/v (B,S,G,dh) -> (B,S,H,dh)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, window: int = 0):
+    B, S, H, dh = q.shape
+    G = k.shape[2]
+    R = H // G
+    qr = q.reshape(B, S, G, R, dh)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qr, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok = ok & (kpos > qpos - window)
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, dh)

@@ -1,0 +1,28 @@
+"""Oracle for the RWKV6 WKV kernel: naive sequential recurrence.
+
+r,k,v,w (B, S, H, hs); u (H, hs); s0 (B, H, hs, hs) ->
+  (y (B, S, H, hs), s_final (B, H, hs, hs))
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    B, S, H, hs = r.shape
+
+    def step(state, t):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], w[:, t]   # (B, H, hs)
+        bonus = jnp.einsum("bhc,bhc->bh", rt * u[None], kt)
+        y = (jnp.einsum("bhc,bhcd->bhd", rt, state)
+             + bonus[..., None] * vt)
+        state = wt[..., None] * state + jnp.einsum("bhc,bhd->bhcd", kt, vt)
+        return state, y
+
+    s_final, ys = jax.lax.scan(step, s0.astype(jnp.float32),
+                               jnp.arange(S))
+    return jnp.swapaxes(ys, 0, 1), s_final

@@ -1,0 +1,87 @@
+"""Assigned input shapes and abstract input specs (ShapeDtypeStruct — no
+allocation) for every (arch x shape) dry-run cell."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import init_caches
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+    long: bool = False
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1, long=True),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the cell runs; otherwise the documented skip reason."""
+    if shape.long and not cfg.sub_quadratic:
+        return ("long_500k requires sub-quadratic attention; "
+                f"{cfg.name} is pure full-attention (skip per assignment)")
+    return None
+
+
+def ruleset_name(shape: ShapeSpec) -> str:
+    if shape.kind == "train":
+        return "train"
+    if shape.kind == "prefill":
+        return "prefill"
+    return "long" if shape.long else "decode"
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract batch for the step function of this cell. For decode this
+    includes the KV/state caches (built via eval_shape — no allocation)."""
+    B, S = shape.batch, shape.seq
+    tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    if shape.kind == "train":
+        batch = {"tokens": tok((B, S)), "labels": tok((B, S))}
+        if cfg.frontend == "vision":
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_frontend), jnp.bfloat16)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": tok((B, S))}
+        if cfg.frontend == "vision":
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_frontend), jnp.bfloat16)
+        return {"batch": batch}
+    # decode: one new token against a seq-long cache
+    caches = jax.eval_shape(lambda: init_caches(cfg, B, S, jnp.bfloat16))
+    return {"caches": caches,
+            "tokens": tok((B, 1)),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeSpec):
+    """Logical axes for the abstract inputs above."""
+    if shape.kind == "train":
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if cfg.frontend == "vision":
+            axes["frontend_embeds"] = ("batch", None, "frontend")
+        return {"batch": axes}
+    if shape.kind == "prefill":
+        axes = {"tokens": ("batch", "seq")}
+        if cfg.frontend == "vision":
+            axes["frontend_embeds"] = ("batch", None, "frontend")
+        return {"batch": axes}
+    from repro.models.transformer import cache_axes
+    return {"caches": cache_axes(cfg),
+            "tokens": ("batch", None),
+            "pos": None}

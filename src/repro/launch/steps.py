@@ -1,0 +1,42 @@
+"""Step functions (train / prefill / decode) shared by the real launchers and
+the dry-run: one definition, jit-ed with explicit in/out shardings."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step as model_decode_step
+from repro.models import loss_fn, prefill as model_prefill
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    use_pallas: bool = False):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, use_pallas=use_pallas),
+            has_aux=True)(params)
+        new_params, new_state, om = adamw.update(opt_cfg, grads, opt_state, params)
+        return new_params, new_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int, use_pallas: bool = False):
+    def prefill_step(params, batch):
+        return model_prefill(cfg, params, batch, s_max=s_max,
+                             use_pallas=use_pallas)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, use_pallas: bool = False):
+    def serve_step(params, caches, tokens, pos):
+        return model_decode_step(cfg, params, caches, tokens, pos,
+                                 use_pallas=use_pallas)
+
+    return serve_step

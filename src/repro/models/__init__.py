@@ -1,0 +1,8 @@
+"""Model substrate: layers, attention (GQA/SWA), MoE, Mamba, RWKV6, and the
+scanned transformer assembly."""
+from .param import Boxed, split, prefix_axes
+from .transformer import (init_model, abstract_params, forward, loss_fn,
+                          prefill, decode_step, init_caches, cache_axes)
+from .attention import KVCache
+from .mamba import MambaCache
+from .rwkv import RWKVCache

@@ -1,0 +1,246 @@
+"""Grouped-query attention with RoPE, optional QKV bias, sliding window,
+and a paged-free decode path over a preallocated KV cache.
+
+The jnp path here is the reference; `repro.kernels.flash_attention` /
+`decode_attention` provide the Pallas TPU implementations (enabled with
+``use_pallas=True`` — numerically validated against this path in tests).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .layers import apply_rope, rope_tables
+from .param import dense_init, zeros_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype):
+    D, H, G, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H, dh), ("embed", "heads", None), dtype),
+        "wk": dense_init(ks[1], (D, G, dh), ("embed", "kv_heads", None), dtype),
+        "wv": dense_init(ks[2], (D, G, dh), ("embed", "kv_heads", None), dtype),
+        "wo": dense_init(ks[3], (H, dh, D), ("heads", None, "embed"), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((H, dh), ("heads", None), dtype)
+        p["bk"] = zeros_init((G, dh), ("kv_heads", None), dtype)
+        p["bv"] = zeros_init((G, dh), ("kv_heads", None), dtype)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, G, S_max, dh)
+    v: jnp.ndarray        # (B, G, S_max, dh)
+
+    @classmethod
+    def zeros(cls, batch, n_kv, s_max, d_head, dtype):
+        shape = (batch, n_kv, s_max, d_head)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    cos, sin = rope_tables(positions, cfg.d_head, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "act_heads", None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,S,H,dh), k/v (B,T,G,dh), mask (B|1,1,S,T) additive."""
+    B, S, H, dh = q.shape
+    G = k.shape[2]
+    q = q.reshape(B, S, G, H // G, dh)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    scores = scores + mask[:, None, :, :, :] if mask.ndim == 4 else scores + mask
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, dh)
+
+
+Q_CHUNK, KV_CHUNK = 512, 1024
+
+
+def _chunked_flash(q, k, v, window: int, q_chunk=None, kv_chunk=None,
+                   unroll: bool = False, probs_bf16: bool = False):
+    """Pure-JAX flash attention (online softmax over KV chunks, scan over Q
+    chunks). Memory: O(B * q_chunk * H * kv_chunk) instead of O(B*H*S^2) —
+    both scan bodies are jax.checkpoint-ed, so the O(S^2) score blocks are
+    recomputed in the backward instead of being saved as scan residuals.
+    Causal + optional sliding window, applied via masking (the Pallas kernel
+    additionally skips fully-masked blocks)."""
+    B, S, H, dh = q.shape
+    T, G = k.shape[1], k.shape[2]
+    qc = min(q_chunk or Q_CHUNK, S)
+    kc = min(kv_chunk or KV_CHUNK, T)
+    assert S % qc == 0 and T % kc == 0, (S, qc, T, kc)
+    R = H // G
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    q = q.reshape(B, S // qc, qc, G, R, dh)
+    k = k.reshape(B, T // kc, kc, G, dh)
+    v = v.reshape(B, T // kc, kc, G, dh)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                      # (B, qc, G, R, dh), scalar chunk id
+        q0 = qidx * qc
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk, vblk, kidx = kj            # (B, kc, G, dh)
+            k0 = kidx * kc
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk).astype(jnp.float32)
+            s = s * scale
+            qpos = q0 + jnp.arange(qc)[:, None]
+            kpos = k0 + jnp.arange(kc)[None, :]
+            ok = kpos <= qpos
+            if window > 0:
+                ok &= kpos > qpos - window
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            if probs_bf16:
+                # perf lever: post-max-subtraction weights are in [0, 1] —
+                # bf16 is safe here and halves the score-chain bytes
+                p = p.astype(jnp.bfloat16)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, G, R, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, R, qc), jnp.float32)
+        a0 = jnp.zeros((B, G, R, qc, dh), v.dtype)
+        kv_idx = jnp.arange(T // kc)
+        body = kv_step if unroll else jax.checkpoint(kv_step)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.swapaxes(k, 0, 1), jnp.swapaxes(v, 0, 1), kv_idx),
+            unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return None, out                      # (B, G, R, qc, dh)
+
+    q_idx = jnp.arange(S // qc)
+    q_body = q_step if unroll else jax.checkpoint(q_step)
+    _, outs = jax.lax.scan(q_body, None, (jnp.swapaxes(q, 0, 1), q_idx),
+                           unroll=unroll)
+    # outs: (S//qc, B, G, R, qc, dh) -> (B, S, H, dh)
+    outs = jnp.moveaxis(outs, 0, 1)                       # (B, S//qc, G, R, qc, dh)
+    outs = jnp.transpose(outs, (0, 1, 4, 2, 3, 5)).reshape(B, S, G * R, dh)
+    return outs
+
+
+def causal_mask(S: int, T: int, offset: int, window: int) -> jnp.ndarray:
+    """(1, 1, S, T) additive mask. offset = index of query 0 within keys."""
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF)[None, None].astype(jnp.float32)
+
+
+def _attend_full(q, k, v, cfg, use_pallas: bool):
+    S = q.shape[1]
+    if use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, window=cfg.window)
+    if S > 1024:
+        return _chunked_flash(q, k, v, cfg.window,
+                              q_chunk=cfg.attn_q_chunk or None,
+                              kv_chunk=cfg.attn_kv_chunk or None,
+                              unroll=getattr(cfg, "unroll_inner", False),
+                              probs_bf16=getattr(cfg, "attn_probs_bf16", False))
+    return _sdpa(q, k, v, causal_mask(S, S, 0, cfg.window))
+
+
+def attention(p, cfg, x, positions, *, use_pallas: bool = False):
+    """Full-sequence (train / prefill) path. x (B, S, D)."""
+    B, S, D = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = _attend_full(q, k, v, cfg, use_pallas)
+    out = constrain(out, "batch", "seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(y, "batch", "seq", "act_embed")
+
+
+def prefill_attention(p, cfg, x, positions, cache: KVCache,
+                      *, use_pallas: bool = False):
+    """Prefill: run full attention AND write k/v into the cache (which may be
+    longer than S; ring-buffered when cfg.window > 0 and cache is smaller)."""
+    B, S, D = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = _attend_full(q, k, v, cfg, use_pallas)
+    s_max = cache.k.shape[2]
+    kc = jnp.swapaxes(k, 1, 2)     # (B, G, S, dh)
+    vc = jnp.swapaxes(v, 1, 2)
+    if s_max < S:                  # sliding-window ring buffer
+        assert cfg.window > 0 and s_max >= cfg.window
+        tail = s_max
+        kc, vc = kc[:, :, -tail:], vc[:, :, -tail:]
+        # ring layout: slot = position % s_max
+        pos_tail = positions[-tail:] % s_max
+        new_k = cache.k.at[:, :, pos_tail].set(kc)
+        new_v = cache.v.at[:, :, pos_tail].set(vc)
+    else:
+        new_k = jax.lax.dynamic_update_slice(cache.k, kc, (0, 0, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(cache.v, vc, (0, 0, 0, 0))
+    new_k = constrain(new_k, "batch", "kv_heads", "kv_seq", None)
+    new_v = constrain(new_v, "batch", "kv_heads", "kv_seq", None)
+    out = constrain(out, "batch", "seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(y, "batch", "seq", "act_embed"), KVCache(new_k, new_v)
+
+
+def decode_attention_step(p, cfg, x, pos, cache: KVCache,
+                          *, use_pallas: bool = False):
+    """Single-token decode. x (B, 1, D); pos scalar int32 (same for batch).
+    Cache is (B, G, S_max, dh); ring-buffered iff cfg.window > 0 and
+    S_max == window size."""
+    B, S, D = x.shape
+    assert S == 1
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = _qkv(p, cfg, x, positions.reshape(1))
+    s_max = cache.k.shape[2]
+    ring = cfg.window > 0 and s_max <= cfg.window
+    slot = jnp.where(jnp.asarray(ring), pos % s_max, pos)
+    kc = jnp.swapaxes(k, 1, 2)    # (B, G, 1, dh)
+    vc = jnp.swapaxes(v, 1, 2)
+    new_k = jax.lax.dynamic_update_slice(cache.k, kc, (0, 0, slot, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, vc, (0, 0, slot, 0))
+    new_k = constrain(new_k, "batch", "kv_heads", "kv_seq", None)
+    new_v = constrain(new_v, "batch", "kv_heads", "kv_seq", None)
+
+    kpos = jnp.arange(s_max)
+    if ring:
+        valid = jnp.where(pos >= s_max - 1, jnp.ones_like(kpos, bool),
+                          kpos <= pos % s_max)
+    else:
+        valid = kpos <= pos
+        if cfg.window > 0:
+            valid &= kpos > pos - cfg.window
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, :].astype(jnp.float32)
+
+    if use_pallas:
+        from repro.kernels.decode_attention.ops import decode_attention
+        out = decode_attention(q, new_k, new_v, valid)
+    else:
+        kk = jnp.swapaxes(new_k, 1, 2)    # (B, S_max, G, dh)
+        vv = jnp.swapaxes(new_v, 1, 2)
+        out = _sdpa(q, kk, vv, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(y, "batch", "seq", "act_embed"), KVCache(new_k, new_v)

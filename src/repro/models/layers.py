@@ -1,0 +1,156 @@
+"""Shared layers: norms, rotary embeddings, embedding/unembedding, FFNs."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .param import Boxed, dense_init, ones_init, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype):
+    return {"scale": ones_init((d,), ("act_embed",), dtype)}
+
+
+def rmsnorm(p, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jnp.ndarray, d_head: int, theta: float):
+    """positions (...,) int32 -> cos/sin (..., d_head//2) in f32."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (B, S, H, D); cos/sin (S, D/2) (or (B, S, D/2)), broadcast over
+    batch and heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos, sin = cos[..., None, :], sin[..., None, :]    # head axis
+    while cos.ndim < x.ndim:                           # leading batch axes
+        cos, sin = cos[None], sin[None]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d, dtype):
+    return {"table": dense_init(key, (vocab, d), ("vocab", "embed"), dtype,
+                                scale=1.0)}
+
+
+@jax.custom_vjp
+def embed_lookup(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def _embed_fwd(table, tokens):
+    # residual carries a zero-width view of the table: shape+dtype metadata
+    # as a valid JAX type (static python objects can't be residual leaves)
+    return embed_lookup(table, tokens), (tokens, table[:, :0])
+
+
+def _embed_bwd(res, g):
+    """dTable via CHUNKED one-hot matmuls instead of a scatter-add: GSPMD
+    cannot shard a dynamic-index scatter over the vocab dim and materializes
+    the full (B*S, D) f32 update tensor GLOBALLY (64GiB-class buffers on the
+    big-vocab archs). The one-hot dot contracts the (data-sharded) token dims
+    into (vocab, d_model)-sharded partials instead."""
+    tokens, table_meta = res
+    V, dtype = table_meta.shape[0], table_meta.dtype
+    B, S = tokens.shape
+    D = g.shape[-1]
+    chunk = S
+    for c in (512, 256, 128, 64):
+        if S % c == 0:
+            chunk = c
+            break
+    tok_c = tokens.reshape(B, S // chunk, chunk).swapaxes(0, 1)
+    g_c = g.reshape(B, S // chunk, chunk, D).swapaxes(0, 1)
+
+    def step(acc, args):
+        tk, gk = args                                  # (B, c), (B, c, D)
+        oh = jax.nn.one_hot(tk, V, dtype=gk.dtype)     # (B, c, V)
+        oh = constrain(oh, "batch", None, "vocab")
+        part = jnp.einsum("bcv,bcd->vd", oh, gk,
+                          preferred_element_type=jnp.float32)
+        return acc + constrain(part, "vocab", "embed"), None
+
+    acc0 = constrain(jnp.zeros((V, D), jnp.float32), "vocab", "embed")
+    dtable, _ = jax.lax.scan(step, acc0, (tok_c, g_c))
+    return dtable.astype(dtype), None
+
+
+embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+def embed(p, tokens):
+    out = embed_lookup(p["table"], tokens)
+    return constrain(out, "batch", "seq", "act_embed")
+
+
+def unembed(p, x):
+    """x (B, S, D) -> logits (B, S, V)."""
+    logits = jnp.einsum("bsd,vd->bsv", x, p["table"])
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN variants
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, cfg, d_ff: int, dtype):
+    D = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.activation in ("swiglu", "geglu")
+    p = {"w_up": dense_init(k1, (D, d_ff), ("embed", "mlp"), dtype),
+         "w_down": dense_init(k2, (d_ff, D), ("mlp", "embed"), dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k3, (D, d_ff), ("embed", "mlp"), dtype)
+    return p
+
+
+def _act(name: str, x):
+    if name == "swiglu" or name == "silu":
+        return jax.nn.silu(x)
+    if name == "geglu" or name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "sqrelu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def ffn(p, cfg, x):
+    """x (B, S, D) -> (B, S, D)."""
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    up = constrain(up, "batch", "seq", "mlp")
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = _act(cfg.activation, gate) * up
+    else:
+        h = _act(cfg.activation, up)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return constrain(out, "batch", "seq", "act_embed")

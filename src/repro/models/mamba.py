@@ -1,0 +1,156 @@
+"""Mamba (S6) block for the Jamba hybrid — selective state-space model with
+chunked scan (bounded memory: the (B, chunk, d_inner, d_state) intermediate
+replaces the full (B, S, d_inner, d_state) tensor).
+
+Decode carries (conv_state (B, d_conv-1, d_inner), ssm_state (B, d_inner, N)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .param import Boxed, const_init, dense_init, ones_init, zeros_init
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv-1, d_inner)
+    ssm: jnp.ndarray    # (B, d_inner, N)
+
+    @classmethod
+    def zeros(cls, batch, cfg, dtype):
+        di, N, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+        return cls(jnp.zeros((batch, dc - 1, di), dtype),
+                   jnp.zeros((batch, di, N), jnp.float32))
+
+
+def init_mamba(key, cfg, dtype):
+    D, di, N, dc = (cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state,
+                    cfg.mamba_d_conv)
+    dt_rank = max(1, D // 16)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * di), ("embed", "mamba_inner"), dtype),
+        "conv_w": dense_init(ks[1], (dc, di), (None, "mamba_inner"), dtype, scale=0.5),
+        "conv_b": zeros_init((di,), ("mamba_inner",), dtype),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * N), ("mamba_inner", None), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), (None, "mamba_inner"), dtype),
+        "dt_bias": const_init(jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                                jnp.log(1e-3), jnp.log(1e-1))),
+                     1e-4, None))).astype(jnp.float32), ("mamba_inner",)),
+        "A_log": const_init(jnp.log(A), ("mamba_inner", None)),
+        "D": ones_init((di,), ("mamba_inner",), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, D), ("mamba_inner", "embed"), dtype),
+    }
+
+
+def _ssm_chunked_scan(u, dt, B_, C_, A, D, chunk: int, init_state=None,
+                      unroll: bool = False, scan_bf16: bool = False):
+    """u/dt (B, S, di); B_/C_ (B, S, N); A (di, N); D (di,).
+    Returns (y (B, S, di), final_state (B, di, N))."""
+    Bb, S, di = u.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # identity padding: dt=0 -> dA=1 (no decay), dBu=0 (no injection)
+        z2 = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        u, dt, B_, C_ = z2(u), z2(dt), z2(B_), z2(C_)
+    nc = (S + pad) // chunk
+
+    # reshape to chunks
+    u_c = u.reshape(Bb, nc, chunk, di)
+    dt_c = dt.reshape(Bb, nc, chunk, di)
+    B_c = B_.reshape(Bb, nc, chunk, N)
+    C_c = C_.reshape(Bb, nc, chunk, N)
+
+    def chunk_step(state, args):
+        uc, dtc, Bc, Cc = args                                  # (B, chunk, ...)
+        # discretize within chunk
+        dA_c = jnp.exp(dtc[..., None] * (-A)[None, None])       # (B, c, di, N)
+        dBu = (dtc * uc)[..., None] * Bc[:, :, None, :]         # (B, c, di, N)
+        if scan_bf16:
+            # perf lever: dA in [0,1], dBu bounded — bf16 halves the scan's
+            # (B, c, di, N) traffic; the carried state stays f32.
+            dA_c = dA_c.astype(jnp.bfloat16)
+            dBu = dBu.astype(jnp.bfloat16)
+        # h_t = dA_t h_{t-1} + dBu_t  — associative scan over the chunk
+        # (pairwise composition keeps every factor <= 1: no overflow).
+        def compose(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        At, Bt = jax.lax.associative_scan(compose, (dA_c, dBu), axis=1)
+        h = (At.astype(jnp.float32) * state[:, None]
+             + Bt.astype(jnp.float32))                          # (B, c, di, N)
+        y = jnp.einsum("bcdn,bcn->bcd", h, Cc)
+        new_state = h[:, -1]
+        return new_state, y
+
+    state0 = (jnp.zeros((Bb, di, N), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+    args = (jnp.swapaxes(u_c, 0, 1), jnp.swapaxes(dt_c, 0, 1),
+            jnp.swapaxes(B_c, 0, 1), jnp.swapaxes(C_c, 0, 1))
+    # checkpoint the chunk body: associative_scan saves per-level residuals
+    # ((B, chunk, di, N) x log2(chunk)) otherwise — recompute them in bwd.
+    body = chunk_step if unroll else jax.checkpoint(chunk_step)
+    final, ys = jax.lax.scan(body, state0, args, unroll=unroll)
+    y = jnp.swapaxes(ys, 0, 1).reshape(Bb, nc * chunk, di)[:, :S]
+    return y + u[:, :S] * D[None, None], final
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """x (B, S, di); w (dc, di) depthwise causal; returns (y, new_state)."""
+    Bb, S, di = x.shape
+    dc = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((Bb, dc - 1, di), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                      # (B, S+dc-1, di)
+    y = sum(xp[:, i:i + S] * w[i][None, None] for i in range(dc)) + b
+    return y, xp[:, -(dc - 1):] if dc > 1 else jnp.zeros((Bb, 0, di), x.dtype)
+
+
+def mamba_block(p, cfg, x, cache: MambaCache = None):
+    """x (B, S, D) -> (y (B, S, D), new_cache)."""
+    Bb, S, D = x.shape
+    di, N = cfg.mamba_d_inner, cfg.mamba_d_state
+    dt_rank = p["dt_proj"].shape[0]
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "batch", "seq", "mamba_inner")
+
+    conv_in = cache.conv if cache is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_in)
+    xs = jax.nn.silu(xs)
+
+    proj = jnp.einsum("bsd,dr->bsr", xs, p["x_proj"])
+    dt_lo, B_, C_ = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_lo, p["dt_proj"])
+                         + p["dt_bias"][None, None]).astype(jnp.float32)
+
+    A = jnp.exp(p["A_log"])                                     # (di, N) > 0
+    chunk = cfg.scan_chunk or min(256, S)
+    init_state = cache.ssm if cache is not None else None
+    y, final_state = _ssm_chunked_scan(
+        xs.astype(jnp.float32), dt, B_.astype(jnp.float32),
+        C_.astype(jnp.float32), A, p["D"], chunk, init_state,
+        unroll=cfg.unroll_inner,
+        scan_bf16=getattr(cfg, "ssm_scan_bf16", False))
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    out = constrain(out, "batch", "seq", "act_embed")
+    new_cache = MambaCache(conv=new_conv, ssm=final_state)
+    return out, new_cache
+
+
+def mamba_decode_step(p, cfg, x, cache: MambaCache):
+    """Single-token decode: O(1) state update. x (B, 1, D)."""
+    return mamba_block(p, cfg, x, cache)

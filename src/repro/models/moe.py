@@ -1,0 +1,124 @@
+"""Mixture-of-experts FFN — Switch/GShard-style scatter dispatch with
+capacity, top-k routing, optional shared experts, and the load-balancing
+auxiliary loss. Expert dim carries the "expert" logical axis (EP over the
+model mesh axis); with tokens sharded over data, XLA inserts the all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .layers import _act, init_ffn
+from .param import dense_init
+
+
+def init_moe(key, cfg, dtype):
+    D, E = cfg.d_model, cfg.n_experts
+    F = cfg.effective_moe_d_ff
+    ks = jax.random.split(key, 5)
+    gated = cfg.activation in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], (D, E), ("embed", None), dtype, scale=0.02),
+        "w_up": dense_init(ks[1], (E, D, F), ("expert", "embed", "mlp"), dtype),
+        "w_down": dense_init(ks[2], (E, F, D), ("expert", "mlp", "embed"), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[3], (E, D, F), ("expert", "embed", "mlp"), dtype)
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(ks[4], cfg, F * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe_ffn(p, cfg, x, no_drop: bool = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    ROW-GROUPED dispatch (GShard/t5x style): routing positions and capacity
+    are computed independently PER BATCH ROW, so the dispatch tensor is
+    (B, E, C_row, D) with B sharded over data and E over model — expert
+    compute stays sharded on BOTH mesh axes. (A flat global-capacity
+    dispatch collapses the data-sharded token dim into an unsharded
+    capacity dim and silently replicates the expert FFN per data shard —
+    16x the compute at mesh data=16.)
+
+    Capacity: with ``no_drop``, C_row = S*K (worst case — exact routing,
+    used for decode and small batches where a dropped token corrupts
+    generation); otherwise the Switch capacity-factor bound.
+    Default: no_drop whenever B*S*K <= 4096 (decode/smoke scale)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    if no_drop is None:
+        no_drop = B * S * K <= 4096
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B, S, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing aux loss (Switch eq. 4-6) --------------------------
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    assign1 = jax.nn.one_hot(expert_idx[..., 0], E)
+    ce = jnp.mean(assign1, axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- per-row capacity-bounded scatter dispatch -------------------------
+    A = S * K                                                  # assignments/row
+    C = A if no_drop else max(1, int(A * cfg.capacity_factor / E))
+    flat_e = expert_idx.reshape(B, A)                          # (B, A)
+    flat_g = gate_vals.reshape(B, A)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (B, A, E)
+    # segmented cumsum: a flat cumsum along A runs along the (possibly
+    # model-sharded) sequence axis and would force an all-gather of the
+    # (B, A, E) one-hot; segmenting makes the long cumsum local and the
+    # cross-segment offset pass tiny ((B, nseg, E)).
+    nseg = 16 if A % 16 == 0 else 1
+    oh = onehot.reshape(B, nseg, A // nseg, E)
+    within = jnp.cumsum(oh, axis=2)                            # local
+    seg_tot = within[:, :, -1, :]                              # (B, nseg, E)
+    offs = jnp.cumsum(seg_tot, axis=1) - seg_tot               # exclusive
+    pos = (within + offs[:, :, None, :]).reshape(B, A, E) - 1
+    slot = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = slot < C
+    slot = jnp.where(keep, slot, 0)
+    gate = jnp.where(keep, flat_g, 0.0)                        # (B, A)
+
+    # token replication for the K assignments is STATIC (repeat), never a
+    # dynamic gather along the (sharded) sequence dim — a take_along_axis
+    # here makes GSPMD replicate the full residual stream across the mesh.
+    # Dispatch/combine address a FLATTENED (E*C) axis with one batched index
+    # array: GSPMD keeps the batch dim sharded for this rank-1 batched
+    # scatter/gather form, whereas the multi-index [row, e, slot] form was
+    # observed to materialize (B*A, D) f32 buffers GLOBALLY (64 GiB-class).
+    row = jnp.arange(B)[:, None]                                   # (B, 1)
+    xtok = jnp.repeat(x, K, axis=1)                                # (B, A, D)
+    idx = flat_e * C + slot                                        # (B, A)
+    disp_flat = jnp.zeros((B, E * C, D), x.dtype)
+    disp_flat = disp_flat.at[row, idx].add(
+        xtok * keep[..., None].astype(x.dtype), mode="drop")
+    disp = constrain(disp_flat.reshape(B, E, C, D),
+                     "batch", "expert", None, "act_embed")
+
+    # ---- expert FFN (grouped einsum; sharded over batch AND expert) --------
+    up = jnp.einsum("becd,edf->becf", disp, p["w_up"])
+    if "w_gate" in p:
+        g = jnp.einsum("becd,edf->becf", disp, p["w_gate"])
+        h = _act(cfg.activation, g) * up
+    else:
+        h = _act(cfg.activation, up)
+    y_e = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    y_e = constrain(y_e, "batch", "expert", None, "act_embed")
+
+    # ---- combine (static: assignments are token-major, so the per-token
+    # ---- reduction over K is a reshape+sum, not a scatter) ------------------
+    y_flat = y_e.reshape(B, E * C, D)
+    gathered = jnp.take_along_axis(y_flat, idx[..., None], axis=1)  # (B, A, D)
+    contrib = gathered * gate[..., None].astype(x.dtype)
+    out = contrib.reshape(B, S, K, D).sum(axis=2)
+
+    if "shared" in p:
+        from .layers import ffn
+        out = out + ffn(p["shared"], cfg, x)
+    return constrain(out, "batch", "seq", "act_embed"), aux.astype(jnp.float32)

@@ -1,0 +1,77 @@
+"""Parameter trees with logical sharding axes.
+
+``Boxed(value, axes)`` is a registered pytree node whose AXES ARE STATIC
+(aux data): jax transformations (vmap, eval_shape, jit) flow through the
+value while the logical axes ride along untouched. ``split(tree)`` separates
+a Boxed tree into (values, axes) trees of identical structure — one source of
+truth, shapes and shardings can never drift apart. ``jax.eval_shape`` over an
+init function therefore yields abstract params WITH their axes — that is the
+dry-run path (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Boxed:
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[Optional[str], ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Boxed({self.value!r}, axes={self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    Boxed,
+    lambda b: ((b.value,), b.axes),
+    lambda axes, children: Boxed(children[0], axes),
+)
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def _map_boxed(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_boxed)
+
+
+def split(tree):
+    """(values, axes) trees with identical structure (Boxed nodes removed)."""
+    values = _map_boxed(lambda b: b.value if is_boxed(b) else b, tree)
+    axes = _map_boxed(lambda b: b.axes if is_boxed(b) else None, tree)
+    return values, axes
+
+
+def prefix_axes(tree, axis: str):
+    """Prepend a logical axis to every Boxed leaf (e.g. the stacked "layers"
+    dim created by vmapping an init)."""
+    return _map_boxed(
+        lambda b: Boxed(b.value, (axis,) + b.axes) if is_boxed(b) else b, tree)
+
+
+def dense_init(key, shape, axes, dtype, scale: Optional[float] = None) -> Boxed:
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(fan_in)
+    v = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return Boxed(v.astype(dtype), axes)
+
+
+def zeros_init(shape, axes, dtype) -> Boxed:
+    return Boxed(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype) -> Boxed:
+    return Boxed(jnp.ones(shape, dtype), axes)
+
+
+def const_init(value, axes) -> Boxed:
+    return Boxed(value, axes)

@@ -1,0 +1,194 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Per head h (size hs): state S in R^{hs x hs}, per-token decay w_t in (0,1)^hs:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Training/prefill uses the chunked GLA-style closed form (intra-chunk
+attention-like matrix with relative decays + inter-chunk state carry);
+decode is the O(1) recurrence. ``repro.kernels.rwkv6_scan`` is the Pallas
+version of the chunk kernel; this module is its jnp oracle.
+
+Data-dependent pieces (faithful to RWKV6): five token-shift lerps with
+learned mixes; the decay w_t additionally gets a low-rank (LoRA) data path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .param import const_init, dense_init, ones_init, zeros_init
+
+
+class RWKVCache(NamedTuple):
+    shift_tm: jnp.ndarray   # (B, D)  last token for time-mix shift
+    shift_cm: jnp.ndarray   # (B, D)  last token for channel-mix shift
+    wkv: jnp.ndarray        # (B, H, hs, hs) state (f32)
+
+    @classmethod
+    def zeros(cls, batch, cfg, dtype):
+        H, hs = cfg.n_rwkv_heads, cfg.rwkv_head_size
+        return cls(jnp.zeros((batch, cfg.d_model), dtype),
+                   jnp.zeros((batch, cfg.d_model), dtype),
+                   jnp.zeros((batch, H, hs, hs), jnp.float32))
+
+
+def init_rwkv_time_mix(key, cfg, dtype):
+    D, H, hs, r = (cfg.d_model, cfg.n_rwkv_heads, cfg.rwkv_head_size,
+                   cfg.rwkv_lora_rank)
+    ks = jax.random.split(key, 9)
+    return {
+        "mix": const_init(0.5 * jnp.ones((5, D), jnp.float32), (None, "act_embed")),
+        "w_base": const_init(-6.0 * jnp.ones((D,), jnp.float32) , ("act_embed",)),
+        "w_lora_a": dense_init(ks[0], (D, r), ("embed", None), dtype, scale=0.01),
+        "w_lora_b": dense_init(ks[1], (r, D), (None, "embed"), dtype, scale=0.01),
+        "wr": dense_init(ks[2], (D, D), ("embed", "mlp"), dtype),
+        "wk": dense_init(ks[3], (D, D), ("embed", "mlp"), dtype),
+        "wv": dense_init(ks[4], (D, D), ("embed", "mlp"), dtype),
+        "wg": dense_init(ks[5], (D, D), ("embed", "mlp"), dtype),
+        "u": const_init(jnp.zeros((H, hs), jnp.float32), ("rwkv_heads", None)),
+        "wo": dense_init(ks[6], (D, D), ("mlp", "embed"), dtype),
+        "ln_x": ones_init((D,), ("act_embed",), jnp.float32),
+    }
+
+
+def init_rwkv_channel_mix(key, cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix": const_init(0.5 * jnp.ones((2, D), jnp.float32), (None, "act_embed")),
+        "wk": dense_init(ks[0], (D, F), ("embed", "mlp"), dtype),
+        "wv": dense_init(ks[1], (F, D), ("mlp", "embed"), dtype),
+        "wr": dense_init(ks[2], (D, D), ("embed", "act_embed"), dtype),
+    }
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; shifted[0] = last (carried state). x (B,S,D)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int, unroll: bool = False):
+    """r,k,v (B,S,H,hs); w (B,S,H,hs) decay in (0,1); u (H,hs); state
+    (B,H,hs,hs). Returns (y (B,S,H,hs), final_state). Chunked closed form:
+
+      y_t = r_t diag(W_{t-1}) S_0   (inter-chunk)
+          + sum_{i<t} (r_t * W_{t-1}/W_i) . k_i  v_i    (intra, strict lower)
+          + (r_t . u . k_t) v_t                         (bonus diagonal)
+    where W_t = prod_{j<=t} w_j within the chunk (W_0 = w_1? see below: we
+    use W at t-1 = product of w_1..w_{t-1}, consistent with S_{t-1}).
+    """
+    B, S, H, hs = r.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # identity padding: k=0 adds nothing to the state, w=1 leaves it
+        # undecayed; outputs for the padded tail are sliced off below.
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    S_pad = S + pad
+    nc = S_pad // chunk
+    rc = r.reshape(B, nc, chunk, H, hs)
+    kc = k.reshape(B, nc, chunk, H, hs)
+    vc = v.reshape(B, nc, chunk, H, hs)
+    wc = w.reshape(B, nc, chunk, H, hs)
+    del S_pad
+
+    def step(S0, args):
+        rr, kk, vv, ww = args                 # (B, c, H, hs)
+        logw = jnp.log(ww)                    # < 0
+        cum = jnp.cumsum(logw, axis=1)        # log W_t (prod up to and incl t)
+        Wm1 = jnp.exp(cum - logw)             # W_{t-1} (excl. current)
+        r_dec = rr * Wm1                      # (B, c, H, hs)
+        # intra-chunk relative decays: exp(cum_{t-1} - cum_i) applied r-side
+        # (r * W_{t-1}) . (k / W_i): ratio <= 1 for i < t keeps stability
+        # bounded as long as chunk is short (k / W_i can grow; clamp cum).
+        k_dec = kk * jnp.exp(-jnp.clip(cum, -60.0, 0.0))
+        att = jnp.einsum("bthc,bihc->bhti", r_dec, k_dec)      # (B, H, c, c)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        bonus = jnp.einsum("bthc,bthc->bth", rr * u[None, None], kk)
+        y = jnp.einsum("bhti,bihc->bthc", att, vv)
+        y = y + bonus[..., None] * vv
+        y = y + jnp.einsum("bthc,bhcd->bthd", r_dec, S0)
+        # state update: S_end = diag(W_c) S0 + sum_i diag(W_c/W_i) k_i v_i^T
+        Wc = jnp.exp(cum[:, -1])                                # (B, H, hs)
+        # decay from i to chunk end: exp(cum_end - cum_i) <= 1 (stable)
+        k_tail = kk * jnp.exp(cum[:, -1][:, None] - cum)
+        S_new = Wc[..., None] * S0 + jnp.einsum("bihc,bihd->bhcd", k_tail, vv)
+        return S_new, y
+
+    args = tuple(jnp.swapaxes(a, 0, 1) for a in (rc, kc, vc, wc))
+    state = state.astype(jnp.float32)
+    # checkpoint the chunk body: the (B, H, c, c) intra-chunk attention-like
+    # matrix is recomputed in bwd instead of living as a scan residual.
+    body = step if unroll else jax.checkpoint(step)
+    final, ys = jax.lax.scan(body, state, args, unroll=unroll)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, nc * chunk, H, hs)[:, :S]
+    return y, final
+
+
+def rwkv_time_mix(p, cfg, x, cache: RWKVCache):
+    """x (B, S, D) -> (y, new_cache). cache.shift_tm/wkv used & updated."""
+    B, S, D = x.shape
+    H, hs = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    last = cache.shift_tm if cache is not None else jnp.zeros((B, D), x.dtype)
+    xprev = _token_shift(x, last)
+    xx = xprev - x
+    mixed = (x[:, :, None, :]
+             + xx[:, :, None, :] * p["mix"][None, None]).astype(x.dtype)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]  # (B,S,D) each
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, hs)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, hs)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, hs)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+
+    # data-dependent decay (the "Finch" contribution): base + low-rank path
+    dw = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw), p["w_lora_a"])
+    dw = jnp.einsum("bsr,rd->bsd", dw, p["w_lora_b"])
+    w = jnp.exp(-jnp.exp((p["w_base"][None, None] + dw).astype(jnp.float32)))
+    w = w.reshape(B, S, H, hs)
+
+    state = cache.wkv if cache is not None else jnp.zeros((B, H, hs, hs), jnp.float32)
+    chunk = cfg.scan_chunk or min(64, S)
+    y, new_state = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), w,
+                                p["u"], state, chunk,
+                                unroll=cfg.unroll_inner)
+    y = y.reshape(B, S, D).astype(x.dtype)
+    # group norm over heads (ln_x), then gate and output proj
+    y = y.reshape(B, S, H, hs)
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = ((y - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, D)
+    y = y * p["ln_x"][None, None]
+    y = (y * g).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"])
+    out = constrain(out, "batch", "seq", "act_embed")
+    new_cache = RWKVCache(shift_tm=x[:, -1, :],
+                          shift_cm=(cache.shift_cm if cache is not None
+                                    else jnp.zeros((B, D), x.dtype)),
+                          wkv=new_state)
+    return out, new_cache
+
+
+def rwkv_channel_mix(p, cfg, x, cache: RWKVCache):
+    B, S, D = x.shape
+    last = cache.shift_cm if cache is not None else jnp.zeros((B, D), x.dtype)
+    xprev = _token_shift(x, last)
+    xx = xprev - x
+    xk = (x + xx * p["mix"][0][None, None]).astype(x.dtype)
+    xr = (x + xx * p["mix"][1][None, None]).astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * kv
+    out = constrain(out.astype(x.dtype), "batch", "seq", "act_embed")
+    new_cache = cache._replace(shift_cm=x[:, -1, :]) if cache is not None else None
+    return out, new_cache

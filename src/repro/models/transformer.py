@@ -1,0 +1,332 @@
+"""Model assembly: embedding -> scanned layer groups -> final norm -> logits.
+
+Layers are grouped into the config's repeating pattern unit (period) and the
+group is ``lax.scan``-ned with stacked parameters — compiled HLO size is
+depth-independent (critical for the 80-cell dry-run matrix on one CPU core).
+
+Three entry points: ``forward`` (train/teacher-forcing), ``prefill`` (forward
++ KV/state cache build), ``decode_step`` (one token, O(1) or O(window)/O(S)
+per arch family).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from .attention import KVCache
+from .layers import (embed, ffn, init_embedding, init_ffn, init_rmsnorm,
+                     rmsnorm, unembed)
+from .mamba import MambaCache
+from .param import Boxed, dense_init, prefix_axes, split
+from .rwkv import RWKVCache
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str, dtype):
+    if kind == "attn":
+        return attn_mod.init_attention(key, cfg, dtype)
+    if kind == "mamba":
+        return mamba_mod.init_mamba(key, cfg, dtype)
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_time_mix(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _init_ffn(key, cfg: ModelConfig, kind: str, dtype):
+    if kind == "dense":
+        return init_ffn(key, cfg, cfg.d_ff, dtype)
+    if kind == "moe":
+        return moe_mod.init_moe(key, cfg, dtype)
+    if kind == "rwkv_cm":
+        return rwkv_mod.init_rwkv_channel_mix(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _init_group(key, cfg: ModelConfig, dtype):
+    """One repeat unit: list of (norm1, mix, norm2, ffn) dicts."""
+    blocks = []
+    for i, (blk, fk) in enumerate(cfg.blocks_in_group):
+        k1, k2, key = jax.random.split(key, 3)
+        blocks.append({
+            "norm1": init_rmsnorm(cfg.d_model, dtype),
+            "mix": _init_block(k1, cfg, blk, dtype),
+            "norm2": init_rmsnorm(cfg.d_model, dtype),
+            "ffn": _init_ffn(k2, cfg, fk, dtype),
+        })
+    return blocks
+
+
+def init_model(cfg: ModelConfig, key) -> Any:
+    """Returns a Boxed(value, logical_axes) pytree. Use param.split()."""
+    dtype = _dtype(cfg.param_dtype)
+    k_emb, k_groups, k_front, k_unemb = jax.random.split(key, 4)
+    params = {"embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype)}
+
+    group_keys = jax.random.split(k_groups, cfg.n_groups)
+    # vmap the group init to produce stacked [n_groups, ...] leaves; the
+    # Boxed axes (static aux data) gain a leading "layers" axis.
+    one = functools.partial(_init_group, cfg=cfg, dtype=dtype)
+    params["groups"] = prefix_axes(jax.vmap(lambda k: one(k))(group_keys),
+                                   "layers")
+
+    params["final_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(k_unemb, cfg.vocab_size,
+                                           cfg.d_model, dtype)
+    if cfg.frontend == "vision":
+        params["frontend_proj"] = dense_init(
+            k_front, (cfg.d_frontend, cfg.d_model), ("frontend", "embed"), dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct values, logical axes) — NO allocation (dry-run path).
+    Boxed axes are static pytree aux data, so eval_shape preserves them."""
+    boxed = jax.eval_shape(
+        lambda k: init_model(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return split(boxed)
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int, dtype=None):
+    """Stacked (n_groups leading dim) cache pytree. s_max is the KV capacity;
+    sliding-window archs get min(s_max, window) ring buffers."""
+    dtype = dtype or _dtype(cfg.dtype)
+
+    def one_group():
+        caches = []
+        for (blk, fk) in cfg.blocks_in_group:
+            if blk == "attn":
+                cap = min(s_max, cfg.window) if cfg.window else s_max
+                caches.append(KVCache.zeros(batch, cfg.n_kv_heads, cap,
+                                            cfg.d_head, dtype))
+            elif blk == "mamba":
+                caches.append(MambaCache.zeros(batch, cfg, dtype))
+            elif blk == "rwkv":
+                caches.append(RWKVCache.zeros(batch, cfg, dtype))
+        return caches
+
+    single = one_group()
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape), single)
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes tree matching init_caches output."""
+    def kv():  # (G_layers, B, kv_heads, S, dh)
+        return KVCache(("layers", "batch", "kv_heads", "kv_seq", None),
+                       ("layers", "batch", "kv_heads", "kv_seq", None))
+
+    axes = []
+    for (blk, fk) in cfg.blocks_in_group:
+        if blk == "attn":
+            axes.append(kv())
+        elif blk == "mamba":
+            axes.append(MambaCache(("layers", "batch", None, "mamba_inner"),
+                                   ("layers", "batch", "mamba_inner", None)))
+        elif blk == "rwkv":
+            axes.append(RWKVCache(("layers", "batch", "act_embed"),
+                                  ("layers", "batch", "act_embed"),
+                                  ("layers", "batch", "rwkv_heads", None, None)))
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, cfg, kind, x, positions, mode, cache, pos=None,
+                 use_pallas=False):
+    """Returns (y, new_cache)."""
+    if kind == "attn":
+        if mode == "train":
+            return attn_mod.attention(p, cfg, x, positions,
+                                      use_pallas=use_pallas), cache
+        if mode == "prefill":
+            return attn_mod.prefill_attention(p, cfg, x, positions, cache,
+                                              use_pallas=use_pallas)
+        return attn_mod.decode_attention_step(p, cfg, x, pos, cache,
+                                              use_pallas=use_pallas)
+    if kind == "mamba":
+        if mode == "train":
+            y, _ = mamba_mod.mamba_block(p, cfg, x, None)
+            return y, cache
+        return mamba_mod.mamba_block(p, cfg, x, cache)
+    if kind == "rwkv":
+        if mode == "train":
+            y, _ = rwkv_mod.rwkv_time_mix(p, cfg, x, None)
+            return y, cache
+        return rwkv_mod.rwkv_time_mix(p, cfg, x, cache)
+    raise ValueError(kind)
+
+
+def _apply_ffn(p, cfg, kind, x, mode, cache):
+    """Returns (y, aux, new_cache). rwkv channel-mix threads the cache."""
+    if kind == "dense":
+        return ffn(p, cfg, x), jnp.float32(0.0), cache
+    if kind == "moe":
+        y, aux = moe_mod.moe_ffn(p, cfg, x)
+        return y, aux, cache
+    if kind == "rwkv_cm":
+        y, new_cache = rwkv_mod.rwkv_channel_mix(
+            p, cfg, x, cache if mode != "train" else None)
+        return y, jnp.float32(0.0), (new_cache if mode != "train" else cache)
+    raise ValueError(kind)
+
+
+def _group_body(cfg: ModelConfig, mode: str, use_pallas: bool):
+    kinds = cfg.blocks_in_group
+
+    def body(carry, xs):
+        x, positions, pos = carry
+        gparams, gcache = xs
+        aux_total = jnp.float32(0.0)
+        new_caches = []
+        for i, (blk, fk) in enumerate(kinds):
+            bp = gparams[i]
+            c = gcache[i] if gcache is not None else None
+            h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+            y, c = _apply_block(bp["mix"], cfg, blk, h, positions, mode, c,
+                                pos, use_pallas)
+            x = x + y
+            h = rmsnorm(bp["norm2"], x, cfg.norm_eps)
+            y, aux, c = _apply_ffn(bp["ffn"], cfg, fk, h, mode, c)
+            x = x + y
+            aux_total = aux_total + aux
+            new_caches.append(c)
+        return (x, positions, pos), (new_caches, aux_total)
+
+    return body
+
+
+def _run_groups(cfg, params, x, positions, mode, caches=None, pos=None,
+                use_pallas=False):
+    body = _group_body(cfg, mode, use_pallas)
+    if cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    unroll = cfg.unroll_inner
+    if caches is None:
+        def scan_body(carry, gparams):
+            c, ys = body(carry, (gparams, None))
+            return c, ys[1]                      # aux only
+
+        (x, _, _), auxs = jax.lax.scan(scan_body, (x, positions, pos),
+                                       params["groups"], unroll=unroll)
+        return x, None, jnp.sum(auxs)
+
+    def scan_body(carry, xs):
+        c, (new_caches, aux) = body(carry, xs)
+        return c, (new_caches, aux)
+
+    (x, _, _), (new_caches, auxs) = jax.lax.scan(
+        scan_body, (x, positions, pos), (params["groups"], caches),
+        unroll=unroll)
+    return x, new_caches, jnp.sum(auxs)
+
+
+def _embed_inputs(cfg, params, batch):
+    x = embed(params["embed"], batch["tokens"])
+    if cfg.frontend == "vision":
+        fe = batch["frontend_embeds"].astype(x.dtype)
+        proj = jnp.einsum("bnf,fd->bnd", fe, params["frontend_proj"])
+        n = cfg.n_frontend_tokens
+        x = jnp.concatenate([proj, x[:, n:, :]], axis=1)
+    return x.astype(_dtype(cfg.dtype))
+
+
+def forward(cfg: ModelConfig, params, batch, use_pallas: bool = False):
+    """Teacher-forcing logits (B, S, V). batch: tokens (B, S) int32
+    [+ frontend_embeds]."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    x, _, aux = _run_groups(cfg, params, x, positions, "train",
+                            use_pallas=use_pallas)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["unembed"] if "unembed" in params else params["embed"]
+    return unembed(table, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, use_pallas: bool = False):
+    """Chunked cross-entropy (bounds the (B, chunk, V) logits buffer)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    x, _, aux = _run_groups(cfg, params, x, positions, "train",
+                            use_pallas=use_pallas)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = (params["unembed"] if "unembed" in params else params["embed"])["table"]
+    labels = batch["labels"]
+
+    chunk = min(cfg.loss_chunk, S)
+    assert S % chunk == 0
+    xc = x.reshape(B, S // chunk, chunk, -1).swapaxes(0, 1)
+    lc = labels.reshape(B, S // chunk, chunk).swapaxes(0, 1)
+
+    def step(tot, args):
+        xb, lb = args
+        logits = jnp.einsum("bsd,vd->bsv", xb, table,
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), (xc, lc),
+                            unroll=cfg.unroll_inner)
+    loss = total / (B * S)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params, batch, s_max: int,
+            use_pallas: bool = False):
+    """Build caches from a full prompt. Returns (last_logits (B, V), caches)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    caches = init_caches(cfg, B, s_max)
+    x, caches, _ = _run_groups(cfg, params, x, positions, "prefill", caches,
+                               use_pallas=use_pallas)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["unembed"] if "unembed" in params else params["embed"]
+    logits = unembed(table, x[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, pos,
+                use_pallas: bool = False):
+    """One decode step. tokens (B, 1) int32; pos scalar int32 (current
+    position). Returns (logits (B, V), new_caches)."""
+    x = embed(params["embed"], tokens).astype(_dtype(cfg.dtype))
+    positions = jnp.asarray(pos)[None]
+    x, caches, _ = _run_groups(cfg, params, x, positions, "decode", caches,
+                               pos=jnp.asarray(pos), use_pallas=use_pallas)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["unembed"] if "unembed" in params else params["embed"]
+    logits = unembed(table, x)[:, 0]
+    return logits, caches

@@ -1,0 +1,67 @@
+"""CA baseline simulator invariants."""
+import numpy as np
+import pytest
+
+from repro.core import (default_pools_for, evaluate,
+                        simulate_cluster_autoscaler)
+
+
+def _pools(cat, k=6):
+    idx = cat.select(lambda t: 2 <= t.cpu <= 8)[:k]
+    return default_pools_for(cat, idx)
+
+
+def test_ca_satisfies_when_possible(small_catalog):
+    demand = np.array([8, 16, 4, 100], np.float64)
+    res = simulate_cluster_autoscaler(small_catalog, _pools(small_catalog), demand)
+    assert res.satisfied
+    K, _, _ = small_catalog.matrices()
+    assert np.all(K @ res.counts >= demand - 1e-9)
+
+
+def test_ca_deterministic_per_seed(small_catalog):
+    demand = np.array([8, 16, 4, 100], np.float64)
+    a = simulate_cluster_autoscaler(small_catalog, _pools(small_catalog), demand, seed=3)
+    b = simulate_cluster_autoscaler(small_catalog, _pools(small_catalog), demand, seed=3)
+    np.testing.assert_array_equal(a.counts, b.counts)
+
+
+def test_ca_only_uses_pool_types(small_catalog):
+    demand = np.array([16, 32, 8, 200], np.float64)
+    pools = _pools(small_catalog, k=4)
+    res = simulate_cluster_autoscaler(small_catalog, pools, demand)
+    allowed = {p.instance_idx for p in pools}
+    used = set(np.nonzero(res.counts)[0].tolist())
+    assert used <= allowed
+
+
+def test_ca_wave_homogeneous(small_catalog):
+    """In wave mode with a single pool, CA must scale that pool alone to
+    cover everything (the homogeneous-scaling constraint)."""
+    demand = np.array([16, 32, 8, 200], np.float64)
+    idx = small_catalog.select(lambda t: t.cpu == 4)[:1]
+    pools = default_pools_for(small_catalog, idx)
+    res = simulate_cluster_autoscaler(small_catalog, pools, demand, mode="wave")
+    used = np.nonzero(res.counts)[0]
+    assert len(used) == 1 and used[0] == idx[0]
+
+
+def test_ca_respects_pool_caps(small_catalog):
+    demand = np.array([64, 128, 16, 500], np.float64)
+    idx = small_catalog.select(lambda t: t.cpu == 2)[:2]
+    pools = default_pools_for(small_catalog, idx, max_count=3)
+    res = simulate_cluster_autoscaler(small_catalog, pools, demand)
+    assert np.all(res.counts[idx] <= 3)
+    # capped pools can't satisfy this demand
+    assert not res.satisfied
+
+
+def test_least_waste_not_worse_than_random_median(small_catalog):
+    demand = np.array([24, 64, 12, 300], np.float64)
+    pools = _pools(small_catalog, k=8)
+    rnd = np.median([simulate_cluster_autoscaler(
+        small_catalog, pools, demand, expander="random", seed=s).cost
+        for s in range(5)])
+    lw = simulate_cluster_autoscaler(small_catalog, pools, demand,
+                                     expander="least-waste").cost
+    assert lw <= rnd + 1e-6

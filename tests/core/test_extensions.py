@@ -1,0 +1,88 @@
+"""Paper §VII future-work features (beyond-paper implementation): HA
+constraints, zone spread, anti-affinity, reserved/spot pricing tiers."""
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.objective as obj
+from repro.core import (Catalog, Scenario, make_cloud_catalog, multistart_solve,
+                        problem_from_scenario, round_and_polish)
+from repro.core.extensions import (HAPolicy, PricingTiers, apply_ha,
+                                   cap_reserved, enforce_anti_affinity,
+                                   tiered_catalog, zone_replicated_catalog)
+
+
+def _small():
+    cat = Catalog(make_cloud_catalog().instances[::40])
+    demand = np.array([16, 32, 8, 200], np.float64)
+    scen = Scenario(name="x", title="x", demand=demand, allowed_idx=None,
+                    pools=[], existing=np.zeros(cat.n))
+    return cat, scen
+
+
+def test_ha_min_replicas_enforced():
+    cat, scen = _small()
+    prob = problem_from_scenario(cat, scen)
+    j = int(cat.select(lambda t: 2 <= t.cpu <= 4)[0])
+    prob = apply_ha(prob, HAPolicy(min_replicas={j: 3}))
+    ms = multistart_solve(prob, n_starts=2)
+    x = np.asarray(ms.x_int)
+    assert x[j] >= 3
+    assert bool(obj.is_feasible(prob, jnp.asarray(x, jnp.float32), 1e-3))
+
+
+def test_zone_spread():
+    cat, scen = _small()
+    zcat = zone_replicated_catalog(cat, zones=3)
+    assert zcat.n == 3 * cat.n
+    zscen = Scenario(name="z", title="z", demand=scen.demand, allowed_idx=None,
+                     pools=[], existing=np.zeros(zcat.n))
+    prob = problem_from_scenario(zcat, zscen)
+    j = int(cat.select(lambda t: 2 <= t.cpu <= 4)[0])
+    prob = apply_ha(prob, HAPolicy(min_replicas={j: 3}, zones=3),
+                    n_base=cat.n)
+    lb = np.asarray(prob.lb)
+    for z in range(3):
+        assert lb[z * cat.n + j] >= 1    # ceil(3/3) per zone
+
+
+def test_anti_affinity_repair():
+    cat, scen = _small()
+    prob = problem_from_scenario(cat, scen)
+    ms = multistart_solve(prob, n_starts=2)
+    x = np.array(ms.x_int, np.float64)   # writable copy
+    used = np.nonzero(x)[0]
+    if len(used) < 2:   # force a conflict artificially
+        x[used[0] + 1 if used[0] + 1 < cat.n else used[0] - 1] = 1
+        used = np.nonzero(x)[0]
+    group = used[:2].tolist()
+    policy = HAPolicy(min_replicas={}, anti_affinity=[group])
+    x2 = enforce_anti_affinity(x, prob, policy)
+    assert (np.asarray(x2)[group] > 0.5).sum() <= 1
+    K = np.asarray(prob.K)
+    assert np.all(K @ np.asarray(x2) >= np.asarray(prob.d) - 1e-4)
+
+
+def test_pricing_tiers_prefer_reserved_and_spot():
+    cat, scen = _small()
+    tiers = PricingTiers()
+    tcat, res_mask, spot_mask = tiered_catalog(cat, tiers)
+    assert tcat.n == 3 * cat.n
+    # reserved twin strictly cheaper; spot effective cheaper still
+    j = 0
+    assert tcat.instances[cat.n + j].hourly_price < tcat.instances[j].hourly_price
+    assert (tcat.instances[2 * cat.n + j].hourly_price
+            < tcat.instances[cat.n + j].hourly_price)
+    tscen = Scenario(name="t", title="t", demand=scen.demand, allowed_idx=None,
+                     pools=[], existing=np.zeros(tcat.n))
+    prob = problem_from_scenario(tcat, tscen)
+    ms = multistart_solve(prob, n_starts=2)
+    x = np.asarray(ms.x_int)
+    used = np.nonzero(x)[0]
+    # cost-optimal solution uses discounted tiers, not on-demand
+    assert all(j >= cat.n for j in used), used
+    # capping reserved: with cap 0, no reserved twin may be used
+    cover = np.full(tcat.n, 10.0)
+    prob2 = cap_reserved(prob, res_mask, cover * 0.0, tiers)
+    ms2 = multistart_solve(prob2, n_starts=2)
+    used2 = np.nonzero(np.asarray(ms2.x_int))[0]
+    assert all(not res_mask[j] for j in used2)

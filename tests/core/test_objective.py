@@ -1,0 +1,125 @@
+"""Unit + property tests for the eq.(1) objective and its analytic gradient."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.objective as obj
+from repro.core import PenaltyParams
+
+from ..conftest import make_toy_problem
+
+
+def _np_objective(prob, x):
+    """Independent numpy re-implementation of eq. (1)."""
+    P = prob.params
+    K, E, c, d = map(np.asarray, (prob.K, prob.E, prob.c, prob.d))
+    x = np.asarray(x)
+    a, b1, b2, b3, g = (float(P.alpha), float(P.beta1), float(P.beta2),
+                        float(P.beta3), float(P.gamma))
+    Kx, Ex = K @ x, E @ x
+    p = E.shape[0]
+    val = c @ x
+    val += a * p - a * np.sum(np.exp(-b1 * Ex))
+    val += -g * np.sum(np.log1p(b2 * Ex))
+    val += b3 * np.sum(np.maximum(d - Kx, 0.0) ** 2)
+    return val
+
+
+def test_objective_matches_numpy(toy_problem):
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        x = jnp.asarray(rng.uniform(0, 5, toy_problem.n), jnp.float32)
+        np.testing.assert_allclose(
+            float(obj.objective(toy_problem, x)),
+            _np_objective(toy_problem, x), rtol=1e-5)
+
+
+def test_objective_terms_sum(toy_problem):
+    x = jnp.ones(toy_problem.n)
+    t = obj.objective_terms(toy_problem, x)
+    total = sum(float(v) for v in t.values())
+    np.testing.assert_allclose(total, float(obj.objective(toy_problem, x)),
+                               rtol=1e-6)
+
+
+def test_grad_matches_autodiff(toy_problem):
+    """The hand-derived eq.(6) gradient must equal jax.grad of the objective
+    (away from the max(0,.) kink)."""
+    rng = np.random.default_rng(2)
+    auto = jax.grad(lambda x: obj.objective(toy_problem, x))
+    for _ in range(5):
+        x = jnp.asarray(rng.uniform(0.5, 5, toy_problem.n), jnp.float32)
+        np.testing.assert_allclose(np.asarray(obj.grad_objective(toy_problem, x)),
+                                   np.asarray(auto(x)), rtol=2e-4, atol=2e-4)
+
+
+def test_composite_grad_matches_autodiff(toy_problem):
+    rng = np.random.default_rng(3)
+    for use_barrier in (False, True):
+        if use_barrier:
+            # need a strictly feasible point for finite barrier
+            from repro.core.solver import phase1_point
+            x = phase1_point(toy_problem, jnp.full(toy_problem.n, 2.0))
+            lo, hi = obj.constraint_residuals(toy_problem, x)
+            if float(jnp.min(lo)) <= 1e-3 or float(jnp.min(hi)) <= 1e-3:
+                pytest.skip("no strict interior found for barrier check")
+        else:
+            x = jnp.asarray(rng.uniform(0.5, 3, toy_problem.n), jnp.float32)
+        t, w, ub = jnp.asarray(2.0), jnp.asarray(10.0), jnp.asarray(use_barrier)
+        auto = jax.grad(lambda z: obj.composite(toy_problem, z, t, w, ub))(x)
+        manual = obj.composite_grad(toy_problem, x, t, w, ub)
+        np.testing.assert_allclose(np.asarray(manual), np.asarray(auto),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_consolidation_term_bounds(toy_problem):
+    """0 <= consolidation <= alpha * p, ->0 at x=0, -> alpha*p as x->inf."""
+    P = toy_problem.params
+    p = toy_problem.p
+    t0 = obj.objective_terms(toy_problem, jnp.zeros(toy_problem.n))
+    assert abs(float(t0["consolidation"])) < 1e-6
+    tb = obj.objective_terms(toy_problem, jnp.full(toy_problem.n, 1e4))
+    np.testing.assert_allclose(float(tb["consolidation"]),
+                               float(P.alpha) * p, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(0.1, 10.0))
+def test_objective_finite_and_grad_consistent(seed, scale):
+    prob = make_toy_problem(seed=seed, demand_scale=scale)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.uniform(0, 10, prob.n), jnp.float32)
+    f = float(obj.objective(prob, x))
+    assert np.isfinite(f)
+    g = np.asarray(obj.grad_objective(prob, x))
+    assert np.all(np.isfinite(g))
+    # descent along -g must reduce f locally (first-order sanity)
+    eps = 1e-3 / (np.linalg.norm(g) + 1e-9)
+    f2 = float(obj.objective(prob, x - eps * jnp.asarray(g)))
+    assert f2 <= f + 1e-5
+
+
+def test_convexity_on_convex_subset():
+    """With alpha=0 the objective is convex: check midpoint inequality on
+    random segments."""
+    prob = make_toy_problem(alpha=0.0)
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        x1 = jnp.asarray(rng.uniform(0, 8, prob.n), jnp.float32)
+        x2 = jnp.asarray(rng.uniform(0, 8, prob.n), jnp.float32)
+        fm = float(obj.objective(prob, 0.5 * (x1 + x2)))
+        favg = 0.5 * (float(obj.objective(prob, x1)) +
+                      float(obj.objective(prob, x2)))
+        assert fm <= favg + 1e-4
+
+
+def test_projection(toy_problem):
+    x = jnp.asarray(np.linspace(-5, 150, toy_problem.n), jnp.float32)
+    px = obj.project(toy_problem, x)
+    assert float(jnp.min(px)) >= 0.0
+    assert float(jnp.max(px)) <= float(jnp.max(toy_problem.ub))
+    # idempotent
+    np.testing.assert_allclose(np.asarray(obj.project(toy_problem, px)),
+                               np.asarray(px))

@@ -1,0 +1,70 @@
+"""Greedy rounding (paper III.B) properties: integrality, feasibility,
+monotone coverage; scale-down never breaks feasibility."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core.objective as obj
+from repro.core import greedy_round, round_and_polish, scale_down, solve_relaxation, SolverConfig
+
+from ..conftest import make_toy_problem
+
+
+def _covers(prob, x):
+    Kx = np.asarray(prob.K) @ np.asarray(x)
+    return np.all(Kx >= np.asarray(prob.d - prob.mu) - 1e-5)
+
+
+def test_rounding_integral_and_feasible(toy_problem):
+    res = solve_relaxation(toy_problem, jnp.zeros(toy_problem.n),
+                           SolverConfig(max_iters=200, barrier_rounds=2))
+    x = np.asarray(greedy_round(toy_problem, res.x))
+    assert np.allclose(x, np.round(x))
+    assert _covers(toy_problem, x)
+
+
+def test_round_and_polish_not_worse(toy_problem):
+    res = solve_relaxation(toy_problem, jnp.zeros(toy_problem.n),
+                           SolverConfig(max_iters=200, barrier_rounds=2))
+    xa = greedy_round(toy_problem, res.x)
+    xb = round_and_polish(toy_problem, res.x)
+    fa = float(obj.objective(toy_problem, xa))
+    fb = float(obj.objective(toy_problem, xb))
+    assert fb <= fa + 1e-4
+    assert _covers(toy_problem, np.asarray(xb))
+
+
+def test_scale_down_keeps_feasibility(toy_problem):
+    x = jnp.full(toy_problem.n, 6.0)  # heavily over-provisioned
+    xd = scale_down(toy_problem, x)
+    assert _covers(toy_problem, np.asarray(xd))
+    assert float(jnp.sum(xd)) <= float(jnp.sum(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_rounding_properties(seed):
+    prob = make_toy_problem(seed=seed)
+    rng = np.random.default_rng(seed + 13)
+    x_star = jnp.asarray(rng.uniform(0, 3, prob.n), jnp.float32)
+    x = np.asarray(greedy_round(prob, x_star))
+    # integral
+    assert np.allclose(x, np.round(x))
+    # never below floor of input (clipped)
+    floor = np.floor(np.clip(np.asarray(x_star), np.asarray(prob.lb),
+                             np.asarray(prob.ub))) * np.asarray(prob.mask)
+    assert np.all(x >= floor - 1e-6)
+    # covers demand (toy problems always have full coverage available)
+    assert _covers(prob, x)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_scale_down_properties(seed):
+    prob = make_toy_problem(seed=seed)
+    x = jnp.asarray(np.full(prob.n, 5.0), jnp.float32)
+    xd = np.asarray(scale_down(prob, x))
+    assert _covers(prob, xd)
+    assert np.allclose(xd, np.round(xd))
+    # removal is monotone: no count increased
+    assert np.all(xd <= 5.0 + 1e-6)

@@ -1,0 +1,25 @@
+"""Roofline -> allocator demand-vector integration tests."""
+import numpy as np
+
+from repro.core.workloads import (JobSpec, demand_from_job,
+                                  demand_from_dryrun_record, fleet_demand)
+
+
+def test_demand_from_job_units():
+    job = JobSpec(name="j", hlo_flops=197e12 * 100, hlo_bytes=1e12,
+                  collective_bytes=50e9, bytes_per_device=8e9, devices=256,
+                  step_budget_s=1.0, host_ram_gb=64)
+    d = demand_from_job(job)
+    assert abs(d[0] - 100.0) < 1e-6          # chips for compute
+    assert abs(d[1] - 8 * 256) < 1e-6        # HBM GB
+    assert abs(d[2] - 50.0) < 1e-6           # ICI GB/s
+    assert d[3] == 64
+
+
+def test_demand_from_dryrun_record_and_fleet():
+    rec = {"cell": "x__train_4k", "flops": 1e12, "bytes_accessed": 1e11,
+           "collective_bytes": 1e10, "bytes_per_device": 4e9, "devices": 256}
+    d = demand_from_dryrun_record(rec)
+    assert d.shape == (4,) and np.all(d >= 0)
+    total = fleet_demand([rec, rec])
+    np.testing.assert_allclose(total, 2 * d)

@@ -1,0 +1,91 @@
+"""Dry-run smoke: one fast cell must lower+compile on BOTH production meshes
+in a subprocess (the 512-device XLA flag must not leak into this process).
+Also validates the JSON record schema the roofline benchmark consumes."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_cell_compiles(tmp_path, mesh):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "rwkv6-7b", "--shape", "decode_32k",
+         "--mesh", mesh, "--out-dir", str(tmp_path)],
+        capture_output=True, text=True, cwd=ROOT,
+        env={**os.environ, "PYTHONPATH": "src"}, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    mesh_name = "16x16" if mesh == "single" else "2x16x16"
+    rec = json.load(open(tmp_path / f"rwkv6-7b__decode_32k__{mesh_name}.json"))
+    assert rec["status"] == "ok"
+    assert rec["devices"] == (256 if mesh == "single" else 512)
+    for key in ("flops", "bytes_accessed", "collective_bytes",
+                "bytes_per_device", "roofline", "model_flops_per_device"):
+        assert key in rec, key
+    assert rec["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                           "collective_s")
+    # an O(1)-state decode must fit comfortably
+    assert rec["bytes_per_device"] < 16 * 2**30
+
+
+def test_shape_skip_rules():
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES, cell_applicable
+    long = SHAPES["long_500k"]
+    assert cell_applicable(get_config("rwkv6-7b"), long) is None
+    assert cell_applicable(get_config("jamba-1.5-large-398b"), long) is None
+    assert cell_applicable(get_config("mixtral-8x22b"), long) is None
+    for arch in ("nemotron-4-15b", "qwen1.5-4b", "command-r-plus-104b",
+                 "granite-34b", "llama4-maverick-400b-a17b",
+                 "musicgen-medium", "internvl2-26b"):
+        assert cell_applicable(get_config(arch), long) is not None
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        for arch in ("rwkv6-7b", "mixtral-8x22b"):
+            assert cell_applicable(get_config(arch), SHAPES[shape]) is None
+
+
+def test_input_specs_no_allocation():
+    """input_specs must be pure ShapeDtypeStructs (never device arrays)."""
+    import jax
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES, input_specs
+    cfg = get_config("mixtral-8x22b")
+    for name, shape in SHAPES.items():
+        specs = input_specs(cfg, shape)
+        for leaf in jax.tree_util.tree_leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), (name, type(leaf))
+
+
+def test_logical_rules_divisibility():
+    """spec_for skips indivisible assignments, letting later dims claim the
+    mesh axis (the mixtral-experts case)."""
+    import subprocess, sys, textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import sharding as shd
+        mesh = jax.make_mesh((2, 8), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        rules = shd.base_rules(mesh)
+        # 6 experts do not divide 8 -> mlp gets the model axis instead
+        spec = shd.spec_for(("expert", "embed", "mlp"), rules, mesh,
+                            shape=(6, 64, 128))
+        assert spec == P(None, "data", "model"), spec
+        # 8 experts divide -> expert keeps it, mlp skipped
+        spec = shd.spec_for(("expert", "embed", "mlp"), rules, mesh,
+                            shape=(8, 64, 128))
+        assert spec == P("model", "data", None), spec
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT,
+                       env={**os.environ, "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-1500:]
+    assert "OK" in r.stdout

@@ -1,0 +1,156 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
+ref.py pure-jnp oracles (kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from ..conftest import make_toy_problem
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------------------------
+# alloc_objective — the paper's solver hot loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,m,n,p,S", [
+    (0, 4, 37, 2, 13), (1, 3, 128, 2, 64), (2, 4, 200, 3, 32),
+    (3, 2, 16, 2, 1), (4, 4, 1880, 2, 8),
+])
+def test_alloc_objective_matches_ref(seed, m, n, p, S):
+    from repro.kernels.alloc_objective.ops import batched_value_and_grad
+    from repro.kernels.alloc_objective.ref import alloc_objective_ref
+    prob = make_toy_problem(seed=seed, m=m, n=n, p=p)
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.uniform(0, 5, (S, n)), jnp.float32)
+    f, g = batched_value_and_grad(prob, X)
+    P = prob.params
+    fr, gr = alloc_objective_ref(X, prob.K, prob.E, prob.c, prob.d,
+                                 P.alpha, P.beta1, P.beta2, P.beta3, P.gamma)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(fr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-4)
+
+
+def test_alloc_objective_matches_core_objective(toy_problem):
+    """The kernel must agree with repro.core.objective exactly (same math)."""
+    import repro.core.objective as obj
+    from repro.kernels.alloc_objective.ops import batched_value_and_grad
+    rng = np.random.default_rng(9)
+    X = jnp.asarray(rng.uniform(0, 4, (5, toy_problem.n)), jnp.float32)
+    f, g = batched_value_and_grad(toy_problem, X)
+    for i in range(5):
+        np.testing.assert_allclose(float(f[i]),
+                                   float(obj.objective(toy_problem, X[i])),
+                                   rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(g[i]),
+                                   np.asarray(obj.grad_objective(toy_problem, X[i])),
+                                   rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,G,dh,win,bq,bk", [
+    (2, 128, 4, 2, 32, 0, 32, 32),
+    (1, 256, 8, 8, 16, 0, 64, 64),
+    (2, 128, 4, 1, 32, 48, 32, 32),     # MQA + sliding window
+    (1, 64, 2, 2, 128, 0, 64, 32),
+    (1, 128, 6, 3, 64, 0, 128, 128),    # single block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, S, H, G, dh, win, bq, bk, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    rng = np.random.default_rng(B * S + H)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, G, dh)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, G, dh)), dtype)
+    out = flash_attention(q, k, v, window=win, block_q=bq, block_k=bk)
+    ref = flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               **TOL[dtype])
+
+
+def test_flash_attention_matches_model_path():
+    """Kernel vs the model's _chunked_flash (the production jnp path)."""
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.models.attention import _chunked_flash
+    rng = np.random.default_rng(3)
+    B, S, H, G, dh = 2, 256, 4, 2, 32
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, G, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, G, dh)), jnp.float32)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = _chunked_flash(q, k, v, 0, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,G,S,dh,bk,nvalid", [
+    (2, 4, 2, 256, 32, 64, 256),
+    (1, 8, 1, 128, 64, 32, 100),
+    (2, 2, 2, 512, 16, 128, 307),
+    (1, 4, 4, 64, 128, 64, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(B, H, G, S, dh, bk, nvalid, dtype):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    rng = np.random.default_rng(S + nvalid)
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, H, dh)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, G, S, dh)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, G, S, dh)), dtype)
+    valid = jnp.arange(S) < nvalid
+    out = decode_attention(q, k, v, valid, block_k=bk)
+    ref = decode_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# rwkv6_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,hs,chunk", [
+    (2, 64, 2, 16, 16), (1, 128, 4, 32, 32), (2, 96, 1, 8, 48),
+    (1, 64, 2, 64, 64),
+])
+def test_rwkv6_scan_matches_ref(B, S, H, hs, chunk):
+    from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+    from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+    rng = np.random.default_rng(B * S + hs)
+    r, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, hs)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.7, 0.999, (B, S, H, hs)), jnp.float32)
+    u = jnp.asarray(rng.normal(0, 1, (H, hs)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(0, 0.5, (B, H, hs, hs)), jnp.float32)
+    y, sf = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    yr, sr = rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr), rtol=1e-3, atol=1e-3)
+
+
+def test_rwkv6_scan_matches_model_chunked():
+    """Kernel vs the model's _wkv_chunked (the production jnp path)."""
+    from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+    from repro.models.rwkv import _wkv_chunked
+    rng = np.random.default_rng(11)
+    B, S, H, hs = 1, 128, 2, 16
+    r, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, hs)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.8, 0.999, (B, S, H, hs)), jnp.float32)
+    u = jnp.asarray(rng.normal(0, 1, (H, hs)), jnp.float32)
+    s0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    y1, s1 = rwkv6_scan(r, k, v, w, u, s0, chunk=32)
+    y2, s2 = _wkv_chunked(r, k, v, w, u, s0, 32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,37 @@
+"""End-to-end behaviour tests: the full paper pipeline on a reduced catalog —
+scenario -> CA baseline -> convex optimization -> controller loop with a
+failure event. Model-framework system tests live in tests/models and
+tests/distributed."""
+import numpy as np
+import pytest
+
+
+def test_paper_pipeline_end_to_end(small_catalog):
+    from repro.core import (InfrastructureOptimizationController, Scenario,
+                            default_pools_for, evaluate, optimize,
+                            simulate_cluster_autoscaler)
+
+    demand = np.array([16, 32, 8, 200], np.float64)
+    pools = default_pools_for(small_catalog,
+                              small_catalog.select(lambda t: 2 <= t.cpu <= 8)[:6])
+    scen = Scenario(name="sys", title="system test", demand=demand,
+                    allowed_idx=None, pools=pools,
+                    existing=np.zeros(small_catalog.n))
+
+    ca = simulate_cluster_autoscaler(small_catalog, pools, demand)
+    assert ca.satisfied
+    ca_metrics = evaluate(small_catalog, ca.counts, demand)
+
+    res = optimize(small_catalog, scen, n_starts=4)
+    assert res.metrics.satisfied
+    # headline claim: optimization matches or beats CA
+    assert res.metrics.total_cost <= ca_metrics.total_cost * 1.05
+
+    # controller keeps satisfying under drift + failure
+    ctl = InfrastructureOptimizationController(catalog=small_catalog,
+                                               delta_max=6.0, n_starts=2)
+    for f in (1.0, 1.3, 1.6):
+        st = ctl.step(demand * f)
+        assert st.metrics.satisfied
+    st = ctl.replan_on_failure(np.ceil(ctl.x_current * 0.3), demand * 1.6)
+    assert st.metrics.satisfied
