@@ -1,0 +1,129 @@
+"""Fleet subsystem benchmark: batched multi-tenant solving vs the naive
+per-problem Python loop.
+
+Three sections:
+  1. RAGGED fleet, end-to-end (the production case): every tenant has its own
+     catalog slice shape, so the naive loop pays one XLA compile PER DISTINCT
+     SHAPE while solve_fleet pads + compiles ONCE. This is where batching is
+     transformative (CvxCluster's batch-structured-solve argument).
+  2. UNIFORM fleet, warm steady-state: pure lockstep-batching throughput with
+     compilation amortized on both sides.
+  3. Agreement: the batched solve must reproduce the naive loop's objectives.
+
+Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import SolverConfig, multistart_solve
+from repro.fleet import solve_fleet, stack_problems
+from repro.testing import make_toy_problem
+
+CFG = SolverConfig()
+
+
+def _ragged_fleet(B: int):
+    """B tenants, every one a distinct (m, n) shape — 64 distinct shapes at
+    B=64, exactly what a real multi-tenant fleet looks like."""
+    return [make_toy_problem(seed=s, n=24 + s, m=3 + s % 2) for s in range(B)]
+
+
+def _uniform_fleet(B: int, n: int):
+    return [make_toy_problem(seed=s, n=n) for s in range(B)]
+
+
+def _naive_loop(probs, n_starts):
+    out = []
+    for p in probs:
+        ms = multistart_solve(p, n_starts=n_starts, cfg=CFG)
+        out.append((float(ms.fun_int), float(np.min(np.where(
+            np.asarray(ms.all_feasible), np.asarray(ms.all_fun), np.inf)))))
+    return out
+
+
+def run(B: int = 64, n_starts: int = 4):
+    out = {}
+    print("=" * 100)
+    print(f"Fleet benchmark: batched multi-tenant solve, B={B}, "
+          f"{n_starts} starts per tenant")
+    print("=" * 100)
+
+    # ---- 1. ragged fleet, end-to-end (includes JIT on both sides) ----------
+    probs = _ragged_fleet(B)
+    batch = stack_problems(probs)
+    t0 = time.time()
+    res = solve_fleet(batch, n_starts=n_starts, cfg=CFG)
+    res.fun.block_until_ready()
+    t_fleet_cold = time.time() - t0
+
+    t0 = time.time()
+    naive = _naive_loop(probs, n_starts)
+    t_naive_cold = time.time() - t0
+
+    speedup_cold = t_naive_cold / t_fleet_cold
+    print(f"[ragged, end-to-end] {B} tenants, {B} distinct shapes")
+    print(f"  solve_fleet : {t_fleet_cold:7.1f}s  "
+          f"({B / t_fleet_cold:6.1f} problems/s)  [1 compile]")
+    print(f"  naive loop  : {t_naive_cold:7.1f}s  "
+          f"({B / t_naive_cold:6.1f} problems/s)  [{B} compiles]")
+    print(f"  speedup     : {speedup_cold:.1f}x")
+    out["ragged_cold"] = dict(t_fleet=t_fleet_cold, t_naive=t_naive_cold,
+                              speedup=speedup_cold)
+
+    # ---- agreement on the ragged fleet -------------------------------------
+    fun_int = np.asarray(res.fun_int)
+    naive_int = np.asarray([f for f, _ in naive])
+    per_tenant = np.abs(fun_int - naive_int) / np.maximum(np.abs(naive_int),
+                                                          1e-9)
+    agg = abs(fun_int.sum() - naive_int.sum()) / abs(naive_int.sum())
+    feas = bool(np.all(np.asarray(res.feasible)))
+    print(f"[agreement] integer objective vs naive loop: "
+          f"median {np.median(per_tenant):.2e}, max {per_tenant.max():.2e}, "
+          f"fleet aggregate {agg:.2e}, all feasible: {feas}")
+    out["agreement"] = dict(median=float(np.median(per_tenant)),
+                            max=float(per_tenant.max()), aggregate=float(agg),
+                            all_feasible=feas)
+
+    # ---- 2. uniform fleet, warm steady-state -------------------------------
+    probs_u = _uniform_fleet(B, n=96)
+    batch_u = stack_problems(probs_u)
+    r = solve_fleet(batch_u, n_starts=n_starts, cfg=CFG)   # compile
+    r.fun.block_until_ready()
+    t0 = time.time()
+    r = solve_fleet(batch_u, n_starts=n_starts, cfg=CFG)
+    r.fun.block_until_ready()
+    t_fleet_warm = time.time() - t0
+    _naive_loop(probs_u[:1], n_starts)                     # compile
+    t0 = time.time()
+    _naive_loop(probs_u, n_starts)
+    t_naive_warm = time.time() - t0
+    print(f"[uniform n=96, warm] fleet {t_fleet_warm:.1f}s "
+          f"({B / t_fleet_warm:.1f} problems/s) vs naive {t_naive_warm:.1f}s "
+          f"({B / t_naive_warm:.1f} problems/s): "
+          f"{t_naive_warm / t_fleet_warm:.1f}x")
+    out["uniform_warm"] = dict(t_fleet=t_fleet_warm, t_naive=t_naive_warm,
+                               speedup=t_naive_warm / t_fleet_warm)
+
+    # ---- 3. scaling with fleet size ----------------------------------------
+    rows = []
+    for b in (8, 16, 32, B):
+        pb = stack_problems(_uniform_fleet(b, n=48))
+        r = solve_fleet(pb, n_starts=n_starts, cfg=CFG)    # compile
+        r.fun.block_until_ready()
+        t0 = time.time()
+        r = solve_fleet(pb, n_starts=n_starts, cfg=CFG)
+        r.fun.block_until_ready()
+        dt = time.time() - t0
+        rows.append(dict(B=b, t=dt, pps=b / dt))
+        print(f"[scaling] B={b:3d}: {dt:6.2f}s  {b / dt:6.1f} problems/s")
+    out["scaling"] = rows
+    return out
+
+
+if __name__ == "__main__":
+    quick = "--quick" in sys.argv
+    run(B=16 if quick else 64)

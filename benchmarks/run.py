@@ -2,6 +2,7 @@
   Fig.1  five scenarios (CA vs optimization)       -> scenarios.run()
   Fig.2  demand-scaling sweep + over-provisioning  -> scaling.run()
   SIII   solver approaches + Pallas kernel         -> solver_bench.run()
+  (ours) batched multi-tenant fleet solving        -> fleet_bench.run()
   (ours) roofline table from dry-run artifacts     -> roofline.run()
 Writes benchmarks/artifacts/results.json.
 """
@@ -13,11 +14,12 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import roofline, scaling, scenarios, solver_bench
+    from benchmarks import fleet_bench, roofline, scaling, scenarios, solver_bench
     results = {}
     results["scenarios"] = scenarios.run()
     results["scaling"] = scaling.run()
     results["solver"] = solver_bench.run()
+    results["fleet"] = fleet_bench.run()
     results["roofline"] = roofline.run()
     out = os.path.join(os.path.dirname(__file__), "artifacts", "results.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)

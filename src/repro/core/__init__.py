@@ -17,7 +17,8 @@ from .catalog import Catalog, InstanceType, make_cloud_catalog, make_tpu_catalog
 from .autoscaler import NodePool, simulate_cluster_autoscaler, default_pools_for
 from .metrics import AllocationMetrics, evaluate, per_dim_utilization
 from .scenarios import Scenario, build_scenarios, scaled_scenario
-from .api import optimize, problem_from_scenario, OptimizeResult
+from .api import (optimize, problem_from_demand, problem_from_scenario,
+                  OptimizeResult)
 from .controller import InfrastructureOptimizationController, ControllerStep
 from .pareto import grid_search, sensitivity, pareto_mask
 from . import workloads
@@ -32,7 +33,7 @@ __all__ = [
     "make_tpu_catalog", "NodePool", "simulate_cluster_autoscaler",
     "default_pools_for", "AllocationMetrics", "evaluate", "per_dim_utilization",
     "Scenario", "build_scenarios", "scaled_scenario", "optimize",
-    "problem_from_scenario", "OptimizeResult",
+    "problem_from_demand", "problem_from_scenario", "OptimizeResult",
     "InfrastructureOptimizationController", "ControllerStep", "grid_search",
     "sensitivity", "pareto_mask", "workloads",
 ]

@@ -31,30 +31,46 @@ class OptimizeResult:
     used_bnb: bool
 
 
-def problem_from_scenario(catalog: Catalog, scenario: Scenario,
-                          params: Optional[PenaltyParams] = None,
-                          normalize: bool = True,
-                          ) -> AllocationProblem:
-    """Build the problem; with ``normalize`` (default) each resource row of K
-    is divided by the demand d_r (so d == 1 in solver units). This
-    conditions the problem — otherwise storage-GB (O(100)) dominates both the
-    shortage penalty and the greedy-rounding score over CPU cores (O(10)).
-    Metrics are always computed in raw units against the catalog."""
+def problem_from_demand(catalog: Catalog, demand: np.ndarray,
+                        params: Optional[PenaltyParams] = None,
+                        allowed_idx: Optional[np.ndarray] = None,
+                        existing: Optional[np.ndarray] = None,
+                        normalize: bool = True,
+                        ) -> AllocationProblem:
+    """Build the problem for a raw demand vector; with ``normalize`` (default)
+    each resource row of K is divided by the demand d_r (so d == 1 in solver
+    units). This conditions the problem — otherwise storage-GB (O(100))
+    dominates both the shortage penalty and the greedy-rounding score over CPU
+    cores (O(10)). Metrics are always computed in raw units against the
+    catalog. Shared by the one-shot scenario pipeline and the controller /
+    fleet-replay tick loop, so both sides solve the SAME problem."""
     K, E, c = catalog.matrices()
-    d = scenario.demand.astype(np.float32)
+    d = np.asarray(demand, np.float32)
     if normalize:
         scale = 1.0 / np.maximum(d, 1e-9)
         K = K * scale[:, None]
         d = np.ones_like(d)
     prob = AllocationProblem.create(K, E, c, d, params=params)
-    if scenario.allowed_idx is not None:
+    if allowed_idx is not None:
         # existing nodes stay allowed even if outside the approved list
-        allowed = np.asarray(scenario.allowed_idx)
-        existing_idx = np.nonzero(scenario.existing > 0)[0]
-        prob = prob.restrict(np.unique(np.concatenate([allowed, existing_idx])))
-    if scenario.existing is not None and scenario.existing.any():
-        prob = prob.with_existing(scenario.existing.astype(np.float32))
+        allowed = np.asarray(allowed_idx)
+        if existing is not None:
+            existing_idx = np.nonzero(existing > 0)[0]
+            allowed = np.unique(np.concatenate([allowed, existing_idx]))
+        prob = prob.restrict(allowed)
+    if existing is not None and np.asarray(existing).any():
+        prob = prob.with_existing(np.asarray(existing, np.float32))
     return prob
+
+
+def problem_from_scenario(catalog: Catalog, scenario: Scenario,
+                          params: Optional[PenaltyParams] = None,
+                          normalize: bool = True,
+                          ) -> AllocationProblem:
+    return problem_from_demand(catalog, scenario.demand, params=params,
+                               allowed_idx=scenario.allowed_idx,
+                               existing=scenario.existing,
+                               normalize=normalize)
 
 
 def optimize(catalog: Catalog, scenario: Scenario,

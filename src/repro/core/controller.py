@@ -13,6 +13,7 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from .api import problem_from_demand
 from .catalog import Catalog
 from .incremental import solve_incremental
 from .metrics import AllocationMetrics, evaluate
@@ -37,24 +38,25 @@ class InfrastructureOptimizationController:
     params: Optional[PenaltyParams] = None
     n_starts: int = 4
     allowed_idx: Optional[np.ndarray] = None
+    normalize: bool = True                       # demand-normalized solver units
     x_current: np.ndarray = None                 # set on first step
     history: List[ControllerStep] = field(default_factory=list)
 
     def _problem(self, demand: np.ndarray) -> AllocationProblem:
-        K, E, c = self.catalog.matrices()
-        prob = AllocationProblem.create(K, E, c, demand.astype(np.float32),
-                                        params=self.params)
-        if self.allowed_idx is not None:
-            prob = prob.restrict(self.allowed_idx)
-        return prob
+        # same construction as the one-shot api.optimize pipeline, so a
+        # constant-demand replay reproduces the single-shot result
+        return problem_from_demand(self.catalog, demand, params=self.params,
+                                   allowed_idx=self.allowed_idx,
+                                   normalize=self.normalize)
 
     def step(self, demand: np.ndarray) -> ControllerStep:
         demand = np.asarray(demand, np.float64)
         prob = self._problem(demand)
         if self.x_current is None:
-            # cold start: full multistart solve, no churn bound
+            # cold start: full multistart solve, no churn bound; take the
+            # best rounded start (matches api.optimize without BnB)
             ms = multistart_solve(prob, n_starts=self.n_starts)
-            x = np.asarray(round_and_polish(prob, ms.best.x), np.float64)
+            x = np.asarray(ms.x_int, np.float64)
             replanned = True
         else:
             x_rel = solve_incremental(

@@ -1,0 +1,33 @@
+"""repro.fleet — multi-tenant, time-varying allocation.
+
+The paper optimizes one cluster snapshot; this package makes *fleets* of
+tenant clusters a first-class path:
+
+  * batching   — stack heterogeneous AllocationProblems into one padded,
+                 masked (B, n_max) pytree.
+  * solver     — solve_fleet: one jitted batched phase-1 -> barrier PGD ->
+                 rounding pass over the whole fleet x multi-starts, with the
+                 objective+gradient hot loop routed through the
+                 kernels.alloc_objective Pallas path.
+  * traces     — seedable synthetic demand-trace generators (diurnal, flash
+                 crowd, ramp, weekly seasonality).
+  * replay     — step every tenant's controller through a trace (warm starts,
+                 bounded churn) and run the CA baseline on the same traces.
+  * metrics    — fleet/time aggregation: cost integral, SLO-violation ticks,
+                 churn, fragmentation.
+"""
+from .batching import FleetBatch, stack_problems, unstack_solution
+from .solver import FleetSolveResult, solve_fleet
+from .traces import (diurnal_trace, flash_crowd_trace, make_trace, ramp_trace,
+                     weekly_trace)
+from .metrics import FleetReplayMetrics, TenantReplayMetrics
+from .replay import FleetReplayResult, TenantSpec, replay_fleet
+
+__all__ = [
+    "FleetBatch", "stack_problems", "unstack_solution",
+    "FleetSolveResult", "solve_fleet",
+    "diurnal_trace", "flash_crowd_trace", "ramp_trace", "weekly_trace",
+    "make_trace",
+    "TenantSpec", "replay_fleet", "FleetReplayResult",
+    "TenantReplayMetrics", "FleetReplayMetrics",
+]

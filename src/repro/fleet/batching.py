@@ -1,0 +1,117 @@
+"""Stack heterogeneous AllocationProblems into one padded, masked batch.
+
+Tenant problems are ragged: different catalog sizes (n), resource counts (m)
+and provider counts (p). ``stack_problems`` pads every leaf to the fleet
+maximum and stacks, so the whole fleet is ONE AllocationProblem whose leaves
+carry a leading (B,) axis — directly consumable by vmap'd core-solver
+internals and by the batched Pallas objective kernel.
+
+Padding is EXACT, not approximate:
+
+  * padded variables get mask=0, lb=ub=0, c=0 and all-zero K/E columns, so
+    projection pins them to 0 and they contribute nothing to any term;
+  * padded constraint rows get d=0, mu=g=1 and an all-zero K row, so their
+    residual band is -1 <= 0 <= 1: strictly interior (log-barrier term
+    log(1)=0) and never violated;
+  * padded provider rows are all-zero in E, so 1 - exp(-b1*(Ex=0)) = 0 — the
+    consolidation and volume-discount sums are unchanged.
+
+Hence objective(padded, embed(x)) == objective(original, x) exactly, and a
+solve on the stacked batch is equivalent to B independent solves.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import AllocationProblem, PenaltyParams
+
+
+class FleetBatch(NamedTuple):
+    """A stacked fleet. ``problem`` leaves have a leading (B,) axis."""
+
+    problem: AllocationProblem
+    n_true: np.ndarray          # (B,) original variable counts
+    m_true: np.ndarray          # (B,) original resource counts
+    p_true: np.ndarray          # (B,) original provider counts
+
+    @property
+    def B(self) -> int:
+        return self.problem.c.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.problem.c.shape[1]
+
+
+def _pad2(a: np.ndarray, rows: int, cols: int) -> np.ndarray:
+    out = np.zeros((rows, cols), np.float32)
+    out[: a.shape[0], : a.shape[1]] = a
+    return out
+
+
+def _pad1(a: np.ndarray, size: int, fill: float = 0.0) -> np.ndarray:
+    out = np.full((size,), fill, np.float32)
+    out[: a.shape[0]] = a
+    return out
+
+
+def stack_problems(problems: Sequence[AllocationProblem],
+                   n_max: Optional[int] = None,
+                   m_max: Optional[int] = None,
+                   p_max: Optional[int] = None) -> FleetBatch:
+    """Stack ragged problems into one padded batch problem."""
+    assert len(problems) > 0, "empty fleet"
+    ns = [int(pb.n) for pb in problems]
+    ms = [int(pb.m) for pb in problems]
+    ps = [int(pb.p) for pb in problems]
+    n_max = n_max or max(ns)
+    m_max = m_max or max(ms)
+    p_max = p_max or max(ps)
+    assert n_max >= max(ns) and m_max >= max(ms) and p_max >= max(ps)
+
+    K, E, c, d, mu, g, lb, ub, mask = ([] for _ in range(9))
+    par: List[PenaltyParams] = []
+    for pb in problems:
+        K.append(_pad2(np.asarray(pb.K, np.float32), m_max, n_max))
+        E.append(_pad2(np.asarray(pb.E, np.float32), p_max, n_max))
+        c.append(_pad1(np.asarray(pb.c, np.float32), n_max))
+        d.append(_pad1(np.asarray(pb.d, np.float32), m_max))
+        # padded rows: band [-1, 1] around Kx = 0 — strictly interior
+        mu.append(_pad1(np.asarray(pb.mu, np.float32), m_max, fill=1.0))
+        g.append(_pad1(np.asarray(pb.g, np.float32), m_max, fill=1.0))
+        lb.append(_pad1(np.asarray(pb.lb, np.float32), n_max))
+        ub.append(_pad1(np.asarray(pb.ub, np.float32), n_max))
+        mask.append(_pad1(np.asarray(pb.mask, np.float32), n_max))
+        par.append(pb.params)
+
+    params = PenaltyParams(*(jnp.stack([jnp.asarray(getattr(p, f), jnp.float32)
+                                        for p in par])
+                             for f in PenaltyParams._fields))
+    stacked = AllocationProblem(
+        K=jnp.asarray(np.stack(K)), E=jnp.asarray(np.stack(E)),
+        c=jnp.asarray(np.stack(c)), d=jnp.asarray(np.stack(d)),
+        mu=jnp.asarray(np.stack(mu)), g=jnp.asarray(np.stack(g)),
+        params=params,
+        lb=jnp.asarray(np.stack(lb)), ub=jnp.asarray(np.stack(ub)),
+        mask=jnp.asarray(np.stack(mask)))
+    return FleetBatch(problem=stacked,
+                      n_true=np.asarray(ns, np.int64),
+                      m_true=np.asarray(ms, np.int64),
+                      p_true=np.asarray(ps, np.int64))
+
+
+def unstack_solution(batch: FleetBatch, X) -> List[np.ndarray]:
+    """Slice a padded (B, n_max) solution back into per-tenant vectors."""
+    X = np.asarray(X)
+    return [X[b, : batch.n_true[b]].copy() for b in range(batch.B)]
+
+
+def embed_solutions(batch: FleetBatch, xs: Sequence[np.ndarray]) -> np.ndarray:
+    """Inverse of unstack_solution: per-tenant vectors -> padded (B, n_max)."""
+    out = np.zeros((batch.B, batch.n_max), np.float32)
+    for b, x in enumerate(xs):
+        out[b, : len(x)] = x
+    return out

@@ -1,0 +1,103 @@
+"""Fleet/time metric aggregation for trace replays.
+
+Extends the paper's snapshot metrics (repro.core.metrics) along two axes:
+over TIME (cost integral, SLO-violation ticks, churn) and over the FLEET
+(tenant aggregates, optimizer-vs-CA deltas).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.metrics import AllocationMetrics
+
+
+@dataclass
+class TenantReplayMetrics:
+    """One tenant's trace replay, integrated over ticks."""
+
+    name: str
+    ticks: int
+    cost_integral: float          # sum over ticks of $/hr (== $ for 1h ticks)
+    slo_violation_ticks: int      # ticks where provided < demand
+    total_churn: float            # sum ||x_t - x_{t-1}||_1
+    mean_utilization_pct: float
+    mean_fragmentation: float     # mean providers used per tick
+    mean_diversity: float         # mean distinct instance types per tick
+    peak_cost: float
+
+    @property
+    def slo_violation_rate(self) -> float:
+        return self.slo_violation_ticks / max(self.ticks, 1)
+
+
+def tenant_metrics(name: str, steps: Sequence[AllocationMetrics],
+                   churns: Sequence[float]) -> TenantReplayMetrics:
+    costs = np.asarray([s.total_cost for s in steps], np.float64)
+    return TenantReplayMetrics(
+        name=name,
+        ticks=len(steps),
+        cost_integral=float(costs.sum()),
+        slo_violation_ticks=int(sum(not s.satisfied for s in steps)),
+        total_churn=float(np.sum(churns)),
+        mean_utilization_pct=float(np.mean([s.utilization_pct for s in steps])),
+        mean_fragmentation=float(np.mean([s.provider_fragmentation
+                                          for s in steps])),
+        mean_diversity=float(np.mean([s.instance_diversity for s in steps])),
+        peak_cost=float(costs.max()),
+    )
+
+
+@dataclass
+class FleetReplayMetrics:
+    """Aggregate over all tenants; optionally paired with a CA baseline."""
+
+    tenants: List[TenantReplayMetrics]
+    baseline: Optional[List[TenantReplayMetrics]] = None
+
+    @property
+    def total_cost_integral(self) -> float:
+        return sum(t.cost_integral for t in self.tenants)
+
+    @property
+    def total_slo_violation_ticks(self) -> int:
+        return sum(t.slo_violation_ticks for t in self.tenants)
+
+    @property
+    def total_churn(self) -> float:
+        return sum(t.total_churn for t in self.tenants)
+
+    @property
+    def mean_fragmentation(self) -> float:
+        return float(np.mean([t.mean_fragmentation for t in self.tenants]))
+
+    @property
+    def baseline_cost_integral(self) -> Optional[float]:
+        if self.baseline is None:
+            return None
+        return sum(t.cost_integral for t in self.baseline)
+
+    @property
+    def cost_savings_vs_baseline_pct(self) -> Optional[float]:
+        base = self.baseline_cost_integral
+        if base is None or base <= 0:
+            return None
+        return 100.0 * (base - self.total_cost_integral) / base
+
+    def summary(self) -> str:
+        lines = [
+            f"fleet of {len(self.tenants)} tenants, "
+            f"{self.tenants[0].ticks if self.tenants else 0} ticks",
+            f"  cost integral      : ${self.total_cost_integral:,.2f}",
+            f"  SLO violation ticks: {self.total_slo_violation_ticks}",
+            f"  total churn (L1)   : {self.total_churn:,.1f}",
+            f"  mean fragmentation : {self.mean_fragmentation:.2f} providers",
+        ]
+        if self.baseline is not None:
+            lines.append(f"  CA baseline cost   : "
+                         f"${self.baseline_cost_integral:,.2f}")
+            lines.append(f"  savings vs CA      : "
+                         f"{self.cost_savings_vs_baseline_pct:+.1f}%")
+        return "\n".join(lines)

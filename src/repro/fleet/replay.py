@@ -1,0 +1,124 @@
+"""Trace-driven replay: step every tenant's controller through its demand
+trace, and (optionally) run the Cluster-Autoscaler baseline on the SAME
+traces — the SLO/cost evaluation loop the static paper scenarios lack.
+
+The optimizer side uses the production control loop
+(InfrastructureOptimizationController): warm-started incremental solves with
+bounded churn. The CA side carries its node counts tick to tick exactly like
+the real autoscaler (scale-up on unschedulable demand, utilization-gated
+scale-down).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.autoscaler import default_pools_for, simulate_cluster_autoscaler
+from repro.core.catalog import Catalog
+from repro.core.controller import (ControllerStep,
+                                   InfrastructureOptimizationController)
+from repro.core.metrics import AllocationMetrics, evaluate
+from repro.core.problem import PenaltyParams
+
+from .metrics import FleetReplayMetrics, TenantReplayMetrics, tenant_metrics
+
+
+@dataclass
+class TenantSpec:
+    """One tenant cluster: a demand trace plus its controller knobs."""
+
+    name: str
+    trace: np.ndarray                            # (T, m) demand per tick
+    delta_max: float = 8.0                       # max L1 churn per tick
+    n_starts: int = 4
+    params: Optional[PenaltyParams] = None
+    allowed_idx: Optional[np.ndarray] = None     # approved instance types
+    catalog: Optional[Catalog] = None            # overrides the fleet catalog
+    ca_pool_idx: Optional[np.ndarray] = None     # CA node pools (default: the
+                                                 # cheapest covering types)
+
+
+@dataclass
+class TenantReplay:
+    spec: TenantSpec
+    steps: List[ControllerStep]
+    metrics: TenantReplayMetrics
+    ca_metrics: Optional[TenantReplayMetrics] = None
+    ca_counts: Optional[np.ndarray] = None       # final CA allocation
+
+
+@dataclass
+class FleetReplayResult:
+    tenants: List[TenantReplay]
+    metrics: FleetReplayMetrics
+
+
+def default_ca_pools(catalog: Catalog, demand: np.ndarray,
+                     k: int = 8) -> np.ndarray:
+    """The k most cost-efficient single-type covers of ``demand`` — the node
+    pools an operator would plausibly configure for this workload."""
+    K, _, c = catalog.matrices()
+    d = np.asarray(demand, np.float64)
+    safe_K = np.where(K > 0, K, 1e-9)
+    cover = np.max(d[:, None] / safe_K, axis=0)          # units of each type
+    covers_all = np.all((K > 0) | (d[:, None] == 0), axis=0)
+    cost = np.where(covers_all, cover * c, np.inf)
+    order = np.argsort(cost)
+    return order[: min(k, int(np.isfinite(cost).sum()))]
+
+
+def _replay_ca(catalog: Catalog, spec: TenantSpec, pool_idx: np.ndarray,
+               expander: str, mode: str):
+    K, _, _ = catalog.matrices()
+    counts_prev = np.zeros(catalog.n, np.float64)
+    tick_metrics: List[AllocationMetrics] = []
+    churns: List[float] = []
+    for demand in np.asarray(spec.trace, np.float64):
+        existing = {int(j): int(counts_prev[j])
+                    for j in np.nonzero(counts_prev)[0]}
+        pools = default_pools_for(catalog, pool_idx, existing=existing)
+        res = simulate_cluster_autoscaler(catalog, pools, demand,
+                                          expander=expander, mode=mode)
+        churns.append(float(np.abs(res.counts - counts_prev).sum()))
+        counts_prev = res.counts
+        tick_metrics.append(evaluate(catalog, res.counts, demand))
+    return tick_metrics, churns, counts_prev
+
+
+def replay_tenant(catalog: Catalog, spec: TenantSpec, *,
+                  run_ca_baseline: bool = True,
+                  ca_expander: str = "random",
+                  ca_mode: str = "wave") -> TenantReplay:
+    cat = spec.catalog or catalog
+    ctl = InfrastructureOptimizationController(
+        catalog=cat, delta_max=spec.delta_max, params=spec.params,
+        n_starts=spec.n_starts, allowed_idx=spec.allowed_idx)
+    steps = [ctl.step(demand) for demand in np.asarray(spec.trace, np.float64)]
+    met = tenant_metrics(spec.name, [s.metrics for s in steps],
+                         [s.churn for s in steps])
+
+    ca_met, ca_counts = None, None
+    if run_ca_baseline:
+        pool_idx = (spec.ca_pool_idx if spec.ca_pool_idx is not None
+                    else default_ca_pools(cat, np.asarray(spec.trace)[0]))
+        tick_metrics, churns, ca_counts = _replay_ca(
+            cat, spec, pool_idx, ca_expander, ca_mode)
+        ca_met = tenant_metrics(f"{spec.name}/ca", tick_metrics, churns)
+    return TenantReplay(spec=spec, steps=steps, metrics=met,
+                        ca_metrics=ca_met, ca_counts=ca_counts)
+
+
+def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
+                 run_ca_baseline: bool = True,
+                 ca_expander: str = "random",
+                 ca_mode: str = "wave") -> FleetReplayResult:
+    """Replay every tenant; returns per-tenant histories + fleet aggregates."""
+    replays = [replay_tenant(catalog, spec, run_ca_baseline=run_ca_baseline,
+                             ca_expander=ca_expander, ca_mode=ca_mode)
+               for spec in tenants]
+    metrics = FleetReplayMetrics(
+        tenants=[r.metrics for r in replays],
+        baseline=([r.ca_metrics for r in replays] if run_ca_baseline else None))
+    return FleetReplayResult(tenants=replays, metrics=metrics)

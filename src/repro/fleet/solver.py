@@ -1,0 +1,308 @@
+"""solve_fleet — one compiled program solving the whole fleet.
+
+Mirrors core.solver.solve_relaxation (phase-1 -> barrier/penalty PGD with a
+Barzilai-Borwein step and an Armijo backtracking ladder -> feasibility
+restoration -> rounding) but carries the full (B tenants, S starts) state
+through every step. In the hand-batched hot loop ("kernel"/"ref" modes) each
+iteration evaluates the Armijo ladder's B*S*L candidate VALUES in one batched
+pass and the objective+gradient at the accepted iterate with a single call
+into the batched Pallas alloc_objective kernel ("kernel"; grid over tenants x
+point blocks) or its einsum oracle ("ref"). The "vmap" mode instead vmaps the
+unmodified core solver — bit-identical per lane to sequential solves, and the
+fastest dispatch on CPU where Pallas runs in interpret mode.
+
+Phase-1, greedy rounding and start generation genuinely reuse the core
+implementations under vmap — the stacked batch from repro.fleet.batching is
+a valid AllocationProblem per vmap slice, padding included.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multistart import make_starts
+from repro.core.objective import is_feasible, objective
+from repro.core.problem import AllocationProblem
+from repro.core.rounding import round_and_polish
+from repro.core.solver import SolverConfig, phase1_point, solve_relaxation
+from repro.kernels.alloc_objective.ops import fleet_value_and_grad
+from repro.kernels.alloc_objective.ref import alloc_objective_fleet_value
+
+from .batching import FleetBatch, stack_problems
+
+
+class FleetSolveResult(NamedTuple):
+    x: jnp.ndarray            # (B, n) best relaxed solution per tenant
+    fun: jnp.ndarray          # (B,) objective at x
+    x_int: jnp.ndarray        # (B, n) best rounded integer solution
+    fun_int: jnp.ndarray      # (B,) objective at x_int
+    feasible: jnp.ndarray     # (B,) integer-solution feasibility
+    used_barrier: jnp.ndarray  # (B, S)
+    all_fun: jnp.ndarray      # (B, S) relaxed objective per start
+    iters: jnp.ndarray        # total PGD iterations (fleet-wide)
+
+
+# ---------------------------------------------------------------------------
+# batched constraint machinery (leaves carry a leading (B,) axis; points may
+# be (B, T, n) for any T — starts or the flattened candidate ladder)
+# ---------------------------------------------------------------------------
+
+
+def _bcast(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a (B, k) problem leaf to broadcast against (B, ..., k) x."""
+    return a.reshape(a.shape[0], *([1] * (x.ndim - 2)), a.shape[-1])
+
+
+def _project(prob: AllocationProblem, X: jnp.ndarray) -> jnp.ndarray:
+    return (jnp.clip(X, _bcast(prob.lb, X), _bcast(prob.ub, X))
+            * _bcast(prob.mask, X))
+
+
+def _residuals(prob: AllocationProblem, X: jnp.ndarray):
+    KX = jnp.einsum("bmn,b...n->b...m", prob.K, X)
+    lo = KX - _bcast(prob.d - prob.mu, X)
+    hi = _bcast(prob.d + prob.g, X) - KX
+    return lo, hi
+
+
+def _objective_value(prob: AllocationProblem, X: jnp.ndarray) -> jnp.ndarray:
+    """Objective values only for X (B, T, n) — the Armijo-ladder evaluation.
+    The gradient (kernel path) is evaluated once per iteration at the
+    ACCEPTED point, exactly like core.solver._pgd."""
+    P = prob.params
+    return alloc_objective_fleet_value(X, prob.K, prob.E, prob.c, prob.d,
+                                       P.alpha, P.beta1, P.beta2, P.beta3,
+                                       P.gamma)
+
+
+def _constraint_values(prob: AllocationProblem, X: jnp.ndarray,
+                       barrier_t, penalty_w):
+    """Barrier and penalty VALUES for X (B, T, n)."""
+    lo, hi = _residuals(prob, X)                       # (B, T, m) each
+    safe = jnp.all(lo > 0, -1) & jnp.all(hi > 0, -1)   # (B, T)
+    bval = -(1.0 / barrier_t) * (
+        jnp.sum(jnp.log(jnp.where(lo > 0, lo, 1.0)), -1)
+        + jnp.sum(jnp.log(jnp.where(hi > 0, hi, 1.0)), -1))
+    bval = jnp.where(safe, bval, jnp.inf)
+    vlo = jnp.maximum(-lo, 0.0)
+    vhi = jnp.maximum(-hi, 0.0)
+    qval = penalty_w * (jnp.sum(vlo**2, -1) + jnp.sum(vhi**2, -1))
+    return bval, qval
+
+
+def _constraint_grads(prob: AllocationProblem, X: jnp.ndarray,
+                      barrier_t, penalty_w):
+    """Barrier and penalty GRADIENTS for X (B, T, n)."""
+    lo, hi = _residuals(prob, X)
+    lo_c = jnp.maximum(lo, 1e-9)
+    hi_c = jnp.maximum(hi, 1e-9)
+    bgrad = (1.0 / barrier_t) * (
+        jnp.einsum("bmn,btm->btn", prob.K, 1.0 / hi_c)
+        - jnp.einsum("bmn,btm->btn", prob.K, 1.0 / lo_c))
+    vlo = jnp.maximum(-lo, 0.0)
+    vhi = jnp.maximum(-hi, 0.0)
+    qgrad = penalty_w * 2.0 * (jnp.einsum("bmn,btm->btn", prob.K, vhi)
+                               - jnp.einsum("bmn,btm->btn", prob.K, vlo))
+    return bgrad, qgrad
+
+
+def _is_feasible(prob: AllocationProblem, X: jnp.ndarray, tol: float):
+    """(B, ...) feasibility for X (B, ..., n)."""
+    lo, hi = _residuals(prob, X)
+    box = (jnp.all(X >= _bcast(prob.lb, X) - tol, -1)
+           & jnp.all(X <= _bcast(prob.ub, X) + tol, -1))
+    return jnp.all(lo >= -tol, -1) & jnp.all(hi >= -tol, -1) & box
+
+
+def _pgd_fleet(prob, X0, barrier_t, penalty_w, strict, cfg: SolverConfig,
+               use_kernel: bool, interpret: bool):
+    """Batched inner PGD over (B, S) simultaneous solves.
+
+    Per-element state exactly mirrors core.solver._pgd; finished elements
+    freeze in place while the rest keep iterating.
+    """
+    B, S, n = X0.shape
+
+    def F_values(Xc, T):
+        """Composite values for Xc (B, T, n); T is S or S*L."""
+        f = _objective_value(prob, Xc)
+        bval, qval = _constraint_values(prob, Xc, barrier_t, penalty_w)
+        s = jnp.repeat(strict, T // S, axis=1) if T != S else strict
+        return f + jnp.where(s, bval, qval)
+
+    def G_at(Xc):
+        """Composite gradient at the (B, S, n) iterate — the hot call routed
+        through the batched Pallas kernel (or its einsum oracle)."""
+        _, g = fleet_value_and_grad(prob, Xc, interpret=interpret,
+                                    use_kernel=use_kernel)
+        bgrad, qgrad = _constraint_grads(prob, Xc, barrier_t, penalty_w)
+        return g + jnp.where(strict[..., None], bgrad, qgrad)
+
+    L = cfg.n_backtracks
+    ratios = cfg.backtrack ** jnp.arange(-1, L - 1)    # 1 upscale, as core
+
+    def cond(state):
+        x, fx, g, bb, it, done = state
+        return jnp.any(~done) & (it < cfg.max_iters)
+
+    def body(state):
+        x, fx, g, bb, it, done = state
+        steps = bb[..., None] * ratios                                # (B,S,L)
+        cands = _project(prob, x[:, :, None, :]
+                         - steps[..., None] * g[:, :, None, :])       # (B,S,L,n)
+        Fc = F_values(cands.reshape(B, S * L, n), S * L).reshape(B, S, L)
+        # Armijo on the projected step: F(x+) <= F(x) + c * g^T (x+ - x)
+        dec = Fc - (fx[..., None] + cfg.armijo_c *
+                    jnp.sum(g[:, :, None, :] * (cands - x[:, :, None, :]), -1))
+        ok = (dec <= 0.0) & jnp.isfinite(Fc)
+        idx = jnp.argmax(ok, axis=-1)                  # first (largest) step
+        any_ok = jnp.any(ok, axis=-1)
+        sel = lambda a, extra: jnp.take_along_axis(
+            a, idx.reshape(B, S, 1, *([1] * extra)), axis=2).squeeze(2)
+        x_new = jnp.where(any_ok[..., None], sel(cands, 1), x)
+        f_new = jnp.where(any_ok, sel(Fc, 0), fx)
+        g_new = G_at(x_new)
+        # BB1 step from the accepted move (safeguarded into [1e-8, 1e4])
+        dx = x_new - x
+        dg = g_new - g
+        denom = jnp.sum(dx * dg, -1)
+        bb_new = jnp.where(jnp.abs(denom) > 1e-12,
+                           jnp.abs(jnp.sum(dx * dx, -1) / denom), cfg.step0)
+        bb_new = jnp.clip(bb_new, 1e-8, 1e4)
+        bb_new = jnp.where(any_ok, bb_new, bb * cfg.backtrack ** L)
+        move = jnp.max(jnp.abs(dx), -1)
+        newly_done = ((~any_ok) & (bb < 1e-7)) | (any_ok & (move < cfg.tol))
+        # freeze elements that were already done before this iteration
+        x_new = jnp.where(done[..., None], x, x_new)
+        f_new = jnp.where(done, fx, f_new)
+        g_new = jnp.where(done[..., None], g, g_new)
+        bb_new = jnp.where(done, bb, bb_new)
+        return (x_new, f_new, g_new, bb_new, it + 1, done | newly_done)
+
+    X0 = _project(prob, X0)
+    state = (X0, F_values(X0, S), G_at(X0), jnp.full((B, S), cfg.step0),
+             jnp.asarray(0), jnp.zeros((B, S), bool))
+    x, fx, _, _, it, _ = jax.lax.while_loop(cond, body, state)
+    return x, fx, it
+
+
+def _relax_kernel_path(prob, starts, cfg, use_kernel, interpret):
+    """Hand-batched phase-1 -> barrier PGD with the kernel-routed hot loop."""
+    phase1 = jax.vmap(lambda pb, xs: jax.vmap(
+        lambda x0: phase1_point(pb, x0))(xs))
+    x = phase1(prob, starts)                                       # (B, S, n)
+    lo, hi = _residuals(prob, x)
+    strict = (jnp.min(lo, -1) > 1e-3) & (jnp.min(hi, -1) > 1e-3)   # (B, S)
+
+    def round_body(r, carry):
+        x, total_it = carry
+        t = cfg.barrier_t0 * (cfg.barrier_kappa ** r.astype(jnp.float32))
+        x, _, it = _pgd_fleet(prob, x, jnp.asarray(t),
+                              jnp.asarray(cfg.penalty_w), strict, cfg,
+                              use_kernel, interpret)
+        return (x, total_it + it)
+
+    x, iters = jax.lax.fori_loop(0, cfg.barrier_rounds, round_body,
+                                 (x, jnp.asarray(0)))
+    # feasibility restoration (no-op when already feasible)
+    restore = jax.vmap(lambda pb, xs: jax.vmap(
+        lambda x0: phase1_point(pb, x0, steps=100, margin_frac=0.0))(xs))
+    x = restore(prob, x)
+    fun = _objective_value(prob, x)                                 # (B, S)
+    feas = _is_feasible(prob, x, 1e-3)
+    return x, fun, feas, strict, iters
+
+
+def _relax_vmap_path(prob, starts, cfg):
+    """vmap of the UNMODIFIED core solver. XLA preserves the per-lane op
+    structure under vmap, so each lane's trajectory is bit-identical to a
+    standalone solve_relaxation call — the reference fleet path (and the
+    fastest on CPU, where the Pallas kernel would run in interpret mode)."""
+    res = jax.vmap(lambda pb, xs: jax.vmap(
+        lambda x0: solve_relaxation(pb, x0, cfg))(xs))(prob, starts)
+    return res.x, res.fun, res.feasible, res.used_barrier, jnp.sum(res.iters)
+
+
+@partial(jax.jit, static_argnames=("cfg", "hot_loop", "interpret"))
+def _solve_fleet_impl(prob: AllocationProblem, starts: jnp.ndarray,
+                      cfg: SolverConfig, hot_loop: str, interpret: bool
+                      ) -> FleetSolveResult:
+    B, S, n = starts.shape
+    if hot_loop == "vmap":
+        x, fun, feas_rel, strict, iters = _relax_vmap_path(prob, starts, cfg)
+    else:
+        x, fun, feas_rel, strict, iters = _relax_kernel_path(
+            prob, starts, cfg, use_kernel=(hot_loop == "kernel"),
+            interpret=interpret)
+
+    # round EVERY start (relaxed merit predicts integer cost poorly); the
+    # vmapped greedy rounding + objective reuse the core implementations
+    x_int = jax.vmap(lambda pb, xs: jax.vmap(
+        lambda xr: round_and_polish(pb, xr))(xs))(prob, x)          # (B, S, n)
+    f_int = jax.vmap(lambda pb, xs: jax.vmap(
+        lambda xi: objective(pb, xi))(xs))(prob, x_int)
+    feas_int = jax.vmap(lambda pb, xs: jax.vmap(
+        lambda xi: is_feasible(pb, xi, 1e-3))(xs))(prob, x_int)
+
+    take_b = lambda a, j, extra: jnp.take_along_axis(
+        a, j.reshape(B, 1, *([1] * extra)), axis=1).squeeze(1)
+    merit_int = jnp.where(feas_int, f_int, f_int + 1e12)
+    j = jnp.argmin(merit_int, axis=1)                               # (B,)
+    merit_rel = jnp.where(feas_rel, fun, fun + 1e12)
+    i = jnp.argmin(merit_rel, axis=1)
+    return FleetSolveResult(
+        x=take_b(x, i, 1), fun=take_b(fun, i, 0),
+        x_int=take_b(x_int, j, 1), fun_int=take_b(f_int, j, 0),
+        feasible=take_b(feas_int, j, 0),
+        used_barrier=strict, all_fun=fun, iters=iters)
+
+
+def solve_fleet(
+    fleet: Union[FleetBatch, Sequence[AllocationProblem], AllocationProblem],
+    n_starts: int = 4,
+    seed: int = 0,
+    cfg: Optional[SolverConfig] = None,
+    starts: Optional[jnp.ndarray] = None,
+    hot_loop: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> FleetSolveResult:
+    """Solve every tenant problem in one compiled batched program.
+
+    ``fleet`` may be a FleetBatch, a list of (ragged) AllocationProblems, or
+    an already-stacked AllocationProblem with (B,) leading leaf axes.
+    ``starts`` overrides the generated (B, S, n) start points.
+
+    ``hot_loop`` picks the relaxation engine:
+      * "vmap"   — vmap of the unmodified core solver; per-lane trajectories
+                   are bit-identical to sequential solve_relaxation calls.
+                   Default on CPU.
+      * "kernel" — hand-batched PGD with objective+gradient routed through
+                   the batched Pallas alloc_objective kernel (one pallas_call
+                   per iteration for the whole fleet). Default on TPU;
+                   ``interpret=True`` validates it on CPU.
+      * "ref"    — the hand-batched PGD with the einsum oracle instead of
+                   the Pallas kernel (kernel-path debugging).
+    The PGD step acceptance is chaotic in the last ulps, so "kernel"/"ref"
+    agree with sequential solves to solver tolerance (per-tenant ~1e-2,
+    fleet aggregate ~1e-3), while "vmap" agrees exactly.
+    """
+    if isinstance(fleet, FleetBatch):
+        prob = fleet.problem
+    elif isinstance(fleet, AllocationProblem):
+        prob = fleet
+    else:
+        prob = stack_problems(list(fleet)).problem
+    cfg = cfg or SolverConfig()
+    on_tpu = jax.default_backend() == "tpu"
+    if hot_loop is None:
+        hot_loop = "kernel" if on_tpu else "vmap"
+    assert hot_loop in ("vmap", "kernel", "ref"), hot_loop
+    if interpret is None:
+        interpret = not on_tpu
+    if starts is None:
+        starts = jax.vmap(lambda pb: make_starts(pb, n_starts, seed))(prob)
+    return _solve_fleet_impl(prob, jnp.asarray(starts), cfg, hot_loop,
+                             bool(interpret))

@@ -27,3 +27,53 @@ def alloc_objective_ref(X, K, E, c, d, alpha, beta1, beta2, beta3, gamma):
     g_short = -2.0 * beta3 * jnp.einsum("sm,mn->sn", short, K)
     grad = c[None, :] + g_consol + g_volume + g_short
     return f, grad
+
+
+def _fleet_forward(X, K, E, c, d, alpha, beta1, beta2, beta3, gamma):
+    """Shared value computation + the intermediates the gradient reuses."""
+    X = X.astype(jnp.float32)
+    KX = jnp.einsum("bmn,btn->btm", K, X)            # (B, T, m)
+    EX = jnp.einsum("bpn,btn->btp", E, X)            # (B, T, p)
+
+    al = alpha[:, None]
+    b1 = beta1[:, None]
+    b2 = beta2[:, None]
+    b3 = beta3[:, None]
+    ga = gamma[:, None]
+
+    base = jnp.einsum("btn,bn->bt", X, c)             # (B, T)
+    exp_term = jnp.exp(-b1[..., None] * EX)           # (B, T, p)
+    # padded (all-zero) E rows give 1 - exp(0) = 0, so summing 1-exp over the
+    # PADDED p axis equals the true per-problem consolidation term
+    consol = al * jnp.sum(1.0 - exp_term, axis=-1)
+    volume = -ga * jnp.sum(jnp.log1p(b2[..., None] * EX), axis=-1)
+    short = jnp.maximum(d[:, None, :] - KX, 0.0)      # (B, T, m)
+    shortage = b3 * jnp.sum(short**2, axis=-1)
+    f = base + consol + volume + shortage
+    return f, EX, exp_term, short
+
+
+def alloc_objective_fleet_value(X, K, E, c, d, alpha, beta1, beta2, beta3,
+                                gamma):
+    """Values only — the fleet solver's Armijo-ladder evaluation."""
+    return _fleet_forward(X, K, E, c, d, alpha, beta1, beta2, beta3, gamma)[0]
+
+
+def alloc_objective_fleet_ref(X, K, E, c, d, alpha, beta1, beta2, beta3, gamma):
+    """Fleet oracle: per-problem matrices. X (B, T, n); K (B, m, n);
+    E (B, p, n); c (B, n); d (B, m); params (B,) each.
+    Returns (f (B, T), grad (B, T, n))."""
+    f, EX, exp_term, short = _fleet_forward(X, K, E, c, d, alpha, beta1,
+                                            beta2, beta3, gamma)
+    al = alpha[:, None]
+    b1 = beta1[:, None]
+    b2 = beta2[:, None]
+    b3 = beta3[:, None]
+    ga = gamma[:, None]
+    g_consol = al[..., None] * b1[..., None] * jnp.einsum(
+        "btp,bpn->btn", exp_term, E)
+    g_volume = -ga[..., None] * b2[..., None] * jnp.einsum(
+        "btp,bpn->btn", 1.0 / (1.0 + b2[..., None] * EX), E)
+    g_short = -2.0 * b3[..., None] * jnp.einsum("btm,bmn->btn", short, K)
+    grad = c[:, None, :] + g_consol + g_volume + g_short
+    return f, grad

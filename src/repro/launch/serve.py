@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.distributed import sharding as shd
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, mesh_context
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import init_model, split
 
@@ -45,7 +45,7 @@ def main():
 
     prefill_fn = jax.jit(make_prefill_step(cfg, s_max=s_max))
     decode_fn = jax.jit(make_decode_step(cfg))
-    with jax.set_mesh(mesh), shd.use_rules(rules):
+    with mesh_context(mesh), shd.use_rules(rules):
         t0 = time.time()
         logits, caches = prefill_fn(params, batch)
         print(f"[serve] prefill {B}x{P} in {time.time()-t0:.2f}s")

@@ -1,0 +1,86 @@
+"""Test helpers importable under pytest's rootdir rules (``pythonpath = src``).
+
+Two things live here:
+
+* :func:`make_toy_problem` — the small random-but-sane allocation problem used
+  across the unit/property tests and the fleet benchmarks (it moved out of
+  ``tests/conftest.py`` so test modules in subdirectories don't need relative
+  imports, which pytest's rootdir-based collection forbids).
+
+* a minimal, deterministic stand-in for the parts of ``hypothesis`` the test
+  suite uses (``given`` / ``settings`` / ``strategies.integers/floats``).
+  The container image does not ship hypothesis; tests import it with a
+  fallback to this shim so property tests still sweep a deterministic sample
+  of the input space instead of being skipped wholesale.
+"""
+from __future__ import annotations
+
+
+
+import numpy as np
+
+
+def make_toy_problem(seed=0, m=3, n=12, p=2, alpha=0.02, beta3=10.0,
+                     demand_scale=1.0, gamma=0.005):
+    """Small random-but-sane allocation problem for unit/property tests."""
+    from repro.core import AllocationProblem, PenaltyParams
+
+    rng = np.random.default_rng(seed)
+    K = rng.uniform(0.2, 2.0, size=(m, n)).astype(np.float32)
+    c = (K.sum(axis=0) * rng.uniform(0.05, 0.2, size=n)).astype(np.float32)
+    E = np.zeros((p, n), np.float32)
+    E[rng.integers(0, p, size=n), np.arange(n)] = 1.0
+    d = (rng.uniform(1.0, 4.0, size=m) * demand_scale).astype(np.float32)
+    params = PenaltyParams.create(alpha=alpha, beta1=1.0, beta2=0.1,
+                                  beta3=beta3, gamma=gamma)
+    return AllocationProblem.create(K, E, c, d, params=params, ub_default=100.0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback shim (deterministic sampling, no shrinking)
+# ---------------------------------------------------------------------------
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng):
+        return self._sampler(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kw):
+    """Run the test once per deterministic draw (seeded per test name).
+
+    The wrapper must NOT expose the wrapped signature (no ``functools.wraps``):
+    pytest would otherwise read the strategy parameters as fixture requests.
+    """
+    def deco(fn):
+        def wrapper():
+            n_examples = getattr(wrapper, "_max_examples", 10)
+            rng = np.random.default_rng(
+                int.from_bytes(fn.__name__.encode(), "little") % (2**32))
+            for _ in range(n_examples):
+                draw = {k: s.sample(rng) for k, s in strategy_kw.items()}
+                fn(**draw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -2,28 +2,13 @@
 set here — tests run with the single real CPU device; only launch/dryrun.py
 forces 512 placeholder devices (and a few subprocess-based tests set it in
 their own child process environment)."""
-import numpy as np
 import pytest
 
 import jax
 
+from repro.testing import make_toy_problem  # canonical home (rootdir-safe)
+
 jax.config.update("jax_enable_x64", False)
-
-
-def make_toy_problem(seed=0, m=3, n=12, p=2, alpha=0.02, beta3=10.0,
-                     demand_scale=1.0, gamma=0.005):
-    """Small random-but-sane allocation problem for unit/property tests."""
-    from repro.core import AllocationProblem, PenaltyParams
-
-    rng = np.random.default_rng(seed)
-    K = rng.uniform(0.2, 2.0, size=(m, n)).astype(np.float32)
-    c = (K.sum(axis=0) * rng.uniform(0.05, 0.2, size=n)).astype(np.float32)
-    E = np.zeros((p, n), np.float32)
-    E[rng.integers(0, p, size=n), np.arange(n)] = 1.0
-    d = (rng.uniform(1.0, 4.0, size=m) * demand_scale).astype(np.float32)
-    params = PenaltyParams.create(alpha=alpha, beta1=1.0, beta2=0.1,
-                                  beta3=beta3, gamma=gamma)
-    return AllocationProblem.create(K, E, c, d, params=params, ub_default=100.0)
 
 
 @pytest.fixture(scope="session")

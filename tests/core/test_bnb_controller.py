@@ -9,7 +9,7 @@ from repro.core import (InfrastructureOptimizationController, branch_and_bound,
                         pareto_mask, problem_from_scenario, sensitivity,
                         solve_relaxation, SolverConfig)
 
-from ..conftest import make_toy_problem
+from repro.testing import make_toy_problem
 
 
 def test_bnb_never_worse_than_rounding(toy_problem):

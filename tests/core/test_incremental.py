@@ -2,10 +2,13 @@
 bounded-churn solve."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis — deterministic shim
+    from repro.testing import given, settings, strategies as st
 
 from repro.core import project_l1_ball, project_incremental, solve_incremental
-from ..conftest import make_toy_problem
+from repro.testing import make_toy_problem
 
 
 @settings(max_examples=50, deadline=None)

@@ -3,12 +3,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis — deterministic shim
+    from repro.testing import given, settings, strategies as st
 
 import repro.core.objective as obj
 from repro.core import PenaltyParams
-
-from ..conftest import make_toy_problem
+from repro.testing import make_toy_problem
 
 
 def _np_objective(prob, x):

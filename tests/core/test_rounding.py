@@ -2,12 +2,14 @@
 monotone coverage; scale-down never breaks feasibility."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis — deterministic shim
+    from repro.testing import given, settings, strategies as st
 
 import repro.core.objective as obj
 from repro.core import greedy_round, round_and_polish, scale_down, solve_relaxation, SolverConfig
-
-from ..conftest import make_toy_problem
+from repro.testing import make_toy_problem
 
 
 def _covers(prob, x):

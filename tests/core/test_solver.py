@@ -2,14 +2,16 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis — deterministic shim
+    from repro.testing import given, settings, strategies as st
 
 import repro.core.objective as obj
 from repro.core import (SolverConfig, kkt_report, multistart_solve,
                         solve_relaxation)
 from repro.core.solver import phase1_point
-
-from ..conftest import make_toy_problem
+from repro.testing import make_toy_problem
 
 CFG = SolverConfig(max_iters=300, barrier_rounds=3)
 

@@ -11,6 +11,7 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mesh", ["single", "multi"])
 def test_dryrun_cell_compiles(tmp_path, mesh):
     r = subprocess.run(
@@ -71,8 +72,8 @@ def test_logical_rules_divisibility():
         import jax
         from jax.sharding import PartitionSpec as P
         from repro.distributed import sharding as shd
-        mesh = jax.make_mesh((2, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 8), ("data", "model"))
         rules = shd.base_rules(mesh)
         # 6 experts do not divide 8 -> mlp gets the model axis instead
         spec = shd.spec_for(("expert", "embed", "mlp"), rules, mesh,

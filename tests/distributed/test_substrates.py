@@ -79,6 +79,7 @@ def test_grad_compression_error_feedback_converges():
     assert resid < 0.2
 
 
+@pytest.mark.slow
 def test_compressed_psum_multidevice_subprocess():
     """Real psum over 4 host devices in a child process (tests must not
     force device count in THIS process)."""
@@ -89,16 +90,17 @@ def test_compressed_psum_multidevice_subprocess():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.optim.grad_compress import compressed_psum
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        from repro.distributed.sharding import shard_map_compat
+        mesh = make_mesh((4,), ("data",))
         rng = np.random.default_rng(0)
         g = jnp.asarray(rng.normal(0, 1, (4, 256)), jnp.float32)
         err0 = jnp.zeros((4, 256), jnp.float32)
         def f(g, e):
             out, err = compressed_psum(g, e, "data")
             return out, err
-        fm = jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
-                           out_specs=(P("data"), P("data")))
+        fm = shard_map_compat(f, mesh=mesh, in_specs=(P("data"), P("data")),
+                              out_specs=(P("data"), P("data")))
         out, err = fm(g, err0)
         true = np.asarray(g).sum(0)
         got = np.asarray(out)[0]
@@ -175,6 +177,7 @@ def test_elastic_fleet_replans():
     assert plan2.mesh_shape[1] == 16
 
 
+@pytest.mark.slow
 def test_pipeline_parallel_subprocess():
     """GPipe schedule on a 4-stage host-device mesh matches sequential."""
     import subprocess, sys, textwrap
@@ -183,8 +186,8 @@ def test_pipeline_parallel_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline_parallel import pipeline_apply
-        mesh = jax.make_mesh((4,), ("pipe",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("pipe",))
         rng = np.random.default_rng(0)
         n_stages, n_micro, mb, d = 4, 8, 2, 16
         Ws = jnp.asarray(rng.normal(0, 0.5, (n_stages, d, d)), jnp.float32)

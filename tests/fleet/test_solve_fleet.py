@@ -1,0 +1,141 @@
+"""solve_fleet vs the sequential per-problem solver.
+
+The "vmap" hot loop must agree EXACTLY (XLA preserves per-lane op structure
+under vmap); the hand-batched "ref"/"kernel" hot loops re-express the math
+with batched einsums / the Pallas kernel, so their step acceptance is chaotic
+in the last ulps — they must agree to solver tolerance and always end
+feasible.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.objective as obj
+from repro.core import SolverConfig, round_and_polish, solve_relaxation
+from repro.core.multistart import make_starts
+from repro.fleet import solve_fleet, stack_problems
+from repro.testing import make_toy_problem
+
+CFG = SolverConfig(max_iters=150, barrier_rounds=2)
+N_STARTS = 2
+
+
+def _ragged_fleet(B):
+    return [make_toy_problem(seed=s, m=3 + s % 2, n=9 + 2 * (s % 4),
+                             p=2 + s % 2) for s in range(B)]
+
+
+def _shared_starts(probs, batch):
+    """Per-problem make_starts embedded into the padded batch, so both sides
+    start from literally the same points."""
+    from repro.fleet.batching import embed_solutions
+    S = N_STARTS
+    out = np.zeros((batch.B, S, batch.n_max), np.float32)
+    for b, p in enumerate(probs):
+        out[b, :, : p.n] = np.asarray(make_starts(p, S, seed=0))
+    return jnp.asarray(out)
+
+
+def _sequential_reference(probs, starts, cfg=None):
+    """The naive loop: one multistart-style (start-vmapped, as
+    core.multistart._solve_batch) solve per problem."""
+    cfg = cfg or CFG
+
+    def one_problem(p, xs):
+        def one(x0):
+            r = solve_relaxation(p, x0, cfg)
+            xi = round_and_polish(p, r.x)
+            return (r.fun, r.feasible, obj.objective(p, xi),
+                    obj.is_feasible(p, xi, 1e-3))
+        return jax.vmap(one)(xs)
+
+    best_rel, best_int = [], []
+    for b, p in enumerate(probs):
+        fr, fe, fi, fie = one_problem(p, starts[b, :, : p.n])
+        fr, fi = np.asarray(fr), np.asarray(fi)
+        best_rel.append(np.min(np.where(np.asarray(fe), fr, fr + 1e12)))
+        best_int.append(np.min(np.where(np.asarray(fie), fi, fi + 1e12)))
+    return np.asarray(best_rel), np.asarray(best_int)
+
+
+def test_vmap_path_matches_sequential_exactly_uniform():
+    """Uniform-shape fleet: no padding is added, vmap preserves per-lane op
+    structure, so the batched solve is BIT-IDENTICAL to the loop."""
+    probs = [make_toy_problem(seed=s) for s in range(8)]
+    batch = stack_problems(probs)
+    starts = _shared_starts(probs, batch)
+    res = solve_fleet(batch, cfg=CFG, starts=starts, hot_loop="vmap")
+    best_rel, best_int = _sequential_reference(probs, starts)
+    np.testing.assert_allclose(np.asarray(res.fun), best_rel,
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(res.fun_int), best_int,
+                               rtol=1e-6, atol=1e-6)
+    assert bool(np.all(np.asarray(res.feasible)))
+
+
+def test_vmap_path_matches_sequential_ragged():
+    """Tentpole acceptance: ragged fleet (padded reductions shift the last
+    ulps, so trajectories can part ways) still agrees within 1e-3 rel."""
+    probs = _ragged_fleet(8)
+    batch = stack_problems(probs)
+    starts = _shared_starts(probs, batch)
+    res = solve_fleet(batch, cfg=CFG, starts=starts, hot_loop="vmap")
+    best_rel, best_int = _sequential_reference(probs, starts)
+    np.testing.assert_allclose(np.asarray(res.fun), best_rel, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(res.fun_int), best_int, rtol=1e-3)
+    assert bool(np.all(np.asarray(res.feasible)))
+
+
+def test_integer_solutions_are_integral_and_feasible():
+    probs = _ragged_fleet(6)
+    batch = stack_problems(probs)
+    res = solve_fleet(batch, n_starts=N_STARTS, cfg=CFG, hot_loop="vmap")
+    X = np.asarray(res.x_int)
+    np.testing.assert_allclose(X, np.round(X), atol=1e-5)
+    for b, p in enumerate(probs):
+        assert bool(obj.is_feasible(p, jnp.asarray(X[b, : p.n]), 1e-3)), b
+
+
+def test_ref_path_agrees_to_solver_tolerance():
+    """The hand-batched PGD (einsum oracle) must stay within the stall
+    band of the sequential solver and end feasible everywhere."""
+    probs = _ragged_fleet(8)
+    batch = stack_problems(probs)
+    starts = _shared_starts(probs, batch)
+    res = solve_fleet(batch, cfg=CFG, starts=starts, hot_loop="ref")
+    best_rel, best_int = _sequential_reference(probs, starts)
+    assert bool(np.all(np.asarray(res.feasible)))
+    np.testing.assert_allclose(np.asarray(res.fun), best_rel, rtol=0.1)
+    np.testing.assert_allclose(np.asarray(res.fun_int), best_int, rtol=0.05)
+    # fleet-aggregate objective agrees much tighter than any single tenant
+    agg_f = float(np.sum(np.asarray(res.fun_int)))
+    assert abs(agg_f - best_int.sum()) / best_int.sum() < 2e-2
+
+
+def test_kernel_path_matches_ref_path():
+    """Pallas hot loop (interpret mode on CPU) vs the einsum oracle: same
+    algorithm, same batching — only the objective evaluation differs."""
+    probs = _ragged_fleet(3)
+    batch = stack_problems(probs)
+    cfg = SolverConfig(max_iters=40, barrier_rounds=1)
+    starts = _shared_starts(probs, batch)
+    r_ref = solve_fleet(batch, cfg=cfg, starts=starts, hot_loop="ref")
+    r_ker = solve_fleet(batch, cfg=cfg, starts=starts, hot_loop="kernel",
+                        interpret=True)
+    assert bool(np.all(np.asarray(r_ker.feasible)))
+    np.testing.assert_allclose(np.asarray(r_ker.fun_int),
+                               np.asarray(r_ref.fun_int), rtol=0.05)
+
+
+def test_heterogeneous_params_per_tenant():
+    """Each tenant keeps its own penalty parameters through stacking."""
+    probs = [make_toy_problem(seed=1, beta3=5.0),
+             make_toy_problem(seed=1, beta3=50.0)]
+    batch = stack_problems(probs)
+    np.testing.assert_allclose(np.asarray(batch.problem.params.beta3),
+                               [5.0, 50.0])
+    res = solve_fleet(batch, n_starts=N_STARTS, cfg=CFG, hot_loop="vmap")
+    # identical data, different shortage weight -> different solves allowed,
+    # but both must be feasible
+    assert bool(np.all(np.asarray(res.feasible)))
