@@ -1,0 +1,23 @@
+# Convenience targets. PYTHONPATH handling matches pytest.ini (pythonpath=src).
+
+PY ?= python
+
+.PHONY: test test-fast docs-check bench bench-fleet example-fleet
+
+test:            ## tier-1 verify: the full test suite
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-fast:       ## skip the multi-minute subprocess tests
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+docs-check:      ## fail if public repro.fleet / repro.core modules lack docstrings or README doc links dangle
+	PYTHONPATH=src $(PY) tools/check_docs.py
+
+bench:           ## full benchmark driver (writes benchmarks/artifacts/results.json)
+	PYTHONPATH=src $(PY) benchmarks/run.py
+
+bench-fleet:     ## fleet benchmark only (--quick for the 16-tenant variant)
+	PYTHONPATH=src $(PY) benchmarks/fleet_bench.py --quick
+
+example-fleet:   ## trace-driven fleet replay demo (batched engine)
+	PYTHONPATH=src $(PY) examples/fleet_replay.py

@@ -1,7 +1,7 @@
 """Fleet subsystem benchmark: batched multi-tenant solving vs the naive
 per-problem Python loop.
 
-Three sections:
+Five sections:
   1. RAGGED fleet, end-to-end (the production case): every tenant has its own
      catalog slice shape, so the naive loop pays one XLA compile PER DISTINCT
      SHAPE while solve_fleet pads + compiles ONCE. This is where batching is
@@ -9,6 +9,12 @@ Three sections:
   2. UNIFORM fleet, warm steady-state: pure lockstep-batching throughput with
      compilation amortized on both sides.
   3. Agreement: the batched solve must reproduce the naive loop's objectives.
+  4. SHAPE BUCKETING: padding-waste reduction (and solve agreement) from
+     grouping a ragged fleet into power-of-two shape buckets instead of one
+     global pad.
+  5. REPLAY: end-to-end trace replay, batched engine (one solve per shape
+     bucket per tick) vs the sequential per-tenant controller loop, on a
+     ragged fleet of per-tenant catalogs.
 
 Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--quick]
 """
@@ -19,8 +25,10 @@ import time
 
 import numpy as np
 
-from repro.core import SolverConfig, multistart_solve
-from repro.fleet import solve_fleet, stack_problems
+from repro.core import Catalog, SolverConfig, make_cloud_catalog, multistart_solve
+from repro.fleet import (TenantSpec, bucket_problems, make_trace,
+                         padding_stats, replay_fleet, solve_fleet,
+                         solve_fleet_bucketed, stack_problems)
 from repro.testing import make_toy_problem
 
 CFG = SolverConfig()
@@ -121,7 +129,103 @@ def run(B: int = 64, n_starts: int = 4):
         rows.append(dict(B=b, t=dt, pps=b / dt))
         print(f"[scaling] B={b:3d}: {dt:6.2f}s  {b / dt:6.1f} problems/s")
     out["scaling"] = rows
+
+    # ---- 4. shape-bucketed stacking ----------------------------------------
+    out["bucketing"] = run_bucketing(B, n_starts)
+
+    # ---- 5. batched vs sequential trace replay -----------------------------
+    out["replay"] = run_replay(B)
     return out
+
+
+def _skewed_fleet(B: int):
+    """A very heterogeneous fleet: a few big tenants dominate the global pad
+    (n up to ~120) while most tenants are small (n ~16-40)."""
+    probs = []
+    for s in range(B):
+        n = 100 + s % 3 * 10 if s % 8 == 0 else 16 + (7 * s) % 25
+        probs.append(make_toy_problem(seed=s, n=n, m=3 + s % 2))
+    return probs
+
+
+def run_bucketing(B: int = 64, n_starts: int = 4):
+    """Padding-waste reduction + agreement for power-of-two shape buckets."""
+    probs = _skewed_fleet(B)
+    bucketed = bucket_problems(probs)
+    g = padding_stats(probs)
+    bk = padding_stats(probs, bucketed)
+    cells_saved = 1.0 - bk["padded_cells"] / g["padded_cells"]
+    print(f"[bucketing] ragged B={B} fleet "
+          f"({len({(int(p.n), int(p.m)) for p in probs})} distinct shapes, "
+          f"{bucketed.n_buckets} buckets)")
+    print(f"  global pad  : {g['padded_cells']:9.0f} cells, "
+          f"{100 * g['waste_frac']:5.1f}% padding waste")
+    print(f"  bucketed pad: {bk['padded_cells']:9.0f} cells, "
+          f"{100 * bk['waste_frac']:5.1f}% padding waste")
+    print(f"  padded-cell reduction: {100 * cells_saved:.1f}%")
+
+    t0 = time.time()
+    r_flat = solve_fleet(stack_problems(probs), n_starts=n_starts, cfg=CFG)
+    r_flat.fun.block_until_ready()
+    t_flat = time.time() - t0
+    t0 = time.time()
+    r_buck = solve_fleet_bucketed(probs, n_starts=n_starts, cfg=CFG,
+                                  bucketed=bucketed)
+    t_buck = time.time() - t0
+    fi_f, fi_b = np.asarray(r_flat.fun_int), np.asarray(r_buck.fun_int)
+    agree = float(np.max(np.abs(fi_f - fi_b) / np.maximum(np.abs(fi_f), 1e-9)))
+    print(f"  solve: global {t_flat:.1f}s vs bucketed {t_buck:.1f}s "
+          f"({bucketed.n_buckets} compiles), integer-objective agreement "
+          f"max rel {agree:.2e}")
+    return dict(waste_global=g["waste_frac"], waste_bucketed=bk["waste_frac"],
+                padded_cells_global=g["padded_cells"],
+                padded_cells_bucketed=bk["padded_cells"],
+                cell_reduction=cells_saved, t_flat=t_flat, t_bucketed=t_buck,
+                n_buckets=bucketed.n_buckets, agreement_max_rel=agree)
+
+
+def run_replay(B: int = 64, T: int = 3):
+    """End-to-end replay: batched engine vs sequential controller loop.
+
+    Every tenant gets its own catalog slice (a distinct (n,) shape), so the
+    sequential loop pays one multistart compile + one incremental-solve
+    compile per tenant, while the batched engine compiles once per occupied
+    shape bucket and steps the whole fleet per tick."""
+    full = make_cloud_catalog()
+    base = np.array([8.0, 16.0, 4.0, 100.0])
+    specs = []
+    for s in range(B):
+        cat = Catalog(full.instances[s % 7:: 20 + s])  # n ~ 23..94, ragged
+        specs.append(TenantSpec(
+            name=f"t{s:02d}", catalog=cat,
+            trace=make_trace("diurnal", base * (0.5 + (s % 5) / 4), T,
+                             seed=s, amplitude=0.3),
+            n_starts=2))
+    shapes = {spec.catalog.n for spec in specs}
+    print(f"[replay] ragged B={B} fleet, T={T} ticks, "
+          f"{len(shapes)} distinct catalog shapes")
+
+    t0 = time.time()
+    bat = replay_fleet(full, specs, run_ca_baseline=False,
+                       replay_mode="batched")
+    t_batched = time.time() - t0
+    print(f"  batched    : {t_batched:7.1f}s "
+          f"({B * T / t_batched:6.1f} tenant-ticks/s)")
+    t0 = time.time()
+    seq = replay_fleet(full, specs, run_ca_baseline=False,
+                       replay_mode="sequential")
+    t_seq = time.time() - t0
+    print(f"  sequential : {t_seq:7.1f}s "
+          f"({B * T / t_seq:6.1f} tenant-ticks/s)")
+    speedup = t_seq / t_batched
+    cost_s = seq.metrics.total_cost_integral
+    cost_b = bat.metrics.total_cost_integral
+    drift = abs(cost_b - cost_s) / max(abs(cost_s), 1e-9)
+    print(f"  speedup    : {speedup:.1f}x   "
+          f"(cost integral agreement: {drift:.2e} rel)")
+    return dict(t_batched=t_batched, t_sequential=t_seq, speedup=speedup,
+                cost_batched=cost_b, cost_sequential=cost_s,
+                cost_rel_drift=drift, distinct_shapes=len(shapes))
 
 
 if __name__ == "__main__":

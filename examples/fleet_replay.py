@@ -2,7 +2,8 @@
 shapes (diurnal web, flash-crowd launch, steady ramp, weekly enterprise)
 replayed through the Infrastructure Optimization Controller with warm starts
 and bounded churn, against the Cluster Autoscaler baseline on the SAME
-traces.
+traces. Uses the BATCHED engine: every tick steps all tenants through one
+solve_fleet / solve_fleet_step call per shape bucket (docs/fleet.md).
 
   PYTHONPATH=src python examples/fleet_replay.py
 """
@@ -38,7 +39,7 @@ def main():
     ]
 
     out = replay_fleet(cat, tenants, run_ca_baseline=True,
-                       ca_expander="random")
+                       ca_expander="random", replay_mode="batched")
 
     print(f"\n{'tenant':22s} {'cost $':>9s} {'CA $':>9s} {'save':>6s} "
           f"{'SLO!':>4s} {'churn':>7s} {'util%':>6s} {'prov':>4s}")

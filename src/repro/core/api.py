@@ -24,6 +24,14 @@ from .solver import SolverConfig
 
 @dataclass
 class OptimizeResult:
+    """One-shot pipeline output: the deployed allocation and its provenance.
+
+    ``counts`` is the integer allocation (float array of whole numbers),
+    ``relaxed`` the best continuous solution it was rounded from, ``fun``
+    the eq.(1) objective at ``counts`` (solver units), ``metrics`` the
+    raw-unit snapshot evaluation, and ``used_bnb`` whether branch-and-bound
+    improved on greedy rounding."""
+
     counts: np.ndarray
     relaxed: np.ndarray
     metrics: AllocationMetrics
@@ -67,6 +75,8 @@ def problem_from_scenario(catalog: Catalog, scenario: Scenario,
                           params: Optional[PenaltyParams] = None,
                           normalize: bool = True,
                           ) -> AllocationProblem:
+    """``problem_from_demand`` with the scenario's approved-type list and
+    existing deployment applied (paper §IV.B scenario setups)."""
     return problem_from_demand(catalog, scenario.demand, params=params,
                                allowed_idx=scenario.allowed_idx,
                                existing=scenario.existing,
@@ -78,6 +88,14 @@ def optimize(catalog: Catalog, scenario: Scenario,
              n_starts: int = 8, seed: int = 0,
              use_bnb: bool = False, bnb_nodes: int = 24,
              cfg: Optional[SolverConfig] = None) -> OptimizeResult:
+    """The paper's full "optimization approach" pipeline for one scenario:
+    problem construction -> multistart relaxed solves -> greedy rounding
+    (every start; best feasible integer merit wins) -> optional
+    branch-and-bound refinement -> raw-unit metrics.
+
+    This is the one-shot counterpart of the controller/replay tick loop —
+    a constant-demand replay reproduces this result (see
+    tests/fleet/test_replay.py)."""
     prob = problem_from_scenario(catalog, scenario, params)
     ms = multistart_solve(prob, n_starts=n_starts, seed=seed, cfg=cfg)
     x_rel = ms.best.x

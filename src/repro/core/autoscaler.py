@@ -22,6 +22,9 @@ from .catalog import Catalog, M
 
 @dataclass
 class NodePool:
+    """One CA node pool: a single instance type with count bounds — the
+    unit of homogeneous scaling the paper's baseline is restricted to."""
+
     instance_idx: int            # index into the catalog
     count: int = 0               # current nodes
     min_count: int = 0
@@ -30,6 +33,8 @@ class NodePool:
 
 @dataclass
 class CAResult:
+    """Cluster-Autoscaler simulation outcome for one demand snapshot."""
+
     counts: np.ndarray           # (n,) integer allocation over catalog types
     cost: float
     iterations: int
@@ -157,6 +162,8 @@ def simulate_cluster_autoscaler(
 def default_pools_for(catalog: Catalog, idxs: Sequence[int],
                       existing: Optional[dict] = None,
                       max_count: int = 10_000) -> List[NodePool]:
+    """Wrap catalog indices as NodePools, seeding counts from an
+    ``existing`` {index: count} deployment (replay carries these forward)."""
     existing = existing or {}
     return [NodePool(instance_idx=int(j), count=int(existing.get(int(j), 0)),
                      max_count=max_count) for j in idxs]

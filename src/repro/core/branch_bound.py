@@ -37,6 +37,9 @@ class _Node:
 
 @dataclass
 class BnBResult:
+    """Best integer solution found, with search-effort provenance
+    (``gap`` = relative distance between incumbent and best relaxed bound)."""
+
     x: np.ndarray
     fun: float
     nodes_explored: int
@@ -67,6 +70,9 @@ def branch_and_bound(
     int_tol: float = 1e-3,
     cfg: Optional[SolverConfig] = None,
 ) -> BnBResult:
+    """Best-first branch-and-bound on fractional variables (paper §III.D):
+    each node re-solves the relaxation under tightened box bounds, an
+    incumbent prunes by cost cuts; bounded by ``max_nodes`` relaxed solves."""
     cfg = cfg or SolverConfig()
     n = prob.n
     lb0 = np.asarray(prob.lb, np.float64)

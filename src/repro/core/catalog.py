@@ -21,6 +21,8 @@ M = len(RESOURCES)
 
 @dataclass
 class InstanceType:
+    """One purchasable node type: per-node capacities and hourly price."""
+
     name: str
     provider: str
     family: str
@@ -33,6 +35,9 @@ class InstanceType:
 
 @dataclass
 class Catalog:
+    """An ordered list of instance types; ``matrices()`` lowers it to the
+    paper's (K, E, c) model inputs (see docs/math.md)."""
+
     instances: List[InstanceType]
 
     @property
@@ -112,6 +117,8 @@ def _mk_instance(rng, provider, fam, size, gen_name, gen_factor,
 
 
 def make_cloud_catalog(seed: int = 0, n_per_provider: int = 940) -> Catalog:
+    """Deterministic synthetic two-provider catalog (940 Azure-like + 940
+    Linode-like types) with the paper's family/size/price structure."""
     rng = np.random.default_rng(seed)
     out: List[InstanceType] = []
 

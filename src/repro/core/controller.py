@@ -24,6 +24,9 @@ from .rounding import round_and_polish
 
 @dataclass
 class ControllerStep:
+    """One recorded tick: the demand seen, the allocation deployed, its
+    snapshot metrics, the L1 churn paid, and whether it was a full replan."""
+
     demand: np.ndarray
     counts: np.ndarray
     metrics: AllocationMetrics
@@ -33,6 +36,11 @@ class ControllerStep:
 
 @dataclass
 class InfrastructureOptimizationController:
+    """Stateful per-cluster control loop: cold multistart solve on the first
+    tick, then warm-started incremental solves under the L1 churn bound
+    ``delta_max``. The batched fleet replay drives the same state via
+    :meth:`apply_counts` (see docs/fleet.md, replay modes)."""
+
     catalog: Catalog
     delta_max: float = 8.0                       # max L1 churn per tick
     params: Optional[PenaltyParams] = None
@@ -42,30 +50,46 @@ class InfrastructureOptimizationController:
     x_current: np.ndarray = None                 # set on first step
     history: List[ControllerStep] = field(default_factory=list)
 
-    def _problem(self, demand: np.ndarray) -> AllocationProblem:
-        # same construction as the one-shot api.optimize pipeline, so a
-        # constant-demand replay reproduces the single-shot result
+    def make_problem(self, demand: np.ndarray) -> AllocationProblem:
+        """Build this tick's AllocationProblem — the same construction as the
+        one-shot api.optimize pipeline, so a constant-demand replay reproduces
+        the single-shot result. Also used by the batched fleet replay engine,
+        which stacks these per-tenant problems into one padded batch."""
         return problem_from_demand(self.catalog, demand, params=self.params,
                                    allowed_idx=self.allowed_idx,
                                    normalize=self.normalize)
 
-    def step(self, demand: np.ndarray) -> ControllerStep:
+    # back-compat alias (pre-docs name)
+    _problem = make_problem
+
+    def cold_start_counts(self, prob: AllocationProblem) -> np.ndarray:
+        """First-tick allocation: full multistart solve, no churn bound; take
+        the best rounded start (matches api.optimize without BnB)."""
+        ms = multistart_solve(prob, n_starts=self.n_starts)
+        return np.asarray(ms.x_int, np.float64)
+
+    def incremental_counts(self, prob: AllocationProblem,
+                           x_init: Optional[np.ndarray] = None) -> np.ndarray:
+        """Warm-tick allocation: incremental solve from the current counts
+        under the L1 churn bound, then greedy rounding. ``x_init`` optionally
+        overrides the warm start (e.g. the previous tick's relaxed solution,
+        plumbed through by the batched replay engine)."""
+        x_rel = solve_incremental(
+            prob, jnp.asarray(self.x_current, jnp.float32),
+            jnp.asarray(self.delta_max, jnp.float32),
+            x_init=None if x_init is None
+            else jnp.asarray(x_init, jnp.float32))
+        # rounding may exceed the churn bound slightly when demand jumps;
+        # that's the feasibility-first tradeoff (shortage beats churn).
+        return np.asarray(round_and_polish(prob, x_rel), np.float64)
+
+    def apply_counts(self, demand: np.ndarray, counts: np.ndarray,
+                     replanned: bool) -> ControllerStep:
+        """Record an allocation computed for this tick (by :meth:`step`, or
+        externally by the batched fleet engine): compute churn and metrics,
+        advance ``x_current``, append to history."""
         demand = np.asarray(demand, np.float64)
-        prob = self._problem(demand)
-        if self.x_current is None:
-            # cold start: full multistart solve, no churn bound; take the
-            # best rounded start (matches api.optimize without BnB)
-            ms = multistart_solve(prob, n_starts=self.n_starts)
-            x = np.asarray(ms.x_int, np.float64)
-            replanned = True
-        else:
-            x_rel = solve_incremental(
-                prob, jnp.asarray(self.x_current, jnp.float32),
-                jnp.asarray(self.delta_max, jnp.float32))
-            x = np.asarray(round_and_polish(prob, x_rel), np.float64)
-            # rounding may exceed the churn bound slightly when demand jumps;
-            # that's the feasibility-first tradeoff (shortage beats churn).
-            replanned = False
+        x = np.asarray(counts, np.float64)
         churn = float(np.abs(x - (self.x_current if self.x_current is not None
                                   else np.zeros_like(x))).sum())
         self.x_current = x
@@ -74,6 +98,18 @@ class InfrastructureOptimizationController:
                               churn=churn, replanned=replanned)
         self.history.append(step)
         return step
+
+    def step(self, demand: np.ndarray,
+             x_init: Optional[np.ndarray] = None) -> ControllerStep:
+        """Advance one tick: solve for this demand (cold multistart on the
+        first call, warm-started incremental solve after) and record it."""
+        demand = np.asarray(demand, np.float64)
+        prob = self.make_problem(demand)
+        if self.x_current is None:
+            x, replanned = self.cold_start_counts(prob), True
+        else:
+            x, replanned = self.incremental_counts(prob, x_init=x_init), False
+        return self.apply_counts(demand, x, replanned)
 
     def replan_on_failure(self, failed_counts: np.ndarray,
                           demand: np.ndarray) -> ControllerStep:

@@ -30,6 +30,9 @@ from .problem import AllocationProblem
 
 @dataclass
 class HAPolicy:
+    """High-availability add-ons (paper §VII.A): per-type minimum replicas,
+    zone spread, and anti-affinity groups."""
+
     min_replicas: Dict[int, int]          # instance idx -> minimum count
     zones: int = 1                        # AZ spread factor
     anti_affinity: Sequence[Sequence[int]] = ()   # groups; use at most 1 of each
@@ -91,6 +94,9 @@ def enforce_anti_affinity(x: np.ndarray, prob: AllocationProblem,
 
 @dataclass
 class PricingTiers:
+    """Reserved/spot pricing knobs (paper §VII.B): discounts, the reserved
+    capacity cap, and the spot interruption cost model."""
+
     reserved_discount: float = 0.4        # 40% off on committed capacity
     reserved_cap_fraction: float = 0.6    # at most this share may be reserved
     spot_discount: float = 0.7            # 70% off spot

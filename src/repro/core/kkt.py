@@ -18,6 +18,8 @@ from .problem import AllocationProblem
 
 
 class KKTReport(NamedTuple):
+    """KKT residual groups + recovered multipliers for a primal candidate."""
+
     stationarity: jnp.ndarray        # ||grad L||_inf after multiplier fit
     primal_lo: jnp.ndarray           # max violation of Kx >= d - mu
     primal_hi: jnp.ndarray           # max violation of Kx <= d + g
@@ -45,6 +47,8 @@ def _nnls_pgd(A: jnp.ndarray, b: jnp.ndarray, iters: int = 500) -> jnp.ndarray:
 def kkt_report(prob: AllocationProblem, x: jnp.ndarray,
                active_tol: float = 1e-2,
                barrier_t: jnp.ndarray | None = None) -> KKTReport:
+    """Recover multipliers for a primal candidate ``x`` and report the four
+    KKT residual groups (eq. 8-11) — the solver's optimality certificate."""
     # active_tol default 1e-2: interior-point solutions sit a barrier-width
     # (~ m / t_final) away from active constraints; 1e-2 covers t_final >= 1e2.
     #

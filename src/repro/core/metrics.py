@@ -11,6 +11,9 @@ from .catalog import Catalog
 
 @dataclass
 class AllocationMetrics:
+    """Snapshot evaluation of one allocation against one demand vector, in
+    raw catalog units (the paper's §IV.B comparison columns)."""
+
     total_cost: float            # $/hr
     utilization_pct: float       # mean_r demand/provided * 100
     instance_diversity: int      # distinct instance types deployed
@@ -23,6 +26,8 @@ class AllocationMetrics:
 
 
 def evaluate(catalog: Catalog, counts: np.ndarray, demand: np.ndarray) -> AllocationMetrics:
+    """Score integer ``counts`` against ``demand`` in raw units — shared by
+    the optimizer, the CA baseline, and both replay engines."""
     K, E, c = catalog.matrices()
     counts = np.asarray(counts, np.float64)
     provided = K @ counts

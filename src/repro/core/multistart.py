@@ -22,6 +22,9 @@ from .solver import SolveResult, SolverConfig, solve_relaxation
 
 
 class MultiStartResult(NamedTuple):
+    """Winner (+ per-start diagnostics) of a multi-start solve; ``x_int`` is
+    the best feasible ROUNDED solution across starts."""
+
     best: SolveResult
     x_int: jnp.ndarray          # (n,) best ROUNDED integer solution
     fun_int: jnp.ndarray        # objective at x_int
@@ -83,6 +86,9 @@ def multistart_solve(
     seed: int = 0,
     cfg: Optional[SolverConfig] = None,
 ) -> MultiStartResult:
+    """Solve the relaxation from ``n_starts`` diverse starts (one vmapped
+    program), round every start, and pick the best feasible integer merit
+    (paper §III.C)."""
     cfg = cfg or SolverConfig()
     starts = make_starts(prob, n_starts, seed)
     res, x_int, f_int, feas_int = _solve_batch(prob, starts, cfg)

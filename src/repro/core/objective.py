@@ -40,6 +40,7 @@ def objective_terms(prob: AllocationProblem, x: jnp.ndarray) -> Dict[str, jnp.nd
 
 
 def objective(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
+    """f(x): the full eq. (1) objective (sum of objective_terms)."""
     t = objective_terms(prob, x)
     return t["base_cost"] + t["consolidation"] + t["volume_discount"] + t["shortage"]
 
@@ -61,6 +62,7 @@ def grad_objective(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def value_and_grad(prob: AllocationProblem, x: jnp.ndarray):
+    """(f(x), ∇f(x)) — the oracle the Pallas kernel is validated against."""
     return objective(prob, x), grad_objective(prob, x)
 
 
@@ -76,11 +78,13 @@ def constraint_residuals(prob: AllocationProblem, x: jnp.ndarray):
 
 
 def constraint_violation(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
+    """Squared violation of the two-sided band (0 iff band-feasible)."""
     lo, hi = constraint_residuals(prob, x)
     return jnp.sum(jnp.maximum(-lo, 0.0) ** 2) + jnp.sum(jnp.maximum(-hi, 0.0) ** 2)
 
 
 def is_feasible(prob: AllocationProblem, x: jnp.ndarray, tol: float = 1e-4):
+    """Band + box feasibility within ``tol`` (the rounding acceptance test)."""
     lo, hi = constraint_residuals(prob, x)
     box = jnp.all(x >= prob.lb - tol) & jnp.all(x <= prob.ub + tol)
     return jnp.all(lo >= -tol) & jnp.all(hi >= -tol) & box
@@ -97,6 +101,7 @@ def barrier(prob: AllocationProblem, x: jnp.ndarray, t: jnp.ndarray) -> jnp.ndar
 
 
 def barrier_grad(prob: AllocationProblem, x: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """∇ of the log-barrier (residuals clamped away from 0 for safety)."""
     lo, hi = constraint_residuals(prob, x)
     lo = jnp.maximum(lo, 1e-9)
     hi = jnp.maximum(hi, 1e-9)
@@ -109,6 +114,7 @@ def penalty(prob: AllocationProblem, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndar
 
 
 def penalty_grad(prob: AllocationProblem, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """∇ of the quadratic penalty (the barrier's fallback, paper impl. notes)."""
     lo, hi = constraint_residuals(prob, x)
     g_lo = prob.K.T @ jnp.maximum(-lo, 0.0)   # d(sum max(-lo,0)^2)/dx = 2 K^T max(-lo,0) * d(-lo)/dKx ...
     g_hi = prob.K.T @ jnp.maximum(-hi, 0.0)
@@ -141,6 +147,7 @@ def composite_grad(
     penalty_w: jnp.ndarray,
     use_barrier: jnp.ndarray,
 ) -> jnp.ndarray:
+    """∇ of :func:`composite` — the solver's per-iteration gradient."""
     gf = grad_objective(prob, x)
     gb = barrier_grad(prob, x, barrier_t)
     gq = penalty_grad(prob, x, penalty_w)

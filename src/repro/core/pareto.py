@@ -20,6 +20,9 @@ from .solver import SolverConfig, solve_relaxation
 
 @dataclass
 class GridPoint:
+    """One penalty-parameter setting and its (cost, fragmentation,
+    diversity) outcome; ``on_frontier`` marks Pareto-efficient points."""
+
     params: Dict[str, float]
     cost: float
     fragmentation: int
@@ -65,6 +68,9 @@ def grid_search(prob: AllocationProblem,
                 beta3s: Sequence[float] = (50.0,),
                 cfg: SolverConfig = SolverConfig(max_iters=200, barrier_rounds=2),
                 ) -> List[GridPoint]:
+    """Sweep the five penalty knobs over a grid (one vmapped solve), score
+    each rounded outcome, and mark the cost/fragmentation/diversity Pareto
+    frontier — how the default PenaltyParams were tuned."""
     combos = [(a, b1, b2, b3, g)
               for a in alphas for b1 in beta1s for b2 in beta2s
               for b3 in beta3s for g in gammas]

@@ -75,6 +75,8 @@ def round_and_polish(prob: AllocationProblem, x_star: jnp.ndarray,
 @partial(jax.jit, static_argnames=("max_removes",))
 def scale_down(prob: AllocationProblem, x: jnp.ndarray,
                max_removes: int = 4096) -> jnp.ndarray:
+    """Drop units whose removal keeps Kx >= d - mu, most-expensive first —
+    the polish mirroring CA's utilization-gated scale-down."""
     target = prob.d - prob.mu
 
     def removable(x):

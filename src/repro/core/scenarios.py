@@ -18,6 +18,9 @@ from .catalog import Catalog, make_cloud_catalog
 
 @dataclass
 class Scenario:
+    """One paper evaluation setup (§IV.B): a demand vector, the optimizer's
+    approved types, the CA's node pools, and any pre-existing deployment."""
+
     name: str
     title: str
     demand: np.ndarray                       # (4,) cpu, mem, net, storage
@@ -42,6 +45,8 @@ def _pick(catalog: Catalog, pred: Callable, k: int, sort_key=None) -> np.ndarray
 
 
 def build_scenarios(catalog: Optional[Catalog] = None) -> List[Scenario]:
+    """The paper's five scenarios (basic web app, enterprise migration,
+    high-performance batch, storage-heavy, mixed) over ``catalog``."""
     cat = catalog or make_cloud_catalog()
     n = cat.n
     inst = cat.instances

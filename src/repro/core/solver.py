@@ -29,6 +29,9 @@ from .problem import AllocationProblem
 
 
 class SolverConfig(NamedTuple):
+    """Hashable solver knobs (static under jit): barrier continuation
+    schedule, PGD iteration budget, and the Armijo backtracking ladder."""
+
     max_iters: int = 400           # inner PGD iterations per barrier round
     barrier_rounds: int = 4        # outer continuation rounds
     barrier_t0: float = 1.0        # initial barrier temperature
@@ -42,6 +45,9 @@ class SolverConfig(NamedTuple):
 
 
 class SolveResult(NamedTuple):
+    """One relaxed solve: final iterate, objective, merit, effort, and
+    whether the barrier (vs quadratic-penalty) path was taken."""
+
     x: jnp.ndarray
     fun: jnp.ndarray            # objective f(x) (WITHOUT barrier/penalty)
     composite: jnp.ndarray      # final merit value

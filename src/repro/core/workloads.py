@@ -22,6 +22,9 @@ ICI_LINK_BW = 50e9             # bytes/s per link
 
 @dataclass
 class JobSpec:
+    """A training/serving job's roofline numbers (FLOPs, bytes moved,
+    collective traffic) plus its step-time budget."""
+
     name: str
     hlo_flops: float
     hlo_bytes: float
@@ -33,6 +36,9 @@ class JobSpec:
 
 
 def demand_from_job(job: JobSpec) -> np.ndarray:
+    """Lower a JobSpec to an (m,) accelerator demand vector (chips, HBM GB,
+    ICI Gb/s, host RAM) — the bridge from dry-run rooflines to the
+    allocator."""
     compute_chips = job.hlo_flops / (PEAK_FLOPS_BF16 * job.step_budget_s)
     hbm_gb = job.bytes_per_device * job.devices / 1e9
     ici_gbps = job.collective_bytes / job.step_budget_s / 1e9

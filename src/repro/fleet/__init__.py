@@ -4,28 +4,45 @@ The paper optimizes one cluster snapshot; this package makes *fleets* of
 tenant clusters a first-class path:
 
   * batching   — stack heterogeneous AllocationProblems into one padded,
-                 masked (B, n_max) pytree.
+                 masked (B, n_max) pytree; shape-bucketed stacking
+                 (``bucket_problems``) groups tenants into power-of-two
+                 buckets to cut padding waste on ragged fleets.
   * solver     — solve_fleet: one jitted batched phase-1 -> barrier PGD ->
                  rounding pass over the whole fleet x multi-starts, with the
                  objective+gradient hot loop routed through the
-                 kernels.alloc_objective Pallas path.
+                 kernels.alloc_objective Pallas path; solve_fleet_bucketed
+                 solves one batch per shape bucket; solve_fleet_step runs a
+                 warm-started incremental tick for every tenant at once.
   * traces     — seedable synthetic demand-trace generators (diurnal, flash
                  crowd, ramp, weekly seasonality).
   * replay     — step every tenant's controller through a trace (warm starts,
-                 bounded churn) and run the CA baseline on the same traces.
+                 bounded churn), sequentially or with one batched solve per
+                 shape bucket per tick (``replay_mode="batched"``), and run
+                 the CA baseline on the same traces.
   * metrics    — fleet/time aggregation: cost integral, SLO-violation ticks,
                  churn, fragmentation.
+
+Documentation: docs/fleet.md (subsystem guide), docs/architecture.md
+(package map), docs/math.md (model-to-code mapping).
 """
-from .batching import FleetBatch, stack_problems, unstack_solution
-from .solver import FleetSolveResult, solve_fleet
+from .batching import (BucketedFleet, FleetBatch, bucket_dims,
+                       bucket_problems, ceil_pow2, embed_solutions,
+                       padding_stats, scatter_from_buckets, stack_problems,
+                       tenant_problem, unstack_solution)
+from .solver import (FleetSolveResult, FleetStepResult, make_fleet_starts,
+                     solve_fleet, solve_fleet_bucketed, solve_fleet_step)
 from .traces import (diurnal_trace, flash_crowd_trace, make_trace, ramp_trace,
                      weekly_trace)
 from .metrics import FleetReplayMetrics, TenantReplayMetrics
 from .replay import FleetReplayResult, TenantSpec, replay_fleet
 
 __all__ = [
-    "FleetBatch", "stack_problems", "unstack_solution",
-    "FleetSolveResult", "solve_fleet",
+    "FleetBatch", "stack_problems", "unstack_solution", "embed_solutions",
+    "tenant_problem",
+    "BucketedFleet", "bucket_dims", "bucket_problems", "ceil_pow2",
+    "scatter_from_buckets", "padding_stats",
+    "FleetSolveResult", "solve_fleet", "solve_fleet_bucketed",
+    "FleetStepResult", "solve_fleet_step", "make_fleet_starts",
     "diurnal_trace", "flash_crowd_trace", "ramp_trace", "weekly_trace",
     "make_trace",
     "TenantSpec", "replay_fleet", "FleetReplayResult",

@@ -18,11 +18,22 @@ Padding is EXACT, not approximate:
 
 Hence objective(padded, embed(x)) == objective(original, x) exactly, and a
 solve on the stacked batch is equivalent to B independent solves.
+
+For very heterogeneous fleets a single global pad is wasteful: one tenant
+with n=120 forces every tenant to n=120. ``bucket_problems`` instead groups
+tenants into power-of-two shape buckets (8/16/32/... on n, similarly on m and
+p), stacks one FleetBatch per bucket, and remembers the original tenant order
+so per-bucket results can be scattered back losslessly. Bucket pad sizes are
+rounded up to the bucket's power-of-two dims — stable across calls, so XLA
+compiles at most one program per occupied bucket however the fleet changes.
+
+See docs/fleet.md for the full set of stacking/padding invariants.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Sequence
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -115,3 +126,124 @@ def embed_solutions(batch: FleetBatch, xs: Sequence[np.ndarray]) -> np.ndarray:
     for b, x in enumerate(xs):
         out[b, : len(x)] = x
     return out
+
+
+def tenant_problem(batch: FleetBatch, b: int) -> AllocationProblem:
+    """Recover tenant ``b``'s ORIGINAL (unpadded) problem from the batch.
+
+    Padding only appends rows/columns, so slicing the true leading extents
+    back out reproduces the pre-stacking problem exactly (bit-for-bit)."""
+    n = int(batch.n_true[b])
+    m = int(batch.m_true[b])
+    p = int(batch.p_true[b])
+    pb = batch.problem
+    return AllocationProblem(
+        K=pb.K[b, :m, :n], E=pb.E[b, :p, :n], c=pb.c[b, :n], d=pb.d[b, :m],
+        mu=pb.mu[b, :m], g=pb.g[b, :m],
+        params=jax.tree_util.tree_map(lambda a: a[b], pb.params),
+        lb=pb.lb[b, :n], ub=pb.ub[b, :n], mask=pb.mask[b, :n])
+
+
+# ---------------------------------------------------------------------------
+# shape-bucketed stacking
+# ---------------------------------------------------------------------------
+
+
+def ceil_pow2(v: int, floor: int = 1) -> int:
+    """Smallest power-of-two multiple of ``floor`` that is >= v."""
+    r = max(int(floor), 1)
+    while r < v:
+        r *= 2
+    return r
+
+
+def bucket_dims(n: int, m: int, p: int, *,
+                n_floor: int = 8, m_floor: int = 2,
+                p_floor: int = 2) -> Tuple[int, int, int]:
+    """The padded (n, m, p) bucket a problem of true shape (n, m, p) lands in.
+
+    Powers of two (with small floors so tiny problems share one bucket) bound
+    the number of distinct compiled shapes at O(log(max_dim)^3) while keeping
+    per-tenant padding waste below 2x per axis."""
+    return (ceil_pow2(n, n_floor), ceil_pow2(m, m_floor), ceil_pow2(p, p_floor))
+
+
+class BucketedFleet(NamedTuple):
+    """A fleet split into shape buckets.
+
+    ``batches[i]`` is the stacked FleetBatch of bucket ``i`` (padded to that
+    bucket's power-of-two dims); ``tenant_idx[i]`` holds the ORIGINAL fleet
+    indices of its tenants, in their original relative order. Concatenating
+    ``tenant_idx`` is always a permutation of ``range(B)``."""
+
+    batches: List[FleetBatch]
+    tenant_idx: List[np.ndarray]
+
+    @property
+    def B(self) -> int:
+        return sum(len(idx) for idx in self.tenant_idx)
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.batches)
+
+
+def bucket_problems(problems: Sequence[AllocationProblem], *,
+                    n_floor: int = 8, m_floor: int = 2,
+                    p_floor: int = 2) -> BucketedFleet:
+    """Group ragged problems into power-of-two shape buckets and stack each.
+
+    Returns a BucketedFleet; use :func:`scatter_from_buckets` to restore
+    per-bucket results to the original tenant order. Buckets are emitted in
+    ascending shape order so the mapping is deterministic."""
+    assert len(problems) > 0, "empty fleet"
+    groups: Dict[Tuple[int, int, int], List[int]] = {}
+    for b, pb in enumerate(problems):
+        key = bucket_dims(int(pb.n), int(pb.m), int(pb.p), n_floor=n_floor,
+                          m_floor=m_floor, p_floor=p_floor)
+        groups.setdefault(key, []).append(b)
+    batches, idxs = [], []
+    for key in sorted(groups):
+        members = groups[key]
+        n_pad, m_pad, p_pad = key
+        batches.append(stack_problems([problems[b] for b in members],
+                                      n_max=n_pad, m_max=m_pad, p_max=p_pad))
+        idxs.append(np.asarray(members, np.int64))
+    return BucketedFleet(batches=batches, tenant_idx=idxs)
+
+
+def scatter_from_buckets(bucketed: BucketedFleet,
+                         rows_per_bucket: Sequence[Sequence]) -> List:
+    """Restore per-bucket, per-tenant rows to the original fleet order.
+
+    ``rows_per_bucket[i]`` must hold one entry per tenant of bucket ``i`` (in
+    the bucket's order). The inverse of the permutation ``bucket_problems``
+    applied — a round trip is exact for any payload type."""
+    out: List = [None] * bucketed.B
+    for idx, rows in zip(bucketed.tenant_idx, rows_per_bucket):
+        assert len(rows) == len(idx), (len(rows), len(idx))
+        for i, b in enumerate(idx):
+            out[int(b)] = rows[i]
+    return out
+
+
+def padding_stats(problems: Sequence[AllocationProblem],
+                  bucketed: Optional[BucketedFleet] = None) -> Dict[str, float]:
+    """Padding-waste accounting for a stacking strategy.
+
+    Counts K-matrix cells (the dominating leaf, m*n per tenant): ``true``
+    cells carry real data, ``padded`` is what gets allocated and computed on.
+    With ``bucketed=None`` the global single-batch pad (stack_problems) is
+    measured; otherwise the bucketed layout. ``waste_frac`` is the fraction
+    of compute spent on padding."""
+    true = float(sum(int(pb.m) * int(pb.n) for pb in problems))
+    if bucketed is None:
+        n_max = max(int(pb.n) for pb in problems)
+        m_max = max(int(pb.m) for pb in problems)
+        padded = float(len(problems) * m_max * n_max)
+    else:
+        padded = float(sum(
+            len(idx) * batch.problem.K.shape[1] * batch.problem.K.shape[2]
+            for idx, batch in zip(bucketed.tenant_idx, bucketed.batches)))
+    return dict(true_cells=true, padded_cells=padded,
+                waste_frac=1.0 - true / padded)

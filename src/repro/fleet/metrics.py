@@ -3,6 +3,15 @@
 Extends the paper's snapshot metrics (repro.core.metrics) along two axes:
 over TIME (cost integral, SLO-violation ticks, churn) and over the FLEET
 (tenant aggregates, optimizer-vs-CA deltas).
+
+Metric definitions (see docs/fleet.md for the full glossary):
+
+* cost integral — sum over ticks of the allocation's $/hr ($ for 1h ticks).
+* SLO-violation ticks — ticks where provided capacity < demand on any
+  resource (the snapshot metric's ``satisfied`` flag, counted over time).
+* churn — L1 distance between consecutive allocations, summed over ticks:
+  the number of node adds+removes the plan asked operations to execute.
+* fragmentation — providers in use per tick (mean over the trace).
 """
 from __future__ import annotations
 
@@ -35,6 +44,8 @@ class TenantReplayMetrics:
 
 def tenant_metrics(name: str, steps: Sequence[AllocationMetrics],
                    churns: Sequence[float]) -> TenantReplayMetrics:
+    """Integrate one tenant's per-tick snapshot metrics over the trace (see
+    the module docstring / docs/fleet.md for each metric's definition)."""
     costs = np.asarray([s.total_cost for s in steps], np.float64)
     return TenantReplayMetrics(
         name=name,
@@ -52,10 +63,15 @@ def tenant_metrics(name: str, steps: Sequence[AllocationMetrics],
 
 @dataclass
 class FleetReplayMetrics:
-    """Aggregate over all tenants; optionally paired with a CA baseline."""
+    """Aggregate over all tenants; optionally paired with a CA baseline.
+
+    ``replay_mode`` records which engine produced the histories
+    ("sequential" or "batched") — the numbers must agree between the two
+    (tests/fleet/test_replay.py enforces it), so this is provenance only."""
 
     tenants: List[TenantReplayMetrics]
     baseline: Optional[List[TenantReplayMetrics]] = None
+    replay_mode: str = "sequential"
 
     @property
     def total_cost_integral(self) -> float:
@@ -89,7 +105,8 @@ class FleetReplayMetrics:
     def summary(self) -> str:
         lines = [
             f"fleet of {len(self.tenants)} tenants, "
-            f"{self.tenants[0].ticks if self.tenants else 0} ticks",
+            f"{self.tenants[0].ticks if self.tenants else 0} ticks "
+            f"({self.replay_mode} replay)",
             f"  cost integral      : ${self.total_cost_integral:,.2f}",
             f"  SLO violation ticks: {self.total_slo_violation_ticks}",
             f"  total churn (L1)   : {self.total_churn:,.1f}",

@@ -7,11 +7,30 @@ The optimizer side uses the production control loop
 bounded churn. The CA side carries its node counts tick to tick exactly like
 the real autoscaler (scale-up on unschedulable demand, utilization-gated
 scale-down).
+
+Two replay engines drive the optimizer side (``replay_mode``):
+
+* ``"sequential"`` — the reference loop: one controller solve per tenant per
+  tick. Pays one XLA program dispatch (and, for ragged fleets, one compile
+  per distinct tenant shape) per tenant per tick.
+* ``"batched"`` — the fleet engine: tenants are grouped into power-of-two
+  shape buckets (``repro.fleet.batching.bucket_problems`` dims), and each
+  tick runs ONE ``solve_fleet`` call per bucket for the cold start and ONE
+  ``solve_fleet_step`` call per bucket for every warm tick, warm-started
+  from the previous tick's batched solution. Per-tenant problems, starts,
+  warm starts and churn bounds are identical to the sequential engine, so
+  per-tenant integer allocations (hence objectives and metrics) match the
+  sequential path on CPU — see tests/fleet/test_replay.py.
+
+Controller state (counts, churn, history, metrics) lives in the SAME
+per-tenant ``InfrastructureOptimizationController`` objects in both modes;
+the batched engine just computes the counts centrally and feeds them back
+via ``controller.apply_counts``. See docs/fleet.md for the full contract.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -22,7 +41,9 @@ from repro.core.controller import (ControllerStep,
 from repro.core.metrics import AllocationMetrics, evaluate
 from repro.core.problem import PenaltyParams
 
+from .batching import bucket_dims, embed_solutions, stack_problems
 from .metrics import FleetReplayMetrics, TenantReplayMetrics, tenant_metrics
+from .solver import make_fleet_starts, solve_fleet, solve_fleet_step
 
 
 @dataclass
@@ -42,6 +63,8 @@ class TenantSpec:
 
 @dataclass
 class TenantReplay:
+    """One tenant's replayed history plus its aggregated metrics."""
+
     spec: TenantSpec
     steps: List[ControllerStep]
     metrics: TenantReplayMetrics
@@ -51,6 +74,8 @@ class TenantReplay:
 
 @dataclass
 class FleetReplayResult:
+    """Everything a replay produced: per-tenant histories + fleet rollup."""
+
     tenants: List[TenantReplay]
     metrics: FleetReplayMetrics
 
@@ -71,6 +96,7 @@ def default_ca_pools(catalog: Catalog, demand: np.ndarray,
 
 def _replay_ca(catalog: Catalog, spec: TenantSpec, pool_idx: np.ndarray,
                expander: str, mode: str):
+    """Carry the Cluster-Autoscaler baseline tick to tick over one trace."""
     K, _, _ = catalog.matrices()
     counts_prev = np.zeros(catalog.n, np.float64)
     tick_metrics: List[AllocationMetrics] = []
@@ -87,38 +113,169 @@ def _replay_ca(catalog: Catalog, spec: TenantSpec, pool_idx: np.ndarray,
     return tick_metrics, churns, counts_prev
 
 
-def replay_tenant(catalog: Catalog, spec: TenantSpec, *,
-                  run_ca_baseline: bool = True,
-                  ca_expander: str = "random",
-                  ca_mode: str = "wave") -> TenantReplay:
+def _ca_baseline(catalog: Catalog, spec: TenantSpec, ca_expander: str,
+                 ca_mode: str):
+    """Run the CA baseline for one tenant (both replay modes share this)."""
     cat = spec.catalog or catalog
-    ctl = InfrastructureOptimizationController(
-        catalog=cat, delta_max=spec.delta_max, params=spec.params,
-        n_starts=spec.n_starts, allowed_idx=spec.allowed_idx)
-    steps = [ctl.step(demand) for demand in np.asarray(spec.trace, np.float64)]
+    pool_idx = (spec.ca_pool_idx if spec.ca_pool_idx is not None
+                else default_ca_pools(cat, np.asarray(spec.trace)[0]))
+    tick_metrics, churns, ca_counts = _replay_ca(
+        cat, spec, pool_idx, ca_expander, ca_mode)
+    return tenant_metrics(f"{spec.name}/ca", tick_metrics, churns), ca_counts
+
+
+def _make_controller(catalog: Catalog, spec: TenantSpec
+                     ) -> InfrastructureOptimizationController:
+    return InfrastructureOptimizationController(
+        catalog=spec.catalog or catalog, delta_max=spec.delta_max,
+        params=spec.params, n_starts=spec.n_starts,
+        allowed_idx=spec.allowed_idx)
+
+
+def _assemble_replay(catalog: Catalog, spec: TenantSpec,
+                     steps: List[ControllerStep], run_ca_baseline: bool,
+                     ca_expander: str, ca_mode: str) -> TenantReplay:
+    """Roll one tenant's step history into a TenantReplay (metrics + optional
+    CA baseline) — shared by both replay engines."""
     met = tenant_metrics(spec.name, [s.metrics for s in steps],
                          [s.churn for s in steps])
-
     ca_met, ca_counts = None, None
     if run_ca_baseline:
-        pool_idx = (spec.ca_pool_idx if spec.ca_pool_idx is not None
-                    else default_ca_pools(cat, np.asarray(spec.trace)[0]))
-        tick_metrics, churns, ca_counts = _replay_ca(
-            cat, spec, pool_idx, ca_expander, ca_mode)
-        ca_met = tenant_metrics(f"{spec.name}/ca", tick_metrics, churns)
+        ca_met, ca_counts = _ca_baseline(catalog, spec, ca_expander, ca_mode)
     return TenantReplay(spec=spec, steps=steps, metrics=met,
                         ca_metrics=ca_met, ca_counts=ca_counts)
 
 
+def replay_tenant(catalog: Catalog, spec: TenantSpec, *,
+                  run_ca_baseline: bool = True,
+                  ca_expander: str = "random",
+                  ca_mode: str = "wave") -> TenantReplay:
+    """Sequential reference replay of ONE tenant: a controller solve per tick
+    plus (optionally) the CA baseline on the same trace."""
+    ctl = _make_controller(catalog, spec)
+    steps = [ctl.step(demand) for demand in np.asarray(spec.trace, np.float64)]
+    return _assemble_replay(catalog, spec, steps, run_ca_baseline,
+                            ca_expander, ca_mode)
+
+
+# ---------------------------------------------------------------------------
+# batched fleet engine
+# ---------------------------------------------------------------------------
+
+
+def _replay_batch_groups(ctls: Sequence[InfrastructureOptimizationController],
+                         tenants: Sequence[TenantSpec]
+                         ) -> Dict[Tuple, List[int]]:
+    """Group tenant indices by (shape bucket, n_starts).
+
+    Tenant shapes are tick-invariant (the catalog fixes (n, m, p); demand
+    normalization rescales K but never reshapes it), so grouping happens once
+    per replay. ``n_starts`` joins the key because cold-start stacking needs
+    a uniform (B, S, n) start tensor per group."""
+    groups: Dict[Tuple, List[int]] = {}
+    for b, (ctl, spec) in enumerate(zip(ctls, tenants)):
+        cat = ctl.catalog
+        key = bucket_dims(cat.n, len(cat.matrices()[0]),
+                          len(cat.providers)) + (spec.n_starts,)
+        groups.setdefault(key, []).append(b)
+    return groups
+
+
+def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
+                          warm_start: str = "counts",
+                          solver_steps: int = 600,
+                          hot_loop: Optional[str] = None
+                          ) -> List[List[ControllerStep]]:
+    """Step ALL tenants through their traces with one batched solve per shape
+    bucket per tick. Returns per-tenant step histories (controller objects
+    hold the same state the sequential engine would leave behind)."""
+    assert warm_start in ("counts", "relaxed"), warm_start
+    assert len(tenants) > 0, "empty fleet"
+    traces = [np.asarray(spec.trace, np.float64) for spec in tenants]
+    T = traces[0].shape[0]
+    assert all(tr.shape[0] == T for tr in traces), \
+        "batched replay needs equal-length traces (pad or use sequential mode)"
+
+    ctls = [_make_controller(catalog, spec) for spec in tenants]
+    groups = _replay_batch_groups(ctls, tenants)
+    # previous tick's RELAXED batched solution per tenant (warm_start="relaxed")
+    x_rel_prev: List[Optional[np.ndarray]] = [None] * len(tenants)
+
+    for t in range(T):
+        probs = [ctl.make_problem(traces[b][t])
+                 for b, ctl in enumerate(ctls)]
+        for key, idx in sorted(groups.items()):
+            n_pad, m_pad, p_pad, n_starts = key
+            batch = stack_problems([probs[b] for b in idx],
+                                   n_max=n_pad, m_max=m_pad, p_max=p_pad)
+            if t == 0:
+                # cold start: one batched multistart solve for the bucket,
+                # per-tenant starts drawn at true shape (seed 0, as the
+                # sequential controller's multistart_solve does)
+                starts = make_fleet_starts(batch, n_starts, seed=0)
+                res = solve_fleet(batch, starts=starts, hot_loop=hot_loop)
+                X_int = np.asarray(res.x_int, np.float64)
+            else:
+                X_cur = embed_solutions(
+                    batch, [ctls[b].x_current for b in idx])
+                X_init = None
+                if warm_start == "relaxed" and x_rel_prev[idx[0]] is not None:
+                    X_init = embed_solutions(
+                        batch, [x_rel_prev[b] for b in idx])
+                delta = np.asarray([tenants[b].delta_max for b in idx],
+                                   np.float32)
+                res = solve_fleet_step(batch, X_cur, delta, x_init=X_init,
+                                       steps=solver_steps)
+                X_int = np.asarray(res.x_int, np.float64)
+            # only pay the relaxed-solution transfer when it will be used
+            X_rel = np.asarray(res.x) if warm_start == "relaxed" else None
+            for i, b in enumerate(idx):
+                n_true = int(batch.n_true[i])
+                ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
+                                     replanned=(t == 0))
+                if X_rel is not None:
+                    x_rel_prev[b] = X_rel[i, :n_true]
+    return [ctl.history for ctl in ctls]
+
+
 def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
+                 replay_mode: str = "sequential",
                  run_ca_baseline: bool = True,
                  ca_expander: str = "random",
-                 ca_mode: str = "wave") -> FleetReplayResult:
-    """Replay every tenant; returns per-tenant histories + fleet aggregates."""
-    replays = [replay_tenant(catalog, spec, run_ca_baseline=run_ca_baseline,
-                             ca_expander=ca_expander, ca_mode=ca_mode)
-               for spec in tenants]
+                 ca_mode: str = "wave",
+                 warm_start: str = "counts",
+                 hot_loop: Optional[str] = None) -> FleetReplayResult:
+    """Replay every tenant; returns per-tenant histories + fleet aggregates.
+
+    ``replay_mode`` selects the optimizer engine:
+
+    * ``"sequential"`` (reference) — one controller solve per tenant per tick.
+    * ``"batched"`` — one ``solve_fleet`` / ``solve_fleet_step`` call per
+      shape bucket per tick (see module docstring); requires equal-length
+      traces. Produces per-tenant integer allocations identical to the
+      sequential engine on CPU.
+
+    ``warm_start`` (batched mode only) picks the incremental solve's warm
+    start: ``"counts"`` (the previous integer allocation — what the
+    sequential controller uses) or ``"relaxed"`` (the previous tick's relaxed
+    batched solution). ``hot_loop`` forwards to :func:`solve_fleet` for the
+    cold-start solve. The CA baseline always replays sequentially — it is a
+    numpy simulation with no solver in the loop."""
+    assert replay_mode in ("sequential", "batched"), replay_mode
+    if replay_mode == "sequential":
+        replays = [replay_tenant(catalog, spec,
+                                 run_ca_baseline=run_ca_baseline,
+                                 ca_expander=ca_expander, ca_mode=ca_mode)
+                   for spec in tenants]
+    else:
+        histories = _replay_fleet_batched(catalog, tenants,
+                                          warm_start=warm_start,
+                                          hot_loop=hot_loop)
+        replays = [_assemble_replay(catalog, spec, steps, run_ca_baseline,
+                                    ca_expander, ca_mode)
+                   for spec, steps in zip(tenants, histories)]
     metrics = FleetReplayMetrics(
         tenants=[r.metrics for r in replays],
-        baseline=([r.ca_metrics for r in replays] if run_ca_baseline else None))
+        baseline=([r.ca_metrics for r in replays] if run_ca_baseline else None),
+        replay_mode=replay_mode)
     return FleetReplayResult(tenants=replays, metrics=metrics)

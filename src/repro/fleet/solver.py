@@ -22,7 +22,9 @@ from typing import NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.incremental import solve_incremental
 from repro.core.multistart import make_starts
 from repro.core.objective import is_feasible, objective
 from repro.core.problem import AllocationProblem
@@ -31,10 +33,13 @@ from repro.core.solver import SolverConfig, phase1_point, solve_relaxation
 from repro.kernels.alloc_objective.ops import fleet_value_and_grad
 from repro.kernels.alloc_objective.ref import alloc_objective_fleet_value
 
-from .batching import FleetBatch, stack_problems
+from .batching import (BucketedFleet, FleetBatch, bucket_problems,
+                       scatter_from_buckets, stack_problems, tenant_problem)
 
 
 class FleetSolveResult(NamedTuple):
+    """Per-tenant outputs of a batched fleet solve (leading axis = tenant)."""
+
     x: jnp.ndarray            # (B, n) best relaxed solution per tenant
     fun: jnp.ndarray          # (B,) objective at x
     x_int: jnp.ndarray        # (B, n) best rounded integer solution
@@ -289,12 +294,14 @@ def solve_fleet(
     agree with sequential solves to solver tolerance (per-tenant ~1e-2,
     fleet aggregate ~1e-3), while "vmap" agrees exactly.
     """
+    batch: Optional[FleetBatch] = None
     if isinstance(fleet, FleetBatch):
-        prob = fleet.problem
+        batch, prob = fleet, fleet.problem
     elif isinstance(fleet, AllocationProblem):
         prob = fleet
     else:
-        prob = stack_problems(list(fleet)).problem
+        batch = stack_problems(list(fleet))
+        prob = batch.problem
     cfg = cfg or SolverConfig()
     on_tpu = jax.default_backend() == "tpu"
     if hot_loop is None:
@@ -303,6 +310,144 @@ def solve_fleet(
     if interpret is None:
         interpret = not on_tpu
     if starts is None:
-        starts = jax.vmap(lambda pb: make_starts(pb, n_starts, seed))(prob)
+        if batch is not None:
+            # per-tenant starts at TRUE shapes: invariant to how the fleet
+            # is padded/bucketed, and identical to the starts a sequential
+            # multistart_solve on the original problem would draw
+            starts = make_fleet_starts(batch, n_starts, seed)
+        else:
+            starts = jax.vmap(lambda pb: make_starts(pb, n_starts, seed))(prob)
     return _solve_fleet_impl(prob, jnp.asarray(starts), cfg, hot_loop,
                              bool(interpret))
+
+
+def make_fleet_starts(batch: FleetBatch, n_starts: int,
+                      seed: int = 0) -> jnp.ndarray:
+    """(B, S, n_max) start points, drawn PER TENANT at its true shape.
+
+    ``core.multistart.make_starts`` shapes its random-start scaling by the
+    problem dimensions, so drawing on the padded batch would make start
+    points (hence solve results) depend on the fleet's padding. Drawing each
+    tenant at its true (n, m, p) and zero-embedding keeps solve_fleet results
+    independent of batch composition — bucketed and globally-padded stacking
+    see literally the same starts, as does a sequential per-tenant loop."""
+    out = np.zeros((batch.B, n_starts, batch.n_max), np.float32)
+    for b in range(batch.B):
+        pb = tenant_problem(batch, b)
+        out[b, :, : int(batch.n_true[b])] = np.asarray(
+            make_starts(pb, n_starts, seed))
+    return jnp.asarray(out)
+
+
+def solve_fleet_bucketed(
+    problems: Sequence[AllocationProblem],
+    n_starts: int = 4,
+    seed: int = 0,
+    cfg: Optional[SolverConfig] = None,
+    hot_loop: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    bucketed: Optional[BucketedFleet] = None,
+) -> FleetSolveResult:
+    """solve_fleet with shape-bucketed stacking (padding-waste reduction).
+
+    Groups the ragged fleet into power-of-two shape buckets
+    (:func:`repro.fleet.batching.bucket_problems`), runs one batched solve
+    per bucket, and scatters results back into the ORIGINAL tenant order.
+    Returns a FleetSolveResult padded to the global n_max, so callers can
+    treat it exactly like an unbucketed ``solve_fleet`` result.
+
+    Because start points are drawn per tenant at true shape
+    (:func:`make_fleet_starts`), per-tenant results match unbucketed
+    stacking to solver tolerance — and the rounded integer objectives are
+    identical in practice on CPU. ``bucketed`` lets callers reuse a
+    precomputed bucket layout (the replay engine re-stacks every tick but
+    buckets only once)."""
+    problems = list(problems)
+    if bucketed is None:
+        bucketed = bucket_problems(problems)
+    n_max = max(int(pb.n) for pb in problems)
+    results = [solve_fleet(b, n_starts=n_starts, seed=seed, cfg=cfg,
+                           hot_loop=hot_loop, interpret=interpret)
+               for b in bucketed.batches]
+
+    def to_n_max(a: np.ndarray, is_solution: bool) -> np.ndarray:
+        """Align a bucket's last axis to the global true n_max. Bucket pads
+        are powers of two, so they may exceed n_max (truncate: solution
+        columns past every member's true n are pinned-zero padding) or fall
+        short of it (zero-pad up)."""
+        a = np.asarray(a)
+        if not is_solution or a.shape[-1] == n_max:
+            return a
+        if a.shape[-1] > n_max:
+            return a[..., :n_max]
+        pad = [(0, 0)] * (a.ndim - 1) + [(0, n_max - a.shape[-1])]
+        return np.pad(a, pad)
+
+    def gather(field: str, is_solution: bool = False) -> jnp.ndarray:
+        rows = [list(to_n_max(getattr(r, field), is_solution))
+                for r in results]
+        return jnp.asarray(np.stack(scatter_from_buckets(bucketed, rows)))
+
+    return FleetSolveResult(
+        x=gather("x", is_solution=True), fun=gather("fun"),
+        x_int=gather("x_int", is_solution=True), fun_int=gather("fun_int"),
+        feasible=gather("feasible"), used_barrier=gather("used_barrier"),
+        all_fun=gather("all_fun"),
+        iters=jnp.asarray(sum(int(r.iters) for r in results)))
+
+
+# ---------------------------------------------------------------------------
+# batched incremental tick (the replay engine's warm-started per-tick solve)
+# ---------------------------------------------------------------------------
+
+
+class FleetStepResult(NamedTuple):
+    """One batched incremental tick over the whole fleet."""
+
+    x: jnp.ndarray         # (B, n) relaxed incremental solution
+    x_int: jnp.ndarray     # (B, n) rounded allocation actually deployed
+    fun_int: jnp.ndarray   # (B,) objective at x_int
+    feasible: jnp.ndarray  # (B,) integer-solution feasibility
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def _step_fleet_impl(prob: AllocationProblem, x_current: jnp.ndarray,
+                     delta_max: jnp.ndarray, x_init: jnp.ndarray,
+                     steps: int) -> FleetStepResult:
+    x_rel = jax.vmap(
+        lambda pb, xc, dm, xi: solve_incremental(pb, xc, dm, x_init=xi,
+                                                 steps=steps)
+    )(prob, x_current, delta_max, x_init)
+    x_int = jax.vmap(round_and_polish)(prob, x_rel)
+    f_int = jax.vmap(objective)(prob, x_int)
+    feas = jax.vmap(lambda pb, xi: is_feasible(pb, xi, 1e-3))(prob, x_int)
+    return FleetStepResult(x=x_rel, x_int=x_int, fun_int=f_int, feasible=feas)
+
+
+def solve_fleet_step(
+    fleet: Union[FleetBatch, AllocationProblem],
+    x_current: jnp.ndarray,
+    delta_max: Union[float, jnp.ndarray],
+    x_init: Optional[jnp.ndarray] = None,
+    steps: int = 600,
+) -> FleetStepResult:
+    """One incremental-adoption tick for EVERY tenant in one jitted program.
+
+    The fleet analogue of ``InfrastructureOptimizationController``'s warm
+    tick: per tenant, PGD on the objective constrained to the L1 churn ball
+    ``||x - x_current||_1 <= delta_max`` (``core.incremental``), then greedy
+    rounding — all under one vmap, so a T-tick replay issues T device
+    programs instead of T*B.
+
+    ``x_current`` is the (B, n) previous-tick allocation (also the warm
+    start); ``x_init`` optionally overrides the warm start, e.g. with the
+    previous tick's RELAXED batched solution. ``delta_max`` may be scalar or
+    per-tenant (B,). vmap preserves per-lane op structure, so each lane
+    matches a sequential ``solve_incremental`` + ``round_and_polish`` call
+    on the same padded problem."""
+    prob = fleet.problem if isinstance(fleet, FleetBatch) else fleet
+    B = prob.c.shape[0]
+    x_current = jnp.asarray(x_current, jnp.float32)
+    delta_max = jnp.broadcast_to(jnp.asarray(delta_max, jnp.float32), (B,))
+    x_init = x_current if x_init is None else jnp.asarray(x_init, jnp.float32)
+    return _step_fleet_impl(prob, x_current, delta_max, x_init, int(steps))

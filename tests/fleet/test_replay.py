@@ -100,6 +100,91 @@ def test_replay_with_ca_baseline_and_aggregates(tiny_catalog):
     assert m.summary()  # renders without error
 
 
+# ---------------------------------------------------------------------------
+# batched replay engine
+# ---------------------------------------------------------------------------
+
+def test_batched_replay_matches_sequential_exactly(tiny_catalog):
+    """Tentpole acceptance: the batched engine (one solve_fleet /
+    solve_fleet_step call per shape bucket per tick) must produce per-tenant
+    integer allocations — hence integer objectives, costs and churn —
+    IDENTICAL to the sequential per-tenant controller loop on CPU, including
+    on a ragged fleet where tenants are padded to different bucket shapes."""
+    cat = tiny_catalog
+    cat_other = Catalog(make_cloud_catalog().instances[::50])  # ragged shape
+    specs = [
+        TenantSpec(name="a", trace=diurnal_trace(BASE, 3, amplitude=0.3,
+                                                 noise=0.0), n_starts=2),
+        TenantSpec(name="b", trace=ramp_trace(BASE * 0.5, 3, end_scale=1.5,
+                                              noise=0.0), n_starts=2,
+                   catalog=cat_other, delta_max=4.0),
+        TenantSpec(name="c", trace=constant_trace(BASE, 3), n_starts=2),
+    ]
+    seq = replay_fleet(cat, specs, run_ca_baseline=False,
+                       replay_mode="sequential")
+    bat = replay_fleet(cat, specs, run_ca_baseline=False,
+                       replay_mode="batched")
+    assert bat.metrics.replay_mode == "batched"
+    for rs, rb in zip(seq.tenants, bat.tenants):
+        for ss, sb in zip(rs.steps, rb.steps):
+            np.testing.assert_array_equal(ss.counts, sb.counts)
+            assert ss.metrics.total_cost == sb.metrics.total_cost
+            assert ss.churn == sb.churn
+            assert ss.replanned == sb.replanned
+        assert rs.metrics.cost_integral == rb.metrics.cost_integral
+        assert rs.metrics.slo_violation_ticks == rb.metrics.slo_violation_ticks
+    assert (seq.metrics.total_cost_integral
+            == bat.metrics.total_cost_integral)
+
+
+def test_batched_cold_start_reproduces_single_shot(tiny_catalog):
+    """Satellite regression: the batched engine's cold-start path must also
+    reproduce the one-shot api.optimize result on a constant-demand trace
+    (the same guarantee the sequential path has)."""
+    cat = tiny_catalog
+    scen = Scenario(name="const", title="constant", demand=BASE.copy(),
+                    allowed_idx=None, pools=[], existing=np.zeros(cat.n))
+    ref = optimize(cat, scen, n_starts=2, seed=0)
+
+    spec = TenantSpec(name="t0", trace=constant_trace(BASE, 3), n_starts=2)
+    out = replay_fleet(cat, [spec], run_ca_baseline=False,
+                       replay_mode="batched")
+    steps = out.tenants[0].steps
+    np.testing.assert_allclose(steps[0].counts, ref.counts, atol=1e-6)
+    np.testing.assert_allclose(steps[0].metrics.total_cost,
+                               ref.metrics.total_cost, rtol=1e-6)
+    for s in steps[1:]:
+        assert s.metrics.satisfied
+        np.testing.assert_allclose(s.metrics.total_cost,
+                                   ref.metrics.total_cost, rtol=0.02)
+    assert out.tenants[0].metrics.slo_violation_ticks == 0
+
+
+def test_batched_replay_relaxed_warm_start_stays_feasible(tiny_catalog):
+    """warm_start="relaxed" (previous tick's relaxed batched solution) is an
+    optimization knob, not an equivalence mode — but it must stay feasible
+    and keep serving demand on a smooth trace."""
+    cat = tiny_catalog
+    spec = TenantSpec(name="w", trace=diurnal_trace(BASE, 4, amplitude=0.2,
+                                                    noise=0.0), n_starts=2)
+    out = replay_fleet(cat, [spec], run_ca_baseline=False,
+                       replay_mode="batched", warm_start="relaxed")
+    for s in out.tenants[0].steps:
+        assert s.metrics.satisfied
+
+
+def test_replay_mode_validation(tiny_catalog):
+    spec = TenantSpec(name="x", trace=constant_trace(BASE, 2), n_starts=2)
+    with pytest.raises(AssertionError):
+        replay_fleet(tiny_catalog, [spec], replay_mode="nope")
+    # batched mode requires equal-length traces
+    specs = [TenantSpec(name="a", trace=constant_trace(BASE, 2), n_starts=2),
+             TenantSpec(name="b", trace=constant_trace(BASE, 3), n_starts=2)]
+    with pytest.raises(AssertionError):
+        replay_fleet(tiny_catalog, specs, replay_mode="batched",
+                     run_ca_baseline=False)
+
+
 def test_replay_churn_is_bounded_on_smooth_trace(tiny_catalog):
     """On a gentle diurnal swing the warm-started controller should replan
     incrementally (bounded churn), never from scratch."""

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Documentation gate (``make docs-check``).
+
+Fails (exit 1) when:
+
+* a public module under ``src/repro/fleet/`` or ``src/repro/core/`` lacks a
+  module-level docstring,
+* a public (non-underscore) top-level function or class in those packages
+  lacks a docstring — NamedTuple/dataclass result containers included,
+* a ``docs/*.md`` page referenced from README.md does not exist, or any of
+  the canonical docs pages is missing entirely.
+
+Pure stdlib (ast) — no imports of the package, so it runs anywhere.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+CHECKED_PACKAGES = ("src/repro/fleet", "src/repro/core")
+REQUIRED_DOCS = ("docs/architecture.md", "docs/math.md", "docs/fleet.md")
+
+
+def iter_public_modules():
+    for pkg in CHECKED_PACKAGES:
+        for path in sorted((REPO / pkg).glob("*.py")):
+            yield path
+
+
+def check_module(path: Path):
+    """Return a list of problem strings for one module."""
+    problems = []
+    tree = ast.parse(path.read_text(), filename=str(path))
+    rel = path.relative_to(REPO)
+    if not ast.get_docstring(tree):
+        problems.append(f"{rel}: missing module docstring")
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            if node.name.startswith("_"):
+                continue
+            if not ast.get_docstring(node):
+                problems.append(
+                    f"{rel}:{node.lineno}: public "
+                    f"{'class' if isinstance(node, ast.ClassDef) else 'function'}"
+                    f" `{node.name}` missing docstring")
+    return problems
+
+
+def check_docs_tree():
+    problems = []
+    for doc in REQUIRED_DOCS:
+        if not (REPO / doc).is_file():
+            problems.append(f"{doc}: required docs page missing")
+    readme = (REPO / "README.md").read_text()
+    for link in re.findall(r"\]\((docs/[^)#]+)", readme):
+        if not (REPO / link).is_file():
+            problems.append(f"README.md links to missing page {link}")
+    if "docs/" not in readme:
+        problems.append("README.md does not link to the docs/ tree")
+    return problems
+
+
+def main() -> int:
+    problems = []
+    n_modules = 0
+    for path in iter_public_modules():
+        n_modules += 1
+        problems.extend(check_module(path))
+    problems.extend(check_docs_tree())
+    if problems:
+        print(f"[docs-check] FAILED — {len(problems)} problem(s):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"[docs-check] OK — {n_modules} modules documented, "
+          f"{len(REQUIRED_DOCS)} docs pages present, README links valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
