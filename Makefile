@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast docs-check bench bench-fleet example-fleet
+.PHONY: test test-fast docs-check bench bench-fleet bench-json example-fleet
 
 test:            ## tier-1 verify: the full test suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -18,6 +18,10 @@ bench:           ## full benchmark driver (writes benchmarks/artifacts/results.j
 
 bench-fleet:     ## fleet benchmark only (--quick for the 16-tenant variant)
 	PYTHONPATH=src $(PY) benchmarks/fleet_bench.py --quick
+
+bench-json:      ## quick fleet benchmark -> benchmarks/BENCH_fleet.json
+	PYTHONPATH=src $(PY) benchmarks/fleet_bench.py --quick \
+	    --json benchmarks/BENCH_fleet.json
 
 example-fleet:   ## trace-driven fleet replay demo (batched engine)
 	PYTHONPATH=src $(PY) examples/fleet_replay.py

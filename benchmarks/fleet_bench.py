@@ -1,7 +1,7 @@
 """Fleet subsystem benchmark: batched multi-tenant solving vs the naive
 per-problem Python loop.
 
-Five sections:
+Six sections:
   1. RAGGED fleet, end-to-end (the production case): every tenant has its own
      catalog slice shape, so the naive loop pays one XLA compile PER DISTINCT
      SHAPE while solve_fleet pads + compiles ONCE. This is where batching is
@@ -14,12 +14,22 @@ Five sections:
      global pad.
   5. REPLAY: end-to-end trace replay, batched engine (one solve per shape
      bucket per tick) vs the sequential per-tenant controller loop, on a
-     ragged fleet of per-tenant catalogs.
+     ragged fleet of per-tenant catalogs with RAGGED per-tenant horizons.
+  6. CA BASELINE: vectorized lockstep CA replay
+     (simulate_cluster_autoscaler_batch, one numpy program per tick for the
+     whole fleet) vs the sequential per-tenant simulator loop.
 
-Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--quick]
+Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--quick] [--json PATH]
+
+Every run also writes the machine-readable results to BENCH_fleet.json
+(default: benchmarks/BENCH_fleet.json) so the perf trajectory — batched
+replay speedup, padding-waste fractions, CA-replay throughput — is tracked
+across PRs instead of living only in printed prose.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -29,9 +39,12 @@ from repro.core import Catalog, SolverConfig, make_cloud_catalog, multistart_sol
 from repro.fleet import (TenantSpec, bucket_problems, make_trace,
                          padding_stats, replay_fleet, solve_fleet,
                          solve_fleet_bucketed, stack_problems)
+from repro.fleet.replay import _ca_baseline, _replay_ca_fleet
 from repro.testing import make_toy_problem
 
 CFG = SolverConfig()
+DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_fleet.json")
 
 
 def _ragged_fleet(B: int):
@@ -135,6 +148,9 @@ def run(B: int = 64, n_starts: int = 4):
 
     # ---- 5. batched vs sequential trace replay -----------------------------
     out["replay"] = run_replay(B)
+
+    # ---- 6. vectorized vs sequential CA baseline replay --------------------
+    out["ca_replay"] = run_ca_replay(B)
     return out
 
 
@@ -190,33 +206,37 @@ def run_replay(B: int = 64, T: int = 3):
     Every tenant gets its own catalog slice (a distinct (n,) shape), so the
     sequential loop pays one multistart compile + one incremental-solve
     compile per tenant, while the batched engine compiles once per occupied
-    shape bucket and steps the whole fleet per tick."""
+    shape bucket and steps the whole fleet per tick. Horizons are RAGGED
+    (lengths cycle through T, T-1, ..., 1): finished tenants freeze in their
+    batch lanes (active masks) and the engines must still agree."""
     full = make_cloud_catalog()
     base = np.array([8.0, 16.0, 4.0, 100.0])
     specs = []
     for s in range(B):
         cat = Catalog(full.instances[s % 7:: 20 + s])  # n ~ 23..94, ragged
+        T_s = T - s % T if B >= T else T               # horizons T..1
         specs.append(TenantSpec(
             name=f"t{s:02d}", catalog=cat,
-            trace=make_trace("diurnal", base * (0.5 + (s % 5) / 4), T,
+            trace=make_trace("diurnal", base * (0.5 + (s % 5) / 4), T_s,
                              seed=s, amplitude=0.3),
             n_starts=2))
     shapes = {spec.catalog.n for spec in specs}
-    print(f"[replay] ragged B={B} fleet, T={T} ticks, "
-          f"{len(shapes)} distinct catalog shapes")
+    ticks = sum(spec.trace.shape[0] for spec in specs)
+    print(f"[replay] ragged B={B} fleet, {ticks} tenant-ticks "
+          f"(ragged horizons 1..{T}), {len(shapes)} distinct catalog shapes")
 
     t0 = time.time()
     bat = replay_fleet(full, specs, run_ca_baseline=False,
                        replay_mode="batched")
     t_batched = time.time() - t0
     print(f"  batched    : {t_batched:7.1f}s "
-          f"({B * T / t_batched:6.1f} tenant-ticks/s)")
+          f"({ticks / t_batched:6.1f} tenant-ticks/s)")
     t0 = time.time()
     seq = replay_fleet(full, specs, run_ca_baseline=False,
                        replay_mode="sequential")
     t_seq = time.time() - t0
     print(f"  sequential : {t_seq:7.1f}s "
-          f"({B * T / t_seq:6.1f} tenant-ticks/s)")
+          f"({ticks / t_seq:6.1f} tenant-ticks/s)")
     speedup = t_seq / t_batched
     cost_s = seq.metrics.total_cost_integral
     cost_b = bat.metrics.total_cost_integral
@@ -224,10 +244,61 @@ def run_replay(B: int = 64, T: int = 3):
     print(f"  speedup    : {speedup:.1f}x   "
           f"(cost integral agreement: {drift:.2e} rel)")
     return dict(t_batched=t_batched, t_sequential=t_seq, speedup=speedup,
-                cost_batched=cost_b, cost_sequential=cost_s,
-                cost_rel_drift=drift, distinct_shapes=len(shapes))
+                tenant_ticks=ticks, cost_batched=cost_b,
+                cost_sequential=cost_s, cost_rel_drift=drift,
+                distinct_shapes=len(shapes))
+
+
+def run_ca_replay(B: int = 64, T: int = 24):
+    """CA baseline replay throughput: vectorized lockstep stepper vs the
+    sequential per-tenant simulator loop, one shared catalog (the vectorized
+    engine batches per distinct catalog), diurnal+ramp mix over T ticks."""
+    cat = Catalog(make_cloud_catalog().instances[::20])
+    base = np.array([8.0, 16.0, 4.0, 100.0])
+    specs = [TenantSpec(
+        name=f"ca{s:02d}",
+        trace=make_trace("ramp" if s % 3 else "diurnal",
+                         base * (0.5 + (s % 5) / 4), T, seed=s),
+        n_starts=2) for s in range(B)]
+    ticks = B * T
+    print(f"[ca-replay] B={B} fleet, T={T} ticks, catalog n={cat.n}")
+    t0 = time.time()
+    vec = _replay_ca_fleet(cat, specs, "random", "wave")
+    t_vec = time.time() - t0
+    print(f"  vectorized : {t_vec:7.1f}s ({ticks / t_vec:7.1f} tenant-ticks/s)")
+    t0 = time.time()
+    seq = [_ca_baseline(cat, spec, "random", "wave") for spec in specs]
+    t_seq = time.time() - t0
+    print(f"  sequential : {t_seq:7.1f}s ({ticks / t_seq:7.1f} tenant-ticks/s)")
+    cost_v = sum(m.cost_integral for m, _ in vec)
+    cost_s = sum(m.cost_integral for m, _ in seq)
+    agree = bool(all(np.array_equal(cv, cs) for (_, cv), (_, cs)
+                     in zip(vec, seq)))
+    print(f"  speedup    : {t_seq / t_vec:.1f}x   "
+          f"(final counts identical: {agree})")
+    assert abs(cost_v - cost_s) <= 1e-9 * max(abs(cost_s), 1.0)
+    return dict(t_vectorized=t_vec, t_sequential=t_seq,
+                speedup=t_seq / t_vec, tenant_ticks=ticks,
+                ticks_per_s_vectorized=ticks / t_vec,
+                ticks_per_s_sequential=ticks / t_seq,
+                counts_identical=agree, cost_integral=cost_v)
+
+
+def main(argv):
+    quick = "--quick" in argv
+    json_path = DEFAULT_JSON
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            raise SystemExit("--json requires a path argument")
+        json_path = argv[i + 1]
+    out = run(B=16 if quick else 64)
+    out["config"] = dict(quick=quick, B=16 if quick else 64)
+    with open(json_path, "w") as fh:
+        json.dump(out, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"\n[json] wrote {json_path}")
 
 
 if __name__ == "__main__":
-    quick = "--quick" in sys.argv
-    run(B=16 if quick else 64)
+    main(sys.argv[1:])

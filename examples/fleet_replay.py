@@ -4,6 +4,8 @@ replayed through the Infrastructure Optimization Controller with warm starts
 and bounded churn, against the Cluster Autoscaler baseline on the SAME
 traces. Uses the BATCHED engine: every tick steps all tenants through one
 solve_fleet / solve_fleet_step call per shape bucket (docs/fleet.md).
+Horizons are RAGGED — the launch event ends before the fleet horizon, so
+that tenant freezes mid-replay and stops accruing cost/churn.
 
   PYTHONPATH=src python examples/fleet_replay.py
 """
@@ -27,8 +29,8 @@ def main():
                                     seed=1, amplitude=0.4)),
         TenantSpec(name="launch-flashcrowd",
                    trace=make_trace("flash_crowd",
-                                    np.array([4, 8, 2, 50.0]), T,
-                                    seed=2, burst_scale=3.0),
+                                    np.array([4, 8, 2, 50.0]), 3 * T // 4,
+                                    seed=2, burst_scale=3.0),  # ragged: ends early
                    delta_max=16.0),     # allow faster reaction to the spike
         TenantSpec(name="adoption-ramp",
                    trace=make_trace("ramp", np.array([6, 24, 3, 150.0]), T,

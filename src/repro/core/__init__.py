@@ -14,7 +14,8 @@ from .branch_bound import branch_and_bound, BnBResult
 from .incremental import project_l1_ball, project_incremental, solve_incremental
 from .kkt import kkt_report, KKTReport
 from .catalog import Catalog, InstanceType, make_cloud_catalog, make_tpu_catalog
-from .autoscaler import NodePool, simulate_cluster_autoscaler, default_pools_for
+from .autoscaler import (NodePool, simulate_cluster_autoscaler,
+                         simulate_cluster_autoscaler_batch, default_pools_for)
 from .metrics import AllocationMetrics, evaluate, per_dim_utilization
 from .scenarios import Scenario, build_scenarios, scaled_scenario
 from .api import (optimize, problem_from_demand, problem_from_scenario,
@@ -31,7 +32,7 @@ __all__ = [
     "BnBResult", "project_l1_ball", "project_incremental", "solve_incremental",
     "kkt_report", "KKTReport", "Catalog", "InstanceType", "make_cloud_catalog",
     "make_tpu_catalog", "NodePool", "simulate_cluster_autoscaler",
-    "default_pools_for", "AllocationMetrics", "evaluate", "per_dim_utilization",
+    "simulate_cluster_autoscaler_batch", "default_pools_for", "AllocationMetrics", "evaluate", "per_dim_utilization",
     "Scenario", "build_scenarios", "scaled_scenario", "optimize",
     "problem_from_demand", "problem_from_scenario", "OptimizeResult",
     "InfrastructureOptimizationController", "ControllerStep", "grid_search",

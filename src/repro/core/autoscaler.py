@@ -90,7 +90,12 @@ def simulate_cluster_autoscaler(
     for pool in pools:
         counts[pool.instance_idx] += pool.count
 
-    pool_caps = {p.instance_idx: p.max_count for p in pools}
+    # Aggregate caps per instance type: several pools may share a type (e.g.
+    # per-zone pools of one machine family) and their counts/min_counts are
+    # already summed, so the headroom must be the SUM of max_counts too.
+    pool_caps: dict = {}
+    for p in pools:
+        pool_caps[p.instance_idx] = pool_caps.get(p.instance_idx, 0) + p.max_count
     it = 0
     while it < max_iters:
         it += 1
@@ -157,6 +162,155 @@ def simulate_cluster_autoscaler(
     satisfied = bool(np.all(_provided(K, counts) >= demand - 1e-9))
     return CAResult(counts=counts, cost=float(c @ counts), iterations=it,
                     satisfied=satisfied)
+
+
+def simulate_cluster_autoscaler_batch(
+    catalog: Catalog,
+    pools: Sequence,
+    demands: np.ndarray,
+    max_iters: int = 100_000,
+    expander: str = "random",
+    scale_down: str = "utilization",
+    mode: str = "wave",
+    seed: int = 0,
+) -> List[CAResult]:
+    """Vectorized CA: step B tenants' simulations in lockstep over one shared
+    catalog, returning exactly what B :func:`simulate_cluster_autoscaler`
+    calls would (the sequential simulator stays the test oracle —
+    tests/core/test_autoscaler.py sweeps both and asserts equal counts).
+
+    ``pools`` is either one pool list shared by every tenant or a sequence of
+    B per-tenant pool lists; ``demands`` is (B, m). Each tenant draws from
+    its own ``default_rng(seed)`` stream in the same order as its sequential
+    run, so ``expander="random"`` matches too.
+
+    The heavy inner work — deficit evaluation during scale-up and the
+    feasibility/utilization checks during scale-down — runs as ONE numpy
+    matmul over all still-active tenants per lockstep iteration, instead of a
+    Python loop of per-tenant matvecs. Tenants that finish (satisfied, capped
+    out, or converged scale-down) drop out of the active set; finished-tenant
+    rows are never recomputed. Wave-mode scale-up uses a closed-form unit
+    count verified against the sequential one-node-at-a-time predicate, so
+    pathological cap-out waves cost O(1) matvecs instead of O(max_count)."""
+    K, _, c = catalog.matrices()
+    n = catalog.n
+    demands = np.asarray(demands, np.float64)
+    assert demands.ndim == 2, "demands must be (B, m)"
+    B = demands.shape[0]
+    if B > 0 and (len(pools) == 0 or isinstance(pools[0], NodePool)):
+        pools = [pools] * B
+    assert len(pools) == B, (len(pools), B)
+
+    counts = np.zeros((B, n), np.float64)
+    caps = np.zeros((B, n), np.float64)
+    floors = np.zeros((B, n), np.float64)
+    pool_js: List[List[int]] = []
+    for b, ps in enumerate(pools):
+        for p in ps:
+            counts[b, p.instance_idx] += p.count
+            caps[b, p.instance_idx] += p.max_count   # aggregated, as sequential
+            floors[b, p.instance_idx] += p.min_count
+        pool_js.append([int(p.instance_idx) for p in ps])
+    rngs = [np.random.default_rng(seed) for _ in range(B)]
+
+    def _fits(b: int, j: int, u: float) -> bool:
+        """The sequential wave predicate, fresh matvec included."""
+        trial = counts[b].copy()
+        trial[j] += u
+        return bool(np.all(demands[b] - _provided(K, trial) <= 1e-9))
+
+    # ---- scale-up: lockstep over tenants still scaling ----------------------
+    it = np.zeros(B, np.int64)
+    done = np.zeros(B, bool)
+    while True:
+        act = np.nonzero(~done & (it < max_iters))[0]
+        if act.size == 0:
+            break
+        it[act] += 1
+        deficit = demands[act] - counts[act] @ K.T               # (A, m)
+        sat = np.all(deficit <= 1e-9, axis=1)
+        done[act[sat]] = True
+        r_star = np.argmax(deficit / np.maximum(demands[act], 1e-9), axis=1)
+        for a, b in enumerate(act):
+            if sat[a]:
+                continue
+            r = int(r_star[a])
+            cands = [j for j in pool_js[b]
+                     if K[r, j] > 0 and counts[b, j] + 1 <= caps[b, j]]
+            if not cands:
+                done[b] = True       # nothing scalable — unsatisfiable
+                continue
+            if expander == "random":
+                best_j = int(rngs[b].choice(cands))
+            elif expander == "first-fit":
+                best_j = cands[0]
+            elif expander == "least-waste":
+                best_j, best_waste = None, np.inf
+                for j in cands:
+                    add = K[:, j]
+                    used = np.minimum(add, np.maximum(deficit[a], 0.0))
+                    waste = 1.0 - (used.sum() / max(add.sum(), 1e-9))
+                    if waste < best_waste - 1e-12:
+                        best_waste, best_j = waste, j
+            else:
+                raise ValueError(f"unknown expander {expander!r}")
+            if mode == "wave":
+                # closed-form unit count for "add nodes until the pending
+                # demand fits or the pool caps out", then verify/adjust with
+                # the sequential predicate (guards the 1e-9 boundary ulps)
+                head = int(caps[b, best_j] - counts[b, best_j])
+                kj = K[:, best_j]
+                if np.any((kj <= 0) & (deficit[a] > 1e-9)):
+                    u = head                     # never fits: cap out
+                else:
+                    need = (deficit[a] - 1e-9) / np.where(kj > 0, kj, np.inf)
+                    u = int(min(max(np.ceil(need.max()), 1.0), head))
+                while u < head and not _fits(b, best_j, u):
+                    u += 1
+                while u > 1 and _fits(b, best_j, u - 1):
+                    u -= 1
+                counts[b, best_j] += u
+            else:
+                counts[b, best_j] += 1
+
+    # ---- scale-down: lockstep sweeps until no tenant changes ----------------
+    if scale_down != "none":
+        order = np.argsort(-c)
+        while True:
+            changed = np.zeros(B, bool)
+            for j in order:
+                # only tenants actually holding removable nodes of type j
+                # (as sequential's `counts[j] > floor_j` gate, hoisted so
+                # unheld types cost no matmul at all)
+                live = np.nonzero(counts[:, j] > floors[:, j])[0]
+                if not live.size:
+                    continue
+                kj = K[:, j]
+                kj_sum = max(kj.sum(), 1e-9)
+                while live.size:
+                    sub = counts[live]
+                    provided = sub @ K.T
+                    trial = sub.copy()
+                    trial[:, j] -= 1.0
+                    ok = ((sub[:, j] > floors[live, j])
+                          & np.all(trial @ K.T >= demands[live] - 1e-9, axis=1))
+                    if scale_down == "utilization":
+                        surplus = provided - demands[live]
+                        node_used = np.minimum(
+                            kj[None, :], np.maximum(kj[None, :] - surplus, 0.0))
+                        ok &= node_used.sum(axis=1) / kj_sum < 0.5
+                    live = live[ok]
+                    counts[live, j] -= 1.0
+                    changed[live] = True
+            if not changed.any():
+                break
+
+    provided = counts @ K.T
+    satisfied = np.all(provided >= demands - 1e-9, axis=1)
+    costs = counts @ c
+    return [CAResult(counts=counts[b].copy(), cost=float(costs[b]),
+                     iterations=int(it[b]), satisfied=bool(satisfied[b]))
+            for b in range(B)]
 
 
 def default_pools_for(catalog: Catalog, idxs: Sequence[int],

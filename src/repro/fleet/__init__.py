@@ -17,8 +17,11 @@ tenant clusters a first-class path:
                  crowd, ramp, weekly seasonality).
   * replay     — step every tenant's controller through a trace (warm starts,
                  bounded churn), sequentially or with one batched solve per
-                 shape bucket per tick (``replay_mode="batched"``), and run
-                 the CA baseline on the same traces.
+                 shape bucket per tick (``replay_mode="batched"``; ragged
+                 per-tenant horizons freeze finished tenants via active
+                 masks), and run the CA baseline on the same traces — pools
+                 sized from each trace's peak demand, replayed by the
+                 vectorized lockstep stepper by default.
   * metrics    — fleet/time aggregation: cost integral, SLO-violation ticks,
                  churn, fragmentation.
 

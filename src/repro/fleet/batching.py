@@ -41,12 +41,20 @@ from repro.core.problem import AllocationProblem, PenaltyParams
 
 
 class FleetBatch(NamedTuple):
-    """A stacked fleet. ``problem`` leaves have a leading (B,) axis."""
+    """A stacked fleet. ``problem`` leaves have a leading (B,) axis.
+
+    ``active`` is the per-tenant liveness mask for ragged-horizon replays:
+    ``None`` (the default) means every row is live; a (B,) bool array marks
+    rows whose trace has expired as frozen. Frozen rows still occupy their
+    batch lane (shapes — hence compiled programs — never change), but
+    :func:`repro.fleet.solver.solve_fleet_step` returns their warm start
+    untouched instead of a new solution."""
 
     problem: AllocationProblem
     n_true: np.ndarray          # (B,) original variable counts
     m_true: np.ndarray          # (B,) original resource counts
     p_true: np.ndarray          # (B,) original provider counts
+    active: Optional[np.ndarray] = None   # (B,) bool liveness mask (None: all)
 
     @property
     def B(self) -> int:
@@ -55,6 +63,13 @@ class FleetBatch(NamedTuple):
     @property
     def n_max(self) -> int:
         return self.problem.c.shape[1]
+
+    @property
+    def active_mask(self) -> np.ndarray:
+        """The (B,) liveness mask, materialized (all-true when unset)."""
+        if self.active is None:
+            return np.ones(self.B, bool)
+        return np.asarray(self.active, bool)
 
 
 def _pad2(a: np.ndarray, rows: int, cols: int) -> np.ndarray:
@@ -72,9 +87,17 @@ def _pad1(a: np.ndarray, size: int, fill: float = 0.0) -> np.ndarray:
 def stack_problems(problems: Sequence[AllocationProblem],
                    n_max: Optional[int] = None,
                    m_max: Optional[int] = None,
-                   p_max: Optional[int] = None) -> FleetBatch:
-    """Stack ragged problems into one padded batch problem."""
+                   p_max: Optional[int] = None,
+                   active: Optional[np.ndarray] = None) -> FleetBatch:
+    """Stack ragged problems into one padded batch problem.
+
+    ``active`` optionally attaches a (B,) per-tenant liveness mask (see
+    :class:`FleetBatch`); stacking itself treats live and frozen tenants
+    identically."""
     assert len(problems) > 0, "empty fleet"
+    if active is not None:
+        active = np.asarray(active, bool)
+        assert active.shape == (len(problems),), active.shape
     ns = [int(pb.n) for pb in problems]
     ms = [int(pb.m) for pb in problems]
     ps = [int(pb.p) for pb in problems]
@@ -111,7 +134,8 @@ def stack_problems(problems: Sequence[AllocationProblem],
     return FleetBatch(problem=stacked,
                       n_true=np.asarray(ns, np.int64),
                       m_true=np.asarray(ms, np.int64),
-                      p_true=np.asarray(ps, np.int64))
+                      p_true=np.asarray(ps, np.int64),
+                      active=active)
 
 
 def unstack_solution(batch: FleetBatch, X) -> List[np.ndarray]:

@@ -90,6 +90,12 @@ class FleetReplayMetrics:
         return float(np.mean([t.mean_fragmentation for t in self.tenants]))
 
     @property
+    def total_tenant_ticks(self) -> int:
+        """Sum of per-tenant tick counts — the fleet's unit of replayed work
+        (tenant-ticks), well-defined for ragged horizons."""
+        return sum(t.ticks for t in self.tenants)
+
+    @property
     def baseline_cost_integral(self) -> Optional[float]:
         if self.baseline is None:
             return None
@@ -103,9 +109,17 @@ class FleetReplayMetrics:
         return 100.0 * (base - self.total_cost_integral) / base
 
     def summary(self) -> str:
+        # horizons may be ragged — report the range, not tenants[0]'s length
+        ticks = sorted({t.ticks for t in self.tenants})
+        if not ticks:
+            horizon = "0 ticks"
+        elif len(ticks) == 1:
+            horizon = f"{ticks[0]} ticks"
+        else:
+            horizon = (f"{self.total_tenant_ticks} tenant-ticks "
+                       f"(ragged horizons {ticks[0]}-{ticks[-1]})")
         lines = [
-            f"fleet of {len(self.tenants)} tenants, "
-            f"{self.tenants[0].ticks if self.tenants else 0} ticks "
+            f"fleet of {len(self.tenants)} tenants, {horizon} "
             f"({self.replay_mode} replay)",
             f"  cost integral      : ${self.total_cost_integral:,.2f}",
             f"  SLO violation ticks: {self.total_slo_violation_ticks}",

@@ -22,10 +22,28 @@ Two replay engines drive the optimizer side (``replay_mode``):
   per-tenant integer allocations (hence objectives and metrics) match the
   sequential path on CPU — see tests/fleet/test_replay.py.
 
+Traces may be RAGGED (different per-tenant lengths): the batched engine
+keeps every tenant in its batch lane for the full fleet horizon but marks
+expired tenants frozen via a per-tenant active mask (``FleetBatch.active``).
+Frozen rows keep their last allocation as a fixed warm start, are returned
+untouched by ``solve_fleet_step``, and contribute no further churn, cost or
+SLO metrics — exactly like a sequential replay that simply stops stepping
+that tenant at the end of its trace.
+
 Controller state (counts, churn, history, metrics) lives in the SAME
 per-tenant ``InfrastructureOptimizationController`` objects in both modes;
 the batched engine just computes the counts centrally and feeds them back
 via ``controller.apply_counts``. See docs/fleet.md for the full contract.
+
+The CA baseline sizes each tenant's node pools from the trace's PER-RESOURCE
+PEAK demand (``trace.max(axis=0)``) — sizing from any single tick would hand
+the baseline a pool set that cannot schedule the peak of a ramp or flash
+crowd, producing structurally-unsatisfiable ticks that unfairly inflate
+``cost_savings_vs_baseline_pct``. By default the whole baseline fleet is
+replayed by the vectorized lockstep stepper
+(``simulate_cluster_autoscaler_batch``, one tenant-batched numpy program per
+tick per distinct catalog); ``ca_engine="sequential"`` keeps the per-tenant
+oracle loop, and the two agree tick-for-tick.
 """
 from __future__ import annotations
 
@@ -34,7 +52,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.autoscaler import default_pools_for, simulate_cluster_autoscaler
+from repro.core.autoscaler import (default_pools_for,
+                                   simulate_cluster_autoscaler,
+                                   simulate_cluster_autoscaler_batch)
 from repro.core.catalog import Catalog
 from repro.core.controller import (ControllerStep,
                                    InfrastructureOptimizationController)
@@ -83,7 +103,13 @@ class FleetReplayResult:
 def default_ca_pools(catalog: Catalog, demand: np.ndarray,
                      k: int = 8) -> np.ndarray:
     """The k most cost-efficient single-type covers of ``demand`` — the node
-    pools an operator would plausibly configure for this workload."""
+    pools an operator would plausibly configure for this workload.
+
+    For trace replays, ``demand`` must be the trace's PER-RESOURCE PEAK
+    (``trace.max(axis=0)``), not a single tick: an operator provisions pools
+    for the load they expect, and sizing from e.g. the first tick of a ramp
+    leaves the baseline structurally unable to schedule the peak — phantom
+    SLO violations that would inflate the optimizer's reported savings."""
     K, _, c = catalog.matrices()
     d = np.asarray(demand, np.float64)
     safe_K = np.where(K > 0, K, 1e-9)
@@ -113,15 +139,71 @@ def _replay_ca(catalog: Catalog, spec: TenantSpec, pool_idx: np.ndarray,
     return tick_metrics, churns, counts_prev
 
 
+def _ca_pool_idx(cat: Catalog, spec: TenantSpec) -> np.ndarray:
+    """The tenant's CA node-pool types: explicit ``ca_pool_idx``, else pools
+    sized from the trace's per-resource peak demand (the bugfixed default —
+    see :func:`default_ca_pools`)."""
+    if spec.ca_pool_idx is not None:
+        return spec.ca_pool_idx
+    return default_ca_pools(cat, np.asarray(spec.trace, np.float64).max(axis=0))
+
+
 def _ca_baseline(catalog: Catalog, spec: TenantSpec, ca_expander: str,
                  ca_mode: str):
-    """Run the CA baseline for one tenant (both replay modes share this)."""
+    """Run the sequential-oracle CA baseline for one tenant."""
     cat = spec.catalog or catalog
-    pool_idx = (spec.ca_pool_idx if spec.ca_pool_idx is not None
-                else default_ca_pools(cat, np.asarray(spec.trace)[0]))
     tick_metrics, churns, ca_counts = _replay_ca(
-        cat, spec, pool_idx, ca_expander, ca_mode)
+        cat, spec, _ca_pool_idx(cat, spec), ca_expander, ca_mode)
     return tenant_metrics(f"{spec.name}/ca", tick_metrics, churns), ca_counts
+
+
+def _replay_ca_fleet(catalog: Catalog, tenants: Sequence[TenantSpec],
+                     expander: str, mode: str):
+    """Vectorized CA baseline replay: carry ALL tenants' pool counts tick to
+    tick at once.
+
+    Tenants are grouped by (shared) catalog; each group advances through one
+    :func:`simulate_cluster_autoscaler_batch` call per tick — the per-tick
+    deficit/feasibility linear algebra is one numpy matmul over the group
+    instead of a Python loop of per-tenant matvecs. Ragged traces are
+    supported: a tenant leaves its group's active set when its trace ends.
+    Results are tick-for-tick identical to the sequential per-tenant loop
+    (``ca_engine="sequential"``), which stays the test oracle.
+
+    Returns one ``(TenantReplayMetrics, final_counts)`` pair per tenant."""
+    cats = [spec.catalog or catalog for spec in tenants]
+    groups: Dict[int, List[int]] = {}
+    for i, cat in enumerate(cats):
+        groups.setdefault(id(cat), []).append(i)
+    out: List = [None] * len(tenants)
+    for idx in groups.values():
+        cat = cats[idx[0]]
+        traces = [np.asarray(tenants[i].trace, np.float64) for i in idx]
+        pool_idx = [_ca_pool_idx(cat, tenants[i]) for i in idx]
+        counts = np.zeros((len(idx), cat.n), np.float64)
+        tick_metrics: List[List[AllocationMetrics]] = [[] for _ in idx]
+        churns: List[List[float]] = [[] for _ in idx]
+        for t in range(max(tr.shape[0] for tr in traces)):
+            act = [k for k, tr in enumerate(traces) if t < tr.shape[0]]
+            demands = np.stack([traces[k][t] for k in act])
+            pools_t = []
+            for k in act:
+                existing = {int(j): int(counts[k, j])
+                            for j in np.nonzero(counts[k])[0]}
+                pools_t.append(default_pools_for(cat, pool_idx[k],
+                                                 existing=existing))
+            res = simulate_cluster_autoscaler_batch(cat, pools_t, demands,
+                                                    expander=expander,
+                                                    mode=mode)
+            for k, r in zip(act, res):
+                churns[k].append(float(np.abs(r.counts - counts[k]).sum()))
+                counts[k] = r.counts
+                tick_metrics[k].append(evaluate(cat, r.counts, traces[k][t]))
+        for pos, i in enumerate(idx):
+            out[i] = (tenant_metrics(f"{tenants[i].name}/ca",
+                                     tick_metrics[pos], churns[pos]),
+                      counts[pos].copy())
+    return out
 
 
 def _make_controller(catalog: Catalog, spec: TenantSpec
@@ -132,16 +214,14 @@ def _make_controller(catalog: Catalog, spec: TenantSpec
         allowed_idx=spec.allowed_idx)
 
 
-def _assemble_replay(catalog: Catalog, spec: TenantSpec,
-                     steps: List[ControllerStep], run_ca_baseline: bool,
-                     ca_expander: str, ca_mode: str) -> TenantReplay:
-    """Roll one tenant's step history into a TenantReplay (metrics + optional
-    CA baseline) — shared by both replay engines."""
+def _assemble_replay(spec: TenantSpec, steps: List[ControllerStep],
+                     ca: Optional[Tuple]) -> TenantReplay:
+    """Roll one tenant's step history (plus a precomputed CA baseline
+    ``(metrics, counts)`` pair, or None) into a TenantReplay — shared by
+    both replay engines."""
     met = tenant_metrics(spec.name, [s.metrics for s in steps],
                          [s.churn for s in steps])
-    ca_met, ca_counts = None, None
-    if run_ca_baseline:
-        ca_met, ca_counts = _ca_baseline(catalog, spec, ca_expander, ca_mode)
+    ca_met, ca_counts = ca if ca is not None else (None, None)
     return TenantReplay(spec=spec, steps=steps, metrics=met,
                         ca_metrics=ca_met, ca_counts=ca_counts)
 
@@ -154,8 +234,9 @@ def replay_tenant(catalog: Catalog, spec: TenantSpec, *,
     plus (optionally) the CA baseline on the same trace."""
     ctl = _make_controller(catalog, spec)
     steps = [ctl.step(demand) for demand in np.asarray(spec.trace, np.float64)]
-    return _assemble_replay(catalog, spec, steps, run_ca_baseline,
-                            ca_expander, ca_mode)
+    ca = (_ca_baseline(catalog, spec, ca_expander, ca_mode)
+          if run_ca_baseline else None)
+    return _assemble_replay(spec, steps, ca)
 
 
 # ---------------------------------------------------------------------------
@@ -188,30 +269,46 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                           ) -> List[List[ControllerStep]]:
     """Step ALL tenants through their traces with one batched solve per shape
     bucket per tick. Returns per-tenant step histories (controller objects
-    hold the same state the sequential engine would leave behind)."""
+    hold the same state the sequential engine would leave behind).
+
+    Horizons may be RAGGED: the fleet runs for ``max_b T_b`` ticks, and a
+    tenant whose trace ends freezes in place. Its batch lane persists (so
+    bucket shapes — and compiled programs — never change mid-replay), holding
+    the last allocation as a fixed warm start; ``solve_fleet_step`` returns
+    frozen rows untouched (``FleetBatch.active``), no ``apply_counts`` is
+    recorded, and its history stops at exactly ``T_b`` steps — identical to
+    a sequential replay of that tenant alone."""
     assert warm_start in ("counts", "relaxed"), warm_start
     assert len(tenants) > 0, "empty fleet"
     traces = [np.asarray(spec.trace, np.float64) for spec in tenants]
-    T = traces[0].shape[0]
-    assert all(tr.shape[0] == T for tr in traces), \
-        "batched replay needs equal-length traces (pad or use sequential mode)"
+    assert all(tr.shape[0] >= 1 for tr in traces), "empty trace"
+    T_len = np.asarray([tr.shape[0] for tr in traces])
 
     ctls = [_make_controller(catalog, spec) for spec in tenants]
     groups = _replay_batch_groups(ctls, tenants)
     # previous tick's RELAXED batched solution per tenant (warm_start="relaxed")
     x_rel_prev: List[Optional[np.ndarray]] = [None] * len(tenants)
+    # per-tenant problem of the CURRENT tick; frozen tenants keep their last
+    # one so stacked shapes stay put (its solve result is discarded)
+    probs: List = [None] * len(tenants)
 
-    for t in range(T):
-        probs = [ctl.make_problem(traces[b][t])
-                 for b, ctl in enumerate(ctls)]
+    for t in range(int(T_len.max())):
+        for b, ctl in enumerate(ctls):
+            if t < T_len[b]:
+                probs[b] = ctl.make_problem(traces[b][t])
         for key, idx in sorted(groups.items()):
             n_pad, m_pad, p_pad, n_starts = key
+            active = T_len[idx] > t                     # (Bk,) liveness
+            if not active.any():
+                continue        # whole bucket expired: nothing left to solve
             batch = stack_problems([probs[b] for b in idx],
-                                   n_max=n_pad, m_max=m_pad, p_max=p_pad)
+                                   n_max=n_pad, m_max=m_pad, p_max=p_pad,
+                                   active=active)
             if t == 0:
                 # cold start: one batched multistart solve for the bucket,
                 # per-tenant starts drawn at true shape (seed 0, as the
-                # sequential controller's multistart_solve does)
+                # sequential controller's multistart_solve does). Every
+                # tenant is live at t=0 (traces are non-empty).
                 starts = make_fleet_starts(batch, n_starts, seed=0)
                 res = solve_fleet(batch, starts=starts, hot_loop=hot_loop)
                 X_int = np.asarray(res.x_int, np.float64)
@@ -230,6 +327,8 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
             # only pay the relaxed-solution transfer when it will be used
             X_rel = np.asarray(res.x) if warm_start == "relaxed" else None
             for i, b in enumerate(idx):
+                if not active[i]:
+                    continue         # frozen: no churn, no metrics, no state
                 n_true = int(batch.n_true[i])
                 ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
                                      replanned=(t == 0))
@@ -241,9 +340,11 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
 def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                  replay_mode: str = "sequential",
                  run_ca_baseline: bool = True,
+                 ca_engine: str = "vectorized",
                  ca_expander: str = "random",
                  ca_mode: str = "wave",
                  warm_start: str = "counts",
+                 solver_steps: int = 600,
                  hot_loop: Optional[str] = None) -> FleetReplayResult:
     """Replay every tenant; returns per-tenant histories + fleet aggregates.
 
@@ -251,29 +352,49 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
 
     * ``"sequential"`` (reference) — one controller solve per tenant per tick.
     * ``"batched"`` — one ``solve_fleet`` / ``solve_fleet_step`` call per
-      shape bucket per tick (see module docstring); requires equal-length
-      traces. Produces per-tenant integer allocations identical to the
-      sequential engine on CPU.
+      shape bucket per tick (see module docstring). Traces may have
+      different per-tenant lengths: finished tenants freeze in their batch
+      lane (``FleetBatch.active``) and stop accruing churn/metrics. Produces
+      per-tenant integer allocations identical to the sequential engine on
+      CPU, ragged horizons included.
 
     ``warm_start`` (batched mode only) picks the incremental solve's warm
     start: ``"counts"`` (the previous integer allocation — what the
     sequential controller uses) or ``"relaxed"`` (the previous tick's relaxed
-    batched solution). ``hot_loop`` forwards to :func:`solve_fleet` for the
-    cold-start solve. The CA baseline always replays sequentially — it is a
-    numpy simulation with no solver in the loop."""
+    batched solution). ``solver_steps`` (batched mode only) is the PGD
+    iteration budget of each warm tick's ``solve_fleet_step`` call; the
+    default 600 matches the sequential controller's ``solve_incremental``
+    budget — required for engine equivalence. ``hot_loop`` forwards to
+    :func:`solve_fleet` for the cold-start solve.
+
+    ``ca_engine`` selects the baseline replay implementation (the baseline
+    itself is always the same numpy CA simulation, pools sized from each
+    trace's peak demand): ``"vectorized"`` (default) steps all tenants per
+    tick through one :func:`simulate_cluster_autoscaler_batch` call per
+    distinct catalog; ``"sequential"`` loops
+    :func:`simulate_cluster_autoscaler` per tenant — the oracle the
+    vectorized engine must match tick-for-tick."""
     assert replay_mode in ("sequential", "batched"), replay_mode
+    assert ca_engine in ("vectorized", "sequential"), ca_engine
     if replay_mode == "sequential":
-        replays = [replay_tenant(catalog, spec,
-                                 run_ca_baseline=run_ca_baseline,
-                                 ca_expander=ca_expander, ca_mode=ca_mode)
-                   for spec in tenants]
+        ctls = [_make_controller(catalog, spec) for spec in tenants]
+        histories = [[ctl.step(demand)
+                      for demand in np.asarray(spec.trace, np.float64)]
+                     for ctl, spec in zip(ctls, tenants)]
     else:
         histories = _replay_fleet_batched(catalog, tenants,
                                           warm_start=warm_start,
+                                          solver_steps=solver_steps,
                                           hot_loop=hot_loop)
-        replays = [_assemble_replay(catalog, spec, steps, run_ca_baseline,
-                                    ca_expander, ca_mode)
-                   for spec, steps in zip(tenants, histories)]
+    if not run_ca_baseline:
+        cas = [None] * len(tenants)
+    elif ca_engine == "vectorized":
+        cas = _replay_ca_fleet(catalog, tenants, ca_expander, ca_mode)
+    else:
+        cas = [_ca_baseline(catalog, spec, ca_expander, ca_mode)
+               for spec in tenants]
+    replays = [_assemble_replay(spec, steps, ca)
+               for spec, steps, ca in zip(tenants, histories, cas)]
     metrics = FleetReplayMetrics(
         tenants=[r.metrics for r in replays],
         baseline=([r.ca_metrics for r in replays] if run_ca_baseline else None),

@@ -413,12 +413,16 @@ class FleetStepResult(NamedTuple):
 @partial(jax.jit, static_argnames=("steps",))
 def _step_fleet_impl(prob: AllocationProblem, x_current: jnp.ndarray,
                      delta_max: jnp.ndarray, x_init: jnp.ndarray,
-                     steps: int) -> FleetStepResult:
+                     active: jnp.ndarray, steps: int) -> FleetStepResult:
     x_rel = jax.vmap(
         lambda pb, xc, dm, xi: solve_incremental(pb, xc, dm, x_init=xi,
                                                  steps=steps)
     )(prob, x_current, delta_max, x_init)
     x_int = jax.vmap(round_and_polish)(prob, x_rel)
+    # frozen lanes (active=False) keep their warm start as the answer; the
+    # mask is a traced array, so ragged fleets reuse one compiled program
+    x_rel = jnp.where(active[:, None], x_rel, x_current)
+    x_int = jnp.where(active[:, None], x_int, x_current)
     f_int = jax.vmap(objective)(prob, x_int)
     feas = jax.vmap(lambda pb, xi: is_feasible(pb, xi, 1e-3))(prob, x_int)
     return FleetStepResult(x=x_rel, x_int=x_int, fun_int=f_int, feasible=feas)
@@ -430,6 +434,7 @@ def solve_fleet_step(
     delta_max: Union[float, jnp.ndarray],
     x_init: Optional[jnp.ndarray] = None,
     steps: int = 600,
+    active: Optional[np.ndarray] = None,
 ) -> FleetStepResult:
     """One incremental-adoption tick for EVERY tenant in one jitted program.
 
@@ -444,10 +449,23 @@ def solve_fleet_step(
     previous tick's RELAXED batched solution. ``delta_max`` may be scalar or
     per-tenant (B,). vmap preserves per-lane op structure, so each lane
     matches a sequential ``solve_incremental`` + ``round_and_polish`` call
-    on the same padded problem."""
+    on the same padded problem.
+
+    ``active`` is the (B,) ragged-horizon liveness mask: frozen lanes
+    (``active[b] == False`` — the tenant's trace has expired) are returned
+    with ``x == x_int == x_current`` instead of a fresh solution, so their
+    rows carry the last allocation forward unchanged. Defaults to the
+    batch's own ``FleetBatch.active`` mask, else all-live. Live lanes are
+    unaffected — vmap keeps lanes independent, so results on live tenants
+    are identical whether or not frozen rows share the batch."""
     prob = fleet.problem if isinstance(fleet, FleetBatch) else fleet
+    if active is None and isinstance(fleet, FleetBatch):
+        active = fleet.active_mask
     B = prob.c.shape[0]
     x_current = jnp.asarray(x_current, jnp.float32)
     delta_max = jnp.broadcast_to(jnp.asarray(delta_max, jnp.float32), (B,))
     x_init = x_current if x_init is None else jnp.asarray(x_init, jnp.float32)
-    return _step_fleet_impl(prob, x_current, delta_max, x_init, int(steps))
+    active = (jnp.ones(B, bool) if active is None
+              else jnp.asarray(np.asarray(active, bool)))
+    return _step_fleet_impl(prob, x_current, delta_max, x_init, active,
+                            int(steps))

@@ -83,7 +83,7 @@ def weekly_trace(base: np.ndarray, T: int, *, daily_amplitude: float = 0.35,
                      base)
 
 
-def constant_trace(base: np.ndarray, T: int, **_ignored) -> np.ndarray:
+def constant_trace(base: np.ndarray, T: int) -> np.ndarray:
     """Static demand — replaying it must reproduce the single-shot solve."""
     base = np.asarray(base, np.float64)
     return np.tile(base[None, :], (T, 1))
@@ -107,5 +107,8 @@ def make_trace(kind: str, base: np.ndarray, T: int, *, seed: int = 0,
         raise ValueError(f"unknown trace kind {kind!r}; "
                          f"choose from {sorted(TRACE_KINDS)}") from None
     if kind == "constant":
-        return fn(base, T)
+        # no seed (deterministic by construction); unknown kwargs raise
+        # instead of being silently swallowed (a typo'd amplitude= would
+        # otherwise produce a flat trace without complaint)
+        return fn(base, T, **kwargs)
     return fn(base, T, seed=seed, **kwargs)

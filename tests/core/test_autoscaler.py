@@ -2,8 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.core import (default_pools_for, evaluate,
-                        simulate_cluster_autoscaler)
+from repro.core import (NodePool, default_pools_for, evaluate,
+                        simulate_cluster_autoscaler,
+                        simulate_cluster_autoscaler_batch)
 
 
 def _pools(cat, k=6):
@@ -54,6 +55,79 @@ def test_ca_respects_pool_caps(small_catalog):
     assert np.all(res.counts[idx] <= 3)
     # capped pools can't satisfy this demand
     assert not res.satisfied
+
+
+def test_ca_duplicate_pools_aggregate_caps(small_catalog):
+    """Two pools on the SAME instance type (e.g. per-zone pools of one
+    machine family) must pool their headroom: caps are the SUM of
+    max_counts, exactly like counts and min_counts already are."""
+    demand = np.array([16, 32, 8, 200], np.float64)
+    idx = small_catalog.select(lambda t: t.cpu == 4)[:1]
+    j = int(idx[0])
+    one = simulate_cluster_autoscaler(
+        small_catalog, [NodePool(instance_idx=j, max_count=10_000)], demand)
+    assert one.satisfied
+    need = int(one.counts[j])
+    assert need >= 2
+    # split the needed capacity across two same-type pools, each too small
+    # on its own: aggregation must still satisfy, capping at the sum
+    half = (need + 1) // 2
+    pools = [NodePool(instance_idx=j, max_count=half),
+             NodePool(instance_idx=j, max_count=half)]
+    res = simulate_cluster_autoscaler(small_catalog, pools, demand)
+    assert res.satisfied
+    assert res.counts[j] <= 2 * half
+    assert res.counts[j] > half  # actually used the second pool's headroom
+
+
+def test_ca_batch_matches_sequential_oracle(small_catalog):
+    """Property-style sweep: the vectorized lockstep stepper must reproduce
+    the sequential simulator's counts/cost/iterations/satisfied EXACTLY for
+    every tenant, across expanders, modes, scale-down policies and seeds."""
+    rng = np.random.default_rng(7)
+    for expander in ("random", "first-fit", "least-waste"):
+        for mode in ("wave", "incremental"):
+            for sd in ("utilization", "greedy", "none"):
+                B = 5
+                demands = (rng.uniform(1, 40, size=(B, 4))
+                           * np.array([1.0, 2.0, 0.5, 12.0]))
+                pools = []
+                for b in range(B):
+                    k = int(rng.integers(2, 7))
+                    idx = rng.choice(small_catalog.n, size=k, replace=False)
+                    existing = {int(j): int(rng.integers(0, 4))
+                                for j in idx[:2]}
+                    pools.append(default_pools_for(
+                        small_catalog, idx, existing=existing,
+                        max_count=int(rng.integers(3, 30))))
+                seq = [simulate_cluster_autoscaler(
+                           small_catalog, pools[b], demands[b],
+                           expander=expander, scale_down=sd, mode=mode,
+                           seed=3)
+                       for b in range(B)]
+                bat = simulate_cluster_autoscaler_batch(
+                    small_catalog, pools, demands, expander=expander,
+                    scale_down=sd, mode=mode, seed=3)
+                for b in range(B):
+                    np.testing.assert_array_equal(
+                        seq[b].counts, bat[b].counts,
+                        err_msg=f"{expander}/{mode}/{sd} tenant {b}")
+                    assert seq[b].iterations == bat[b].iterations
+                    assert seq[b].satisfied == bat[b].satisfied
+                    assert seq[b].cost == pytest.approx(bat[b].cost, abs=1e-9)
+
+
+def test_ca_batch_shared_pools_and_capped_wave(small_catalog):
+    """The batch stepper accepts one shared pool list, and reproduces the
+    sequential wave cap-out (a pool scaled to its cap without satisfying)."""
+    demand = np.array([64, 128, 16, 500], np.float64)
+    idx = small_catalog.select(lambda t: t.cpu == 2)[:2]
+    pools = default_pools_for(small_catalog, idx, max_count=3)
+    seq = simulate_cluster_autoscaler(small_catalog, pools, demand)
+    bat, = simulate_cluster_autoscaler_batch(small_catalog, pools,
+                                             demand[None, :])
+    np.testing.assert_array_equal(seq.counts, bat.counts)
+    assert not bat.satisfied and seq.iterations == bat.iterations
 
 
 def test_least_waste_not_worse_than_random_median(small_catalog):

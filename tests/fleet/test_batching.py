@@ -82,3 +82,18 @@ def test_barrier_unaffected_by_padding(ragged_fleet):
             np.testing.assert_allclose(padded, orig, rtol=1e-5, atol=1e-5)
         else:
             assert not np.isfinite(padded)
+
+
+def test_stack_problems_active_mask_roundtrip():
+    """The optional per-tenant liveness mask rides along with n_true and
+    never alters stacking itself (ragged-horizon replay plumbing)."""
+    probs = [make_toy_problem(seed=s, n=12 + s) for s in range(3)]
+    plain = stack_problems(probs)
+    assert plain.active is None
+    np.testing.assert_array_equal(plain.active_mask, np.ones(3, bool))
+    masked = stack_problems(probs, active=np.array([True, False, True]))
+    np.testing.assert_array_equal(masked.active_mask,
+                                  np.array([True, False, True]))
+    for a, b in [(plain.problem.K, masked.problem.K),
+                 (plain.problem.c, masked.problem.c)]:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -14,7 +14,7 @@ import pytest
 import repro.core.objective as obj
 from repro.core import SolverConfig, round_and_polish, solve_relaxation
 from repro.core.multistart import make_starts
-from repro.fleet import solve_fleet, stack_problems
+from repro.fleet import solve_fleet, solve_fleet_step, stack_problems
 from repro.testing import make_toy_problem
 
 CFG = SolverConfig(max_iters=150, barrier_rounds=2)
@@ -139,3 +139,23 @@ def test_heterogeneous_params_per_tenant():
     # identical data, different shortage weight -> different solves allowed,
     # but both must be feasible
     assert bool(np.all(np.asarray(res.feasible)))
+
+
+def test_step_frozen_lanes_keep_warm_start():
+    """Ragged-horizon contract: lanes with active=False are returned with
+    x == x_int == x_current (the frozen tenant's last allocation), while
+    live lanes are solved exactly as in an all-live batch."""
+    probs = _ragged_fleet(3)
+    batch = stack_problems(probs)
+    res_all = solve_fleet(batch, n_starts=N_STARTS, cfg=CFG, hot_loop="vmap")
+    X_cur = np.asarray(res_all.x_int, np.float64)
+    active = np.array([True, False, True])
+    frozen_batch = stack_problems(probs, active=active)
+    live = solve_fleet_step(batch, X_cur, 4.0)
+    part = solve_fleet_step(frozen_batch, X_cur, 4.0)    # mask via FleetBatch
+    np.testing.assert_array_equal(np.asarray(part.x_int[1]), X_cur[1])
+    np.testing.assert_array_equal(np.asarray(part.x[1]),
+                                  np.asarray(X_cur[1], np.float32))
+    for b in (0, 2):   # live lanes agree with the all-live batch exactly
+        np.testing.assert_array_equal(np.asarray(part.x_int[b]),
+                                      np.asarray(live.x_int[b]))
