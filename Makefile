@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast docs-check bench bench-fleet bench-json example-fleet
+.PHONY: test test-fast docs-check bench bench-fleet bench-json bench-horizon example-fleet
 
 test:            ## tier-1 verify: the full test suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -22,6 +22,10 @@ bench-fleet:     ## fleet benchmark only (--quick for the 16-tenant variant)
 bench-json:      ## quick fleet benchmark -> benchmarks/BENCH_fleet.json
 	PYTHONPATH=src $(PY) benchmarks/fleet_bench.py --quick \
 	    --json benchmarks/BENCH_fleet.json
+
+bench-horizon:   ## quick MPC-vs-myopic sweep -> benchmarks/BENCH_horizon.json
+	PYTHONPATH=src $(PY) benchmarks/horizon_bench.py --quick \
+	    --json benchmarks/BENCH_horizon.json
 
 example-fleet:   ## trace-driven fleet replay demo (batched engine)
 	PYTHONPATH=src $(PY) examples/fleet_replay.py

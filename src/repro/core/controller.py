@@ -25,13 +25,22 @@ from .rounding import round_and_polish
 @dataclass
 class ControllerStep:
     """One recorded tick: the demand seen, the allocation deployed, its
-    snapshot metrics, the L1 churn paid, and whether it was a full replan."""
+    snapshot metrics, the L1 churn paid, and whether it was a full replan.
+
+    ``churn_violation`` is the excess of ``churn`` over the controller's
+    ``delta_max`` on a warm (non-replanned) tick: rounding may exceed the
+    relaxed solve's churn bound slightly when demand jumps — the
+    feasibility-first tradeoff (shortage beats churn). Zero on replans,
+    which deliberately ignore the bound. Surfaced fleet-wide by
+    ``FleetReplayMetrics.summary()`` so churn comparisons between
+    controllers are honest about bound overruns."""
 
     demand: np.ndarray
     counts: np.ndarray
     metrics: AllocationMetrics
     churn: float                 # ||x_t - x_{t-1}||_1
     replanned: bool
+    churn_violation: float = 0.0  # max(0, churn - delta_max) on warm ticks
 
 
 @dataclass
@@ -92,10 +101,14 @@ class InfrastructureOptimizationController:
         x = np.asarray(counts, np.float64)
         churn = float(np.abs(x - (self.x_current if self.x_current is not None
                                   else np.zeros_like(x))).sum())
+        # rounding may overshoot the relaxed solve's churn bound; record the
+        # excess (replans ignore the bound by design, so they report 0)
+        violation = 0.0 if replanned else max(0.0, churn - float(self.delta_max))
         self.x_current = x
         step = ControllerStep(demand=demand, counts=x,
                               metrics=evaluate(self.catalog, x, demand),
-                              churn=churn, replanned=replanned)
+                              churn=churn, replanned=replanned,
+                              churn_violation=violation)
         self.history.append(step)
         return step
 

@@ -21,7 +21,10 @@ tenant clusters a first-class path:
                  per-tenant horizons freeze finished tenants via active
                  masks), and run the CA baseline on the same traces — pools
                  sized from each trace's peak demand, replayed by the
-                 vectorized lockstep stepper by default.
+                 vectorized lockstep stepper by default. Either engine can
+                 drive the myopic controller or the forecast-driven
+                 receding-horizon controller (``controller="mpc"``,
+                 see ``repro.horizon``).
   * metrics    — fleet/time aggregation: cost integral, SLO-violation ticks,
                  churn, fragmentation.
 
@@ -34,8 +37,8 @@ from .batching import (BucketedFleet, FleetBatch, bucket_dims,
                        tenant_problem, unstack_solution)
 from .solver import (FleetSolveResult, FleetStepResult, make_fleet_starts,
                      solve_fleet, solve_fleet_bucketed, solve_fleet_step)
-from .traces import (diurnal_trace, flash_crowd_trace, make_trace, ramp_trace,
-                     weekly_trace)
+from .traces import (TRACE_KINDS, constant_trace, diurnal_trace,
+                     flash_crowd_trace, make_trace, ramp_trace, weekly_trace)
 from .metrics import FleetReplayMetrics, TenantReplayMetrics
 from .replay import FleetReplayResult, TenantSpec, replay_fleet
 
@@ -47,7 +50,7 @@ __all__ = [
     "FleetSolveResult", "solve_fleet", "solve_fleet_bucketed",
     "FleetStepResult", "solve_fleet_step", "make_fleet_starts",
     "diurnal_trace", "flash_crowd_trace", "ramp_trace", "weekly_trace",
-    "make_trace",
+    "constant_trace", "make_trace", "TRACE_KINDS",
     "TenantSpec", "replay_fleet", "FleetReplayResult",
     "TenantReplayMetrics", "FleetReplayMetrics",
 ]

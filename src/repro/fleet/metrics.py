@@ -36,6 +36,7 @@ class TenantReplayMetrics:
     mean_fragmentation: float     # mean providers used per tick
     mean_diversity: float         # mean distinct instance types per tick
     peak_cost: float
+    max_churn_violation: float = 0.0  # worst per-tick excess over delta_max
 
     @property
     def slo_violation_rate(self) -> float:
@@ -43,9 +44,14 @@ class TenantReplayMetrics:
 
 
 def tenant_metrics(name: str, steps: Sequence[AllocationMetrics],
-                   churns: Sequence[float]) -> TenantReplayMetrics:
+                   churns: Sequence[float],
+                   churn_violations: Optional[Sequence[float]] = None
+                   ) -> TenantReplayMetrics:
     """Integrate one tenant's per-tick snapshot metrics over the trace (see
-    the module docstring / docs/fleet.md for each metric's definition)."""
+    the module docstring / docs/fleet.md for each metric's definition).
+    ``churn_violations`` are the per-tick ``ControllerStep.churn_violation``
+    values — the rounded allocation's excess over ``delta_max`` — omitted
+    for baselines that carry no churn bound (the CA replay)."""
     costs = np.asarray([s.total_cost for s in steps], np.float64)
     return TenantReplayMetrics(
         name=name,
@@ -58,6 +64,9 @@ def tenant_metrics(name: str, steps: Sequence[AllocationMetrics],
                                           for s in steps])),
         mean_diversity=float(np.mean([s.instance_diversity for s in steps])),
         peak_cost=float(costs.max()),
+        max_churn_violation=(float(np.max(churn_violations))
+                             if churn_violations is not None
+                             and len(churn_violations) else 0.0),
     )
 
 
@@ -67,11 +76,19 @@ class FleetReplayMetrics:
 
     ``replay_mode`` records which engine produced the histories
     ("sequential" or "batched") — the numbers must agree between the two
-    (tests/fleet/test_replay.py enforces it), so this is provenance only."""
+    (tests/fleet/test_replay.py enforces it), so this is provenance only.
+    ``controller`` likewise records which control loop ran ("myopic" or
+    "mpc"). ``oracle`` optionally holds the SAME fleet replayed by the MPC
+    controller under the ground-truth oracle forecaster
+    (``replay_fleet(run_oracle_baseline=True)``) — the regret reference:
+    any gap between ``tenants`` and ``oracle`` is what forecast error cost
+    (docs/horizon.md, regret definition)."""
 
     tenants: List[TenantReplayMetrics]
     baseline: Optional[List[TenantReplayMetrics]] = None
     replay_mode: str = "sequential"
+    controller: str = "myopic"
+    oracle: Optional[List[TenantReplayMetrics]] = None
 
     @property
     def total_cost_integral(self) -> float:
@@ -96,10 +113,36 @@ class FleetReplayMetrics:
         return sum(t.ticks for t in self.tenants)
 
     @property
+    def max_churn_violation(self) -> float:
+        """Fleet-wide worst per-tick excess of realized churn over the
+        churn bound ``delta_max`` (rounding's feasibility-first overshoot).
+        MPC-vs-myopic churn comparisons need it to be honest: a controller
+        reporting less churn while violating the bound harder isn't
+        better."""
+        return max((t.max_churn_violation for t in self.tenants), default=0.0)
+
+    @property
     def baseline_cost_integral(self) -> Optional[float]:
         if self.baseline is None:
             return None
         return sum(t.cost_integral for t in self.baseline)
+
+    @property
+    def oracle_cost_integral(self) -> Optional[float]:
+        if self.oracle is None:
+            return None
+        return sum(t.cost_integral for t in self.oracle)
+
+    @property
+    def regret_vs_oracle(self) -> Optional[float]:
+        """Cost-integral regret against the oracle-forecast replay of the
+        SAME fleet and controller: cost(this run) - cost(oracle run).
+        Positive regret is the price of forecast error; the oracle run pays
+        only for model limits (horizon, churn bound, convexification)."""
+        base = self.oracle_cost_integral
+        if base is None:
+            return None
+        return self.total_cost_integral - base
 
     @property
     def cost_savings_vs_baseline_pct(self) -> Optional[float]:
@@ -120,10 +163,12 @@ class FleetReplayMetrics:
                        f"(ragged horizons {ticks[0]}-{ticks[-1]})")
         lines = [
             f"fleet of {len(self.tenants)} tenants, {horizon} "
-            f"({self.replay_mode} replay)",
+            f"({self.replay_mode} replay, {self.controller} controller)",
             f"  cost integral      : ${self.total_cost_integral:,.2f}",
             f"  SLO violation ticks: {self.total_slo_violation_ticks}",
             f"  total churn (L1)   : {self.total_churn:,.1f}",
+            f"  max churn overrun  : {self.max_churn_violation:.1f} "
+            f"(worst per-tick excess over delta_max)",
             f"  mean fragmentation : {self.mean_fragmentation:.2f} providers",
         ]
         if self.baseline is not None:
@@ -131,4 +176,9 @@ class FleetReplayMetrics:
                          f"${self.baseline_cost_integral:,.2f}")
             lines.append(f"  savings vs CA      : "
                          f"{self.cost_savings_vs_baseline_pct:+.1f}%")
+        if self.oracle is not None:
+            lines.append(f"  oracle-MPC cost    : "
+                         f"${self.oracle_cost_integral:,.2f}")
+            lines.append(f"  regret vs oracle   : "
+                         f"${self.regret_vs_oracle:+,.2f}")
         return "\n".join(lines)

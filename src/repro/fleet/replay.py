@@ -35,6 +35,13 @@ per-tenant ``InfrastructureOptimizationController`` objects in both modes;
 the batched engine just computes the counts centrally and feeds them back
 via ``controller.apply_counts``. See docs/fleet.md for the full contract.
 
+Both engines can also drive the receding-horizon controller
+(``controller="mpc"``, ``repro.horizon``): each tick forecasts ``horizon``
+ticks, solves one time-expanded convex program, and commits only tick 0.
+The batched MPC engine issues one ``solve_horizon_fleet_step`` per shape
+bucket per warm tick — the same grouping, cold start and ragged-horizon
+freezing as the myopic batched engine. See docs/horizon.md.
+
 The CA baseline sizes each tenant's node pools from the trace's PER-RESOURCE
 PEAK demand (``trace.max(axis=0)``) — sizing from any single tick would hand
 the baseline a pool set that cannot schedule the peak of a ramp or flash
@@ -56,6 +63,7 @@ from repro.core.autoscaler import (default_pools_for,
                                    simulate_cluster_autoscaler,
                                    simulate_cluster_autoscaler_batch)
 from repro.core.catalog import Catalog
+from repro.core.catalog import M as RESOURCE_DIM
 from repro.core.controller import (ControllerStep,
                                    InfrastructureOptimizationController)
 from repro.core.metrics import AllocationMetrics, evaluate
@@ -68,7 +76,12 @@ from .solver import make_fleet_starts, solve_fleet, solve_fleet_step
 
 @dataclass
 class TenantSpec:
-    """One tenant cluster: a demand trace plus its controller knobs."""
+    """One tenant cluster: a demand trace plus its controller knobs.
+
+    The trace is validated at construction (2-D, at least one tick, and its
+    resource columns matching the catalog's resource dim) so a malformed
+    spec fails HERE with a clear message instead of deep inside the solver
+    with an opaque broadcast error."""
 
     name: str
     trace: np.ndarray                            # (T, m) demand per tick
@@ -79,6 +92,29 @@ class TenantSpec:
     catalog: Optional[Catalog] = None            # overrides the fleet catalog
     ca_pool_idx: Optional[np.ndarray] = None     # CA node pools (default: the
                                                  # cheapest covering types)
+
+    def __post_init__(self) -> None:
+        """Fail fast on malformed traces (see class docstring)."""
+        trace = np.asarray(self.trace)
+        if trace.ndim != 2:
+            raise ValueError(
+                f"TenantSpec {self.name!r}: trace must be a 2-D (T, m) array "
+                f"of per-tick demand, got shape {trace.shape}")
+        if trace.shape[0] < 1:
+            raise ValueError(
+                f"TenantSpec {self.name!r}: trace must have at least one "
+                f"tick, got shape {trace.shape}")
+        # every Catalog lowers to K with one row per RESOURCES entry; a
+        # tenant catalog (if any) decides, else the fleet catalog — both
+        # share the global resource convention
+        m = (self.catalog.matrices()[0].shape[0]
+             if self.catalog is not None else RESOURCE_DIM)
+        if trace.shape[1] != m:
+            raise ValueError(
+                f"TenantSpec {self.name!r}: trace has {trace.shape[1]} "
+                f"resource columns but the catalog's resource dim is {m} "
+                f"(demand rows must be ordered like "
+                f"repro.core.catalog.RESOURCES)")
 
 
 @dataclass
@@ -214,13 +250,36 @@ def _make_controller(catalog: Catalog, spec: TenantSpec
         allowed_idx=spec.allowed_idx)
 
 
+def _make_mpc_controller(catalog: Catalog, spec: TenantSpec, *, horizon: int,
+                         forecaster: str, forecaster_kwargs: Optional[dict],
+                         coupling_w: float, coupling_eps: float,
+                         solver_steps: int):
+    """Build one tenant's receding-horizon controller (the MPC counterpart
+    of :func:`_make_controller`); the forecaster gets the tenant's own trace
+    so ``forecaster="oracle"`` reads that tenant's future.
+
+    repro.horizon is imported lazily: it reuses ``repro.fleet.batching`` for
+    window stacking, so a module-level import here would be circular."""
+    from repro.horizon import ModelPredictiveController, make_forecaster
+    fc = make_forecaster(forecaster,
+                         trace=np.asarray(spec.trace, np.float64),
+                         **(forecaster_kwargs or {}))
+    return ModelPredictiveController(
+        catalog=spec.catalog or catalog, delta_max=spec.delta_max,
+        params=spec.params, n_starts=spec.n_starts,
+        allowed_idx=spec.allowed_idx, horizon=horizon, forecaster=fc,
+        coupling_w=coupling_w, coupling_eps=coupling_eps,
+        solver_steps=solver_steps)
+
+
 def _assemble_replay(spec: TenantSpec, steps: List[ControllerStep],
                      ca: Optional[Tuple]) -> TenantReplay:
     """Roll one tenant's step history (plus a precomputed CA baseline
     ``(metrics, counts)`` pair, or None) into a TenantReplay — shared by
     both replay engines."""
     met = tenant_metrics(spec.name, [s.metrics for s in steps],
-                         [s.churn for s in steps])
+                         [s.churn for s in steps],
+                         churn_violations=[s.churn_violation for s in steps])
     ca_met, ca_counts = ca if ca is not None else (None, None)
     return TenantReplay(spec=spec, steps=steps, metrics=met,
                         ca_metrics=ca_met, ca_counts=ca_counts)
@@ -337,8 +396,115 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     return [ctl.history for ctl in ctls]
 
 
+def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
+                              *, horizon: int, forecaster: str,
+                              forecaster_kwargs: Optional[dict],
+                              coupling_w: float, coupling_eps: float,
+                              solver_steps: int,
+                              hot_loop: Optional[str] = None
+                              ) -> List[List[ControllerStep]]:
+    """Batched receding-horizon replay: one ``solve_horizon_fleet_step``
+    call per shape bucket per warm tick, the fleet analogue of
+    ``ModelPredictiveController.step``.
+
+    Mirrors :func:`_replay_fleet_batched` exactly where the two overlap:
+    the same (bucket, n_starts) grouping, the same ``solve_fleet`` cold
+    start (the MPC cold tick IS the myopic cold tick — no allocation means
+    no churn to plan around), and the same ragged-horizon freezing. The
+    warm tick stacks each live tenant's H-tick window (observed demand +
+    forecasts) padded to its bucket's dims, solves all lanes in one jitted
+    vmapped program, commits tick 0 via ``apply_counts``, and stores each
+    lane's relaxed plan back on its controller for the next tick's shifted
+    warm start. Per-tenant integer allocations match the sequential MPC
+    engine on CPU (test-enforced), forecaster state included — forecasts
+    depend only on the observed trace, never on solver output."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.horizon import HorizonProblem, solve_horizon_fleet_step
+
+    assert len(tenants) > 0, "empty fleet"
+    traces = [np.asarray(spec.trace, np.float64) for spec in tenants]
+    T_len = np.asarray([tr.shape[0] for tr in traces])
+
+    ctls = [_make_mpc_controller(catalog, spec, horizon=horizon,
+                                 forecaster=forecaster,
+                                 forecaster_kwargs=forecaster_kwargs,
+                                 coupling_w=coupling_w,
+                                 coupling_eps=coupling_eps,
+                                 solver_steps=solver_steps)
+            for spec in tenants]
+    groups = _replay_batch_groups(ctls, tenants)
+    # each live tenant's CURRENT window of per-tick problems; frozen tenants
+    # keep their last one so stacked shapes stay put (results discarded)
+    windows: List = [None] * len(tenants)
+
+    for t in range(int(T_len.max())):
+        for b, ctl in enumerate(ctls):
+            if t < T_len[b]:
+                windows[b] = ctl.window_problems(
+                    ctl.window_demands(traces[b][t]))
+        for key, idx in sorted(groups.items()):
+            n_pad, m_pad, p_pad, n_starts = key
+            active = T_len[idx] > t
+            if not active.any():
+                continue
+            if t == 0:
+                # cold start: identical to the myopic batched engine (and to
+                # a sequential cold_start_counts call per tenant)
+                batch = stack_problems([windows[b][0] for b in idx],
+                                       n_max=n_pad, m_max=m_pad, p_max=p_pad,
+                                       active=active)
+                starts = make_fleet_starts(batch, n_starts, seed=0)
+                res = solve_fleet(batch, starts=starts, hot_loop=hot_loop)
+                X_int = np.asarray(res.x_int, np.float64)
+                for i, b in enumerate(idx):
+                    n_true = int(batch.n_true[i])
+                    x = X_int[i, :n_true]
+                    ctls[b].apply_counts(traces[b][t], x, replanned=True)
+                    ctls[b].plan = np.tile(x, (horizon, 1))
+                continue
+            # warm tick: stack each tenant's H-tick window at the bucket's
+            # pad dims, then one vmapped horizon solve for the whole bucket
+            stacked = [stack_problems(windows[b], n_max=n_pad, m_max=m_pad,
+                                      p_max=p_pad).problem for b in idx]
+            prob_bh = jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves), *stacked)
+            X_cur = np.zeros((len(idx), n_pad), np.float32)
+            X_init = np.zeros((len(idx), horizon, n_pad), np.float32)
+            for i, b in enumerate(idx):
+                n_true = ctls[b].catalog.n
+                X_cur[i, :n_true] = ctls[b].x_current
+                X_init[i, :, :n_true] = ctls[b].shifted_plan()
+            delta = np.asarray([tenants[b].delta_max for b in idx],
+                               np.float32)
+            hp = HorizonProblem(
+                problem=prob_bh,
+                coupling_w=jnp.asarray(coupling_w, jnp.float32),
+                coupling_eps=jnp.asarray(coupling_eps, jnp.float32))
+            res = solve_horizon_fleet_step(hp, X_cur, delta, x_init=X_init,
+                                           active=active, steps=solver_steps)
+            X_int = np.asarray(res.x_int, np.float64)
+            plans = np.asarray(res.plan, np.float64)
+            for i, b in enumerate(idx):
+                if not active[i]:
+                    continue
+                n_true = ctls[b].catalog.n
+                ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
+                                     replanned=False)
+                ctls[b].plan = plans[i, :, :n_true]
+    return [ctl.history for ctl in ctls]
+
+
 def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                  replay_mode: str = "sequential",
+                 controller: str = "myopic",
+                 horizon: int = 8,
+                 forecaster: str = "last_value",
+                 forecaster_kwargs: Optional[dict] = None,
+                 coupling_w: Optional[float] = None,
+                 coupling_eps: Optional[float] = None,
+                 run_oracle_baseline: bool = False,
                  run_ca_baseline: bool = True,
                  ca_engine: str = "vectorized",
                  ca_expander: str = "random",
@@ -351,21 +517,40 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     ``replay_mode`` selects the optimizer engine:
 
     * ``"sequential"`` (reference) — one controller solve per tenant per tick.
-    * ``"batched"`` — one ``solve_fleet`` / ``solve_fleet_step`` call per
-      shape bucket per tick (see module docstring). Traces may have
-      different per-tenant lengths: finished tenants freeze in their batch
-      lane (``FleetBatch.active``) and stop accruing churn/metrics. Produces
-      per-tenant integer allocations identical to the sequential engine on
-      CPU, ragged horizons included.
+    * ``"batched"`` — one batched solve call per shape bucket per tick (see
+      module docstring). Traces may have different per-tenant lengths:
+      finished tenants freeze in their batch lane (``FleetBatch.active``)
+      and stop accruing churn/metrics. Produces per-tenant integer
+      allocations identical to the sequential engine on CPU, ragged
+      horizons included.
 
-    ``warm_start`` (batched mode only) picks the incremental solve's warm
-    start: ``"counts"`` (the previous integer allocation — what the
+    ``controller`` selects the control loop both engines drive:
+
+    * ``"myopic"`` (reference) — the paper's §III.E loop: each tick solves
+      for the CURRENT demand under the L1 churn bound.
+    * ``"mpc"`` — the receding-horizon controller (``repro.horizon``):
+      each tick forecasts ``horizon`` ticks with ``forecaster``
+      (a ``repro.horizon.forecast`` registry kind; ``forecaster_kwargs``
+      forwarded, the tenant's own trace supplied so ``"oracle"`` works),
+      solves the time-expanded program with smoothed inter-tick churn
+      coupling (``coupling_w`` / ``coupling_eps``, defaulting to
+      ``repro.horizon.problem``'s tuned values), and commits tick 0.
+      ``horizon=1`` with any forecaster reproduces the myopic controller's
+      integer allocations exactly (test-enforced).
+
+    ``run_oracle_baseline`` (MPC only) additionally replays the SAME fleet
+    and controller under the ground-truth oracle forecaster and attaches
+    its metrics as ``FleetReplayMetrics.oracle`` — enabling
+    ``regret_vs_oracle`` (what forecast error cost).
+
+    ``warm_start`` (batched myopic mode only) picks the incremental solve's
+    warm start: ``"counts"`` (the previous integer allocation — what the
     sequential controller uses) or ``"relaxed"`` (the previous tick's relaxed
-    batched solution). ``solver_steps`` (batched mode only) is the PGD
-    iteration budget of each warm tick's ``solve_fleet_step`` call; the
-    default 600 matches the sequential controller's ``solve_incremental``
-    budget — required for engine equivalence. ``hot_loop`` forwards to
-    :func:`solve_fleet` for the cold-start solve.
+    batched solution); the MPC controller always warm-starts from its
+    shifted previous plan. ``solver_steps`` is the PGD iteration budget of
+    each warm tick; the default 600 matches ``solve_incremental`` — required
+    for engine equivalence. ``hot_loop`` forwards to :func:`solve_fleet`
+    for the cold-start solve.
 
     ``ca_engine`` selects the baseline replay implementation (the baseline
     itself is always the same numpy CA simulation, pools sized from each
@@ -374,9 +559,40 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     distinct catalog; ``"sequential"`` loops
     :func:`simulate_cluster_autoscaler` per tenant — the oracle the
     vectorized engine must match tick-for-tick."""
+    if len(tenants) == 0:
+        raise ValueError("replay_fleet needs at least one TenantSpec; got an "
+                         "empty tenant list")
     assert replay_mode in ("sequential", "batched"), replay_mode
+    assert controller in ("myopic", "mpc"), controller
     assert ca_engine in ("vectorized", "sequential"), ca_engine
-    if replay_mode == "sequential":
+    if run_oracle_baseline and controller != "mpc":
+        raise ValueError("run_oracle_baseline compares a forecast-driven MPC "
+                         "replay against its oracle-forecast twin; it "
+                         'requires controller="mpc"')
+    if controller == "mpc":
+        # defaults resolved HERE, not above: the myopic path must not import
+        # repro.horizon at all (the fleet->horizon edge stays deferred)
+        if coupling_w is None or coupling_eps is None:
+            from repro.horizon import DEFAULT_COUPLING_EPS, DEFAULT_COUPLING_W
+            coupling_w = (DEFAULT_COUPLING_W if coupling_w is None
+                          else coupling_w)
+            coupling_eps = (DEFAULT_COUPLING_EPS if coupling_eps is None
+                            else coupling_eps)
+        mpc_kwargs = dict(horizon=horizon, forecaster=forecaster,
+                          forecaster_kwargs=forecaster_kwargs,
+                          coupling_w=coupling_w, coupling_eps=coupling_eps,
+                          solver_steps=solver_steps)
+        if replay_mode == "sequential":
+            ctls = [_make_mpc_controller(catalog, spec, **mpc_kwargs)
+                    for spec in tenants]
+            histories = [[ctl.step(demand)
+                          for demand in np.asarray(spec.trace, np.float64)]
+                         for ctl, spec in zip(ctls, tenants)]
+        else:
+            histories = _replay_fleet_batched_mpc(catalog, tenants,
+                                                  hot_loop=hot_loop,
+                                                  **mpc_kwargs)
+    elif replay_mode == "sequential":
         ctls = [_make_controller(catalog, spec) for spec in tenants]
         histories = [[ctl.step(demand)
                       for demand in np.asarray(spec.trace, np.float64)]
@@ -393,10 +609,20 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     else:
         cas = [_ca_baseline(catalog, spec, ca_expander, ca_mode)
                for spec in tenants]
+    oracle_metrics = None
+    if run_oracle_baseline:
+        oracle = replay_fleet(catalog, tenants, replay_mode=replay_mode,
+                              controller="mpc", horizon=horizon,
+                              forecaster="oracle", coupling_w=coupling_w,
+                              coupling_eps=coupling_eps,
+                              run_ca_baseline=False, warm_start=warm_start,
+                              solver_steps=solver_steps, hot_loop=hot_loop)
+        oracle_metrics = [r.metrics for r in oracle.tenants]
     replays = [_assemble_replay(spec, steps, ca)
                for spec, steps, ca in zip(tenants, histories, cas)]
     metrics = FleetReplayMetrics(
         tenants=[r.metrics for r in replays],
         baseline=([r.ca_metrics for r in replays] if run_ca_baseline else None),
-        replay_mode=replay_mode)
+        replay_mode=replay_mode, controller=controller,
+        oracle=oracle_metrics)
     return FleetReplayResult(tenants=replays, metrics=metrics)

@@ -1,0 +1,52 @@
+"""repro.horizon — forecast-driven receding-horizon (MPC) allocation.
+
+The paper's controller is myopic: each tick solves for the CURRENT demand
+under the L1 churn bound, so it pays churn chasing every diurnal swing and
+reacts late to flash crowds. This package looks ahead instead:
+
+  * forecast   — demand predictors over the observed trace (last_value,
+                 ewma, seasonal holt_winters, and the ground-truth oracle
+                 regret reference) behind a ``make_forecaster`` registry.
+  * problem    — the time-expanded convex program: H stacked per-tick
+                 problems over the plan X ∈ R^{H×n} with smoothed
+                 inter-tick L1 churn coupling.
+  * solver     — one jitted PGD program per solve (``solve_horizon``), the
+                 committed tick hard-projected onto the churn ball by exact
+                 ``project_incremental`` chaining; ``vmap``-able across
+                 fleet lanes (``solve_horizon_fleet_step``) like
+                 ``solve_fleet``.
+  * controller — ``ModelPredictiveController``: forecast H ticks, solve,
+                 commit tick 0, roll forward. H=1 reproduces the myopic
+                 controller exactly (test-enforced); the fleet replay
+                 drives it via ``replay_fleet(controller="mpc", ...)``.
+
+Documentation: docs/horizon.md (forecaster contracts, formulation, regret
+definition); benchmarks/horizon_bench.py sweeps H × forecaster × trace.
+"""
+from .forecast import (FORECASTER_KINDS, EWMAForecaster, Forecaster,
+                       HoltWintersForecaster, LastValueForecaster,
+                       OracleForecaster, make_forecaster)
+from .problem import (DEFAULT_COUPLING_EPS, DEFAULT_COUPLING_W,
+                      HorizonProblem, churn_bound_grad, churn_bound_penalty,
+                      coupling_grad, coupling_penalty, expand_problems,
+                      horizon_objective, horizon_objective_terms,
+                      smoothed_churn, tick_problem)
+from .solver import (DEFAULT_DELTA_PENALTY_W, DEFAULT_PENALTY_W,
+                     HorizonFleetStepResult, round_committed, solve_horizon,
+                     solve_horizon_fleet_step)
+from .controller import ModelPredictiveController
+
+__all__ = [
+    "Forecaster", "LastValueForecaster", "EWMAForecaster",
+    "HoltWintersForecaster", "OracleForecaster", "FORECASTER_KINDS",
+    "make_forecaster",
+    "HorizonProblem", "expand_problems", "tick_problem",
+    "horizon_objective", "horizon_objective_terms",
+    "coupling_penalty", "coupling_grad", "smoothed_churn",
+    "churn_bound_penalty", "churn_bound_grad",
+    "DEFAULT_COUPLING_W", "DEFAULT_COUPLING_EPS", "DEFAULT_PENALTY_W",
+    "DEFAULT_DELTA_PENALTY_W",
+    "solve_horizon", "solve_horizon_fleet_step", "HorizonFleetStepResult",
+    "round_committed",
+    "ModelPredictiveController",
+]

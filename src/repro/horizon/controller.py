@@ -1,0 +1,156 @@
+"""Model-predictive (receding-horizon) allocation controller.
+
+``ModelPredictiveController`` extends the paper's myopic
+``InfrastructureOptimizationController`` (§III.E) with lookahead: each tick
+it (1) feeds the observed demand to its forecaster, (2) builds the H-tick
+window [observed demand, H-1 forecast ticks] of per-tick problems with the
+SAME ``make_problem`` construction the myopic controller uses, (3) solves
+the time-expanded program (``repro.horizon.solver.solve_horizon``), and
+(4) COMMITS only tick 0 — rounded by the same ``round_and_polish`` pass and
+recorded through the inherited ``apply_counts``, so churn accounting,
+metrics and history are directly comparable with the myopic loop. Then the
+horizon rolls forward one tick (receding horizon / MPC).
+
+State beyond the myopic controller is exactly two things: the forecaster
+(fed the observed demand stream) and the previous relaxed plan, which
+warm-starts the next solve shifted one tick (row 0 reset to the deployed
+counts — the same warm start the myopic tick uses).
+
+Equivalences that anchor the design (both test-enforced):
+
+* cold tick — no allocation exists, so there is no churn to plan around;
+  the committed tick is the myopic multistart cold start, identical at
+  every H.
+* ``horizon=1`` — the window is just the observed demand; the solve reduces
+  op-for-op to ``solve_incremental`` (see repro.horizon.solver), so the MPC
+  controller reproduces the myopic controller's integer allocations exactly
+  regardless of forecaster.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import (ControllerStep,
+                                   InfrastructureOptimizationController)
+from repro.core.problem import AllocationProblem
+
+from .forecast import Forecaster, LastValueForecaster
+from .problem import (DEFAULT_COUPLING_EPS, DEFAULT_COUPLING_W,
+                      expand_problems)
+from .solver import DEFAULT_PENALTY_W, round_committed, solve_horizon
+
+
+@dataclass
+class ModelPredictiveController(InfrastructureOptimizationController):
+    """Receding-horizon controller: forecast H ticks, solve the
+    time-expanded program, commit tick 0, roll forward.
+
+    Inherits the myopic controller's fields (catalog, delta_max, params,
+    n_starts, allowed_idx, normalize) and all of its state/bookkeeping
+    (``x_current``, ``history``, ``apply_counts``). Extra knobs:
+
+    * ``horizon``      — window length H (H=1 ≡ the myopic controller).
+    * ``forecaster``   — a ``repro.horizon.forecast.Forecaster`` (default:
+                         a fresh ``last_value``).
+    * ``coupling_w``   — smoothed inter-tick L1 churn weight of the relaxed
+                         program (the committed tick's churn stays a hard
+                         ``delta_max`` ball regardless).
+    * ``coupling_eps`` — smoothing epsilon of the coupling |·|.
+    * ``solver_steps`` — PGD budget per tick (600 = the myopic warm tick's
+                         ``solve_incremental`` budget; required for the
+                         H=1 equivalence).
+    * ``penalty_w``    — band-penalty weight on PLANNED ticks (see
+                         repro.horizon.solver: planned rows need the
+                         solver's quadratic coverage penalty because they
+                         never receive the feasibility-first rounding;
+                         inert at H=1).
+
+    ``plan`` holds the last relaxed plan (H, n): rows 1..H-1 are the
+    controller's current intentions for the next ticks (useful diagnostics:
+    pre-provisioning shows up here before it is committed)."""
+
+    horizon: int = 8
+    forecaster: Optional[Forecaster] = None
+    coupling_w: float = DEFAULT_COUPLING_W
+    coupling_eps: float = DEFAULT_COUPLING_EPS
+    solver_steps: int = 600
+    penalty_w: float = DEFAULT_PENALTY_W
+    plan: Optional[np.ndarray] = None
+
+    def __post_init__(self) -> None:
+        """Default the forecaster; validate the window length."""
+        assert self.horizon >= 1, self.horizon
+        if self.forecaster is None:
+            self.forecaster = LastValueForecaster()
+
+    # -- window construction -------------------------------------------------
+
+    def window_demands(self, demand: np.ndarray) -> np.ndarray:
+        """Observe this tick's demand, then assemble the (H, m) window:
+        row 0 is the OBSERVED demand (it has arrived — MPC never forecasts
+        the present), rows 1..H-1 the forecaster's next H-1 ticks."""
+        demand = np.asarray(demand, np.float64)
+        self.forecaster.observe(demand)
+        if self.horizon == 1:
+            return demand[None, :]
+        future = self.forecaster.predict(self.horizon - 1)
+        return np.concatenate([demand[None, :], future], axis=0)
+
+    def window_problems(self, demands: np.ndarray) -> List[AllocationProblem]:
+        """One ``make_problem`` per window tick — identical construction
+        (normalization included) to the myopic controller's per-tick
+        problem, so tick 0's problem IS the myopic problem."""
+        return [self.make_problem(d) for d in demands]
+
+    def shifted_plan(self) -> np.ndarray:
+        """The next solve's warm start: the previous plan advanced one tick
+        (its guess for tick t+h was row h+1; the horizon's last row repeats)
+        with row 0 reset to the DEPLOYED counts — the committed tick warms
+        from ``x_current`` exactly like the myopic incremental tick."""
+        H = self.horizon
+        out = np.empty((H, len(self.x_current)), np.float64)
+        out[0] = self.x_current
+        for h in range(1, H):
+            out[h] = (self.plan[min(h + 1, H - 1)] if self.plan is not None
+                      else self.x_current)
+        return out
+
+    # -- the receding-horizon tick -------------------------------------------
+
+    def plan_counts(self, probs: List[AllocationProblem]) -> np.ndarray:
+        """Warm tick: solve the time-expanded program, store the relaxed
+        plan, and return the committed tick's rounded counts — rounded
+        plan-respectingly when H > 1 (``round_committed``), so the polish
+        scale-down cannot strip pre-provisioned capacity."""
+        hp = expand_problems(probs, coupling_w=self.coupling_w,
+                             coupling_eps=self.coupling_eps)
+        X = solve_horizon(hp, jnp.asarray(self.x_current, jnp.float32),
+                          jnp.asarray(self.delta_max, jnp.float32),
+                          x_init=jnp.asarray(self.shifted_plan(), jnp.float32),
+                          steps=self.solver_steps, penalty_w=self.penalty_w)
+        self.plan = np.asarray(X, np.float64)
+        return np.asarray(round_committed(probs[0], X[0],
+                                          respect_plan=(self.horizon > 1)),
+                          np.float64)
+
+    def step(self, demand: np.ndarray,
+             x_init: Optional[np.ndarray] = None) -> ControllerStep:
+        """Advance one tick: forecast, solve the window, commit tick 0.
+
+        ``x_init`` is accepted for interface parity with the myopic
+        controller but ignored — the MPC warm start is the shifted plan."""
+        demand = np.asarray(demand, np.float64)
+        demands = self.window_demands(demand)
+        probs = self.window_problems(demands)
+        if self.x_current is None:
+            # cold: no churn to couple — the myopic multistart cold start,
+            # identical at every H (and to the batched fleet cold start)
+            x, replanned = self.cold_start_counts(probs[0]), True
+            self.plan = np.tile(x, (self.horizon, 1))
+        else:
+            x, replanned = self.plan_counts(probs), False
+        return self.apply_counts(demand, x, replanned)

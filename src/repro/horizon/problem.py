@@ -1,0 +1,174 @@
+"""Time-expanded convex program over a lookahead window of H ticks.
+
+The myopic controller solves one ``AllocationProblem`` per tick; the MPC
+controller instead stacks the next H ticks' problems (current observed
+demand + H-1 forecast ticks, each built by the SAME ``make_problem``
+construction, demand normalization included) into one program over the
+plan matrix ``X ∈ R^{H×n}``:
+
+    min_X  Σ_h f_h(X_h)  +  w · Σ_{h=1..H-1} Σ_i s_eps((X_h - X_{h-1})_i)
+    s.t.   X_h ∈ box_h ∩ mask_h                          (every tick)
+           ||X_0 - x_current||_1 <= delta_max            (committed tick)
+
+where f_h is the per-tick eq.(1) objective (cost + consolidation +
+volume-discount + log-fragmentation/shortage terms) of that tick's
+normalized problem, and s_eps(u) = sqrt(u² + eps) - sqrt(eps) is the
+smoothed |u| used for the INTER-TICK churn coupling (the sqrt(eps)
+subtraction pins s_eps(0) = 0, so an unchanged plan — padded columns
+included — contributes exactly nothing). The coupling between planned ticks is
+soft (a smooth penalty the relaxed solve can trade against cost), while the
+committed step's churn stays a HARD constraint, enforced by exact
+``core.incremental.project_incremental`` chaining from ``x_current`` inside
+the solver — so tick 0 obeys exactly the bound the myopic controller obeys.
+With w = 0 the program decouples into H independent per-tick problems
+(property-tested: :func:`horizon_objective` equals the sum of per-tick
+``core.objective.objective`` values).
+
+Representation: the H per-tick problems are stacked with
+``repro.fleet.batching.stack_problems`` — the leading axis that machinery
+gives a fleet of tenants here indexes lookahead ticks, and the same exact-
+padding invariants let the fleet replay pad a window to its tenant's shape
+bucket. See docs/horizon.md for the full formulation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.objective as obj
+from repro.core.problem import AllocationProblem
+from repro.fleet.batching import stack_problems
+
+# defaults tuned on the horizon_bench diurnal/flash-crowd fleets: the
+# coupling must sit on the scale of per-node hourly prices (0.1-1.5 $/hr in
+# solver units) — below a node's price the plan tracks every demand wiggle
+# (no smoothing), far above it the plan never scales down
+DEFAULT_COUPLING_W = 0.3
+DEFAULT_COUPLING_EPS = 1e-4
+
+
+class HorizonProblem(NamedTuple):
+    """The time-expanded program: H stacked per-tick problems + coupling.
+
+    ``problem`` is an ``AllocationProblem`` whose leaves carry a leading
+    (H,) axis (tick h's problem is slice ``[h]``); ``coupling_w`` and
+    ``coupling_eps`` are the smoothed-L1 inter-tick churn weight and
+    smoothing epsilon. A pytree — jit/vmap-safe, so the fleet engine maps
+    one extra (B,) axis on top for batched MPC replays."""
+
+    problem: AllocationProblem
+    coupling_w: jnp.ndarray
+    coupling_eps: jnp.ndarray
+
+    @property
+    def H(self) -> int:
+        """Number of lookahead ticks (leading axis of every problem leaf)."""
+        return self.problem.d.shape[0]
+
+    @property
+    def n(self) -> int:
+        """Variable count per tick (padded, when bucketed by the fleet)."""
+        return self.problem.c.shape[-1]
+
+
+def expand_problems(problems: Sequence[AllocationProblem],
+                    coupling_w: float = DEFAULT_COUPLING_W,
+                    coupling_eps: float = DEFAULT_COUPLING_EPS,
+                    n_max: Optional[int] = None,
+                    m_max: Optional[int] = None,
+                    p_max: Optional[int] = None) -> HorizonProblem:
+    """Stack per-tick problems (tick 0 first) into a HorizonProblem.
+
+    All ticks normally share one catalog, hence one shape, and stack with no
+    padding; ``n_max``/``m_max``/``p_max`` let the fleet replay pad the
+    window up to its tenant's shape bucket (the stacking's exact-padding
+    invariants make the padded program equivalent — see
+    ``repro.fleet.batching``)."""
+    assert len(problems) >= 1, "empty horizon window"
+    batch = stack_problems(list(problems), n_max=n_max, m_max=m_max,
+                           p_max=p_max)
+    return HorizonProblem(problem=batch.problem,
+                          coupling_w=jnp.asarray(coupling_w, jnp.float32),
+                          coupling_eps=jnp.asarray(coupling_eps, jnp.float32))
+
+
+def tick_problem(hp: HorizonProblem, h: int) -> AllocationProblem:
+    """Slice tick ``h``'s AllocationProblem back out of the stack."""
+    return jax.tree_util.tree_map(lambda a: a[h], hp.problem)
+
+
+def coupling_penalty(X: jnp.ndarray, w, eps) -> jnp.ndarray:
+    """w · Σ_h Σ_i [sqrt((X_h - X_{h-1})_i² + eps) - sqrt(eps)].
+
+    The smoothed inter-tick L1 churn of a plan X (H, n). Subtracting the
+    smoothing floor sqrt(eps) makes s(0) = 0 exactly, so a constant plan —
+    and every pinned-zero padded column — contributes nothing to the value
+    (padding-exactness, property-tested); the gradient is unaffected. Zero
+    terms at H = 1 (a single-tick window has no internal churn)."""
+    D = X[1:] - X[:-1]
+    return w * jnp.sum(jnp.sqrt(D * D + eps) - jnp.sqrt(eps))
+
+
+def coupling_grad(X: jnp.ndarray, w, eps) -> jnp.ndarray:
+    """Analytic gradient of :func:`coupling_penalty` wrt the plan X (H, n).
+
+    Row h receives +s(D_h) from the difference it ends and -s(D_{h+1}) from
+    the one it starts, where s(u) = w·u/sqrt(u²+eps)."""
+    D = X[1:] - X[:-1]
+    S = w * D / jnp.sqrt(D * D + eps)            # (H-1, n)
+    Z = jnp.zeros_like(X[:1])
+    return jnp.concatenate([Z, S]) - jnp.concatenate([S, Z])
+
+
+def smoothed_churn(X: jnp.ndarray, eps) -> jnp.ndarray:
+    """Per-transition smoothed L1 churn of a plan: (H-1,) vector of
+    Σ_i s_eps((X_h - X_{h-1})_i), the differentiable stand-in for
+    ||x_h - x_{h-1}||_1."""
+    D = X[1:] - X[:-1]
+    return jnp.sum(jnp.sqrt(D * D + eps) - jnp.sqrt(eps), axis=-1)
+
+
+def churn_bound_penalty(X: jnp.ndarray, delta_max, w, eps) -> jnp.ndarray:
+    """w · Σ_h max(smoothed_churn_h − delta_max, 0)² — the soft churn BOUND
+    on planned transitions.
+
+    The committed tick's churn is hard-constrained, but a receding-horizon
+    controller will be churn-bounded at EVERY future commit too; without
+    this term the plan could schedule the whole scale-up in one future tick
+    (total L1 churn is the same whether a ramp is early or late, so the
+    plain coupling expresses no urgency). Penalizing per-transition excess
+    over ``delta_max`` makes bursts that exceed one tick's churn budget
+    pull the EARLIER ticks up — pre-provisioning emerges exactly when the
+    model says scaling later would be infeasible."""
+    excess = jnp.maximum(smoothed_churn(X, eps) - delta_max, 0.0)
+    return w * jnp.sum(excess * excess)
+
+
+def churn_bound_grad(X: jnp.ndarray, delta_max, w, eps) -> jnp.ndarray:
+    """Analytic gradient of :func:`churn_bound_penalty` wrt the plan X."""
+    D = X[1:] - X[:-1]
+    S = D / jnp.sqrt(D * D + eps)                        # ds/du, (H-1, n)
+    excess = jnp.maximum(smoothed_churn(X, eps) - delta_max, 0.0)
+    G = (2.0 * w * excess)[:, None] * S                  # d/dD, (H-1, n)
+    Z = jnp.zeros_like(X[:1])
+    return jnp.concatenate([Z, G]) - jnp.concatenate([G, Z])
+
+
+def horizon_objective(hp: HorizonProblem, X: jnp.ndarray) -> jnp.ndarray:
+    """The relaxed time-expanded objective at a plan X (H, n):
+    per-tick eq.(1) objectives summed, plus the smoothed churn coupling.
+
+    With ``coupling_w == 0`` this equals ``Σ_h objective(prob_h, X_h)``
+    exactly (property-tested in tests/horizon) — the program decouples."""
+    per_tick = jax.vmap(obj.objective)(hp.problem, X)
+    return jnp.sum(per_tick) + coupling_penalty(X, hp.coupling_w,
+                                                hp.coupling_eps)
+
+
+def horizon_objective_terms(hp: HorizonProblem, X: jnp.ndarray) -> dict:
+    """Diagnostic split: {"per_tick": (H,) objectives, "coupling": scalar}."""
+    per_tick = jax.vmap(obj.objective)(hp.problem, X)
+    return {"per_tick": per_tick,
+            "coupling": coupling_penalty(X, hp.coupling_w, hp.coupling_eps)}

@@ -1,0 +1,260 @@
+"""Jitted solver for the time-expanded receding-horizon program.
+
+Two entry points, both one compiled program per call:
+
+* :func:`solve_horizon` — one tenant: projected-gradient descent on the
+  relaxed time-expanded objective over the plan ``X ∈ R^{H×n}``.
+* :func:`solve_horizon_fleet_step` — the fleet analogue of
+  ``repro.fleet.solver.solve_fleet_step``: the SAME per-tenant solve
+  ``vmap``-ed across a (B,) leading lane axis, plus committed-tick rounding
+  and ragged-horizon freezing, so a batched MPC replay issues one program
+  per shape bucket per tick.
+
+The iteration mirrors ``core.incremental.solve_incremental`` (the myopic
+controller's warm tick) tick-by-tick:
+
+    X ← Π( X - ∇F(X) / L )
+
+with ∇F = per-tick analytic eq.(1) gradients (``core.objective``) plus the
+smoothed inter-tick churn coupling, per-tick Lipschitz-ish steps L_h, and a
+projection Π that applies exact ``project_incremental`` chaining from
+``x_current`` on the COMMITTED tick (hard L1 churn ball — the same bound
+the myopic controller enforces) and the box/mask projection on the planned
+ticks, whose churn stays soft via the coupling penalty.
+
+Two H>1-only terms make the lookahead real rather than decorative:
+
+* **planned-tick band penalty** — the relaxed eq.(1) objective alone
+  under-provisions systematically (the shortage term is soft; in this
+  codebase demand COVERAGE is enforced by the feasibility-first greedy
+  rounding, which planned rows never receive). Rows 1..H-1 therefore get
+  the solver's quadratic band penalty (``core.objective.penalty``, the
+  same fallback ``core.solver`` uses when no strict interior exists), so
+  the plan settles at true future requirement levels and the coupling
+  pulls the committed tick toward the right target.
+* **plan-respecting commit rounding** — ``round_and_polish``'s scale-down
+  strips every unit the CURRENT tick does not need, which would erase any
+  pre-provisioning the plan decided to hold. The committed tick is
+  rounded with its lower bound lifted to ``floor(x_rel_0)``
+  (:func:`round_committed`): rounding still covers today's demand and
+  still rounds fractions, but cannot scale below what the plan asked for.
+
+At H = 1 both terms — and the coupling — vanish STRUCTURALLY (H is static
+under jit, so they are absent from the compiled program, not just zero; a
+one-tick window has no future to protect) and the tick reduces op-for-op
+to ``solve_incremental`` + plain ``round_and_polish``: MPC with a one-tick
+window reproduces the myopic controller's allocations exactly
+(test-enforced — the equivalence anchor for everything the lookahead
+adds).
+
+The COLD start of an MPC replay needs no horizon solve at all: with no
+current allocation there is no churn to couple, and the first committed
+tick is the same multistart phase1→barrier-PGD→rounding program the myopic
+controller (and ``solve_fleet``) runs — the horizon controller reuses those
+core/fleet pieces directly rather than duplicating them here.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.objective as obj
+from repro.core.incremental import project_incremental
+from repro.core.objective import is_feasible, objective
+from repro.core.rounding import round_and_polish
+
+from .problem import (HorizonProblem, churn_bound_grad, coupling_grad,
+                      tick_problem)
+
+# planned-tick band-penalty weight; matches core.solver.SolverConfig's
+# penalty_w — the same quadratic fallback weight the barrier solver uses
+DEFAULT_PENALTY_W = 1e3
+# soft churn-BOUND weight on planned transitions (problem.churn_bound_penalty)
+# — strong enough that a one-tick excess of 1 node costs ~a node-hour, weak
+# enough that the committed tick's step size stays usable
+DEFAULT_DELTA_PENALTY_W = 50.0
+
+
+def _tick_lipschitz(prob) -> jnp.ndarray:
+    """Per-tick step denominator, the exact expression solve_incremental
+    uses (required for the H=1 op-for-op equivalence)."""
+    return (2.0 * prob.params.beta3 * jnp.sum(prob.K * prob.K)
+            + jnp.linalg.norm(prob.c) + 1e-3)
+
+
+def _solve_horizon_body(hp: HorizonProblem, x_current: jnp.ndarray,
+                        delta_max: jnp.ndarray, x_init: jnp.ndarray,
+                        steps: int, step_scale: float, penalty_w: float,
+                        delta_penalty_w: float) -> jnp.ndarray:
+    """The (un-jitted) PGD loop over one plan X (H, n) — shared by the
+    single-tenant and the vmapped fleet entry points."""
+    prob = hp.problem
+    H = hp.H                              # static under jit/vmap tracing
+    p0 = tick_problem(hp, 0)
+    L = jax.vmap(_tick_lipschitz)(prob)                          # (H,)
+    if H > 1:
+        rest = jax.tree_util.tree_map(lambda a: a[1:], prob)
+        # curvature of the smoothed |u|: s''(0) = 1/sqrt(eps), two coupling
+        # terms touch each row, plus ~2w per adjacent transition from the
+        # churn-bound hinge; planned rows add the band penalty's
+        # 2*w*sum(K^2). Statically absent at H=1 so the step size matches
+        # solve_incremental exactly.
+        L = (L + 2.0 * hp.coupling_w / jnp.sqrt(hp.coupling_eps)
+             + 4.0 * delta_penalty_w)
+        pen_curv = 2.0 * penalty_w * jax.vmap(
+            lambda pb: jnp.sum(pb.K * pb.K))(rest)               # (H-1,)
+        L = jnp.concatenate([L[:1], L[1:] + pen_curv])
+
+    def proj(X):
+        x0 = project_incremental(p0, X[0], x_current, delta_max)
+        if H == 1:
+            return x0[None]
+        rest_X = jax.vmap(obj.project)(rest, X[1:])
+        return jnp.concatenate([x0[None], rest_X], axis=0)
+
+    def body(i, X):
+        G = jax.vmap(obj.grad_objective)(prob, X)
+        if H > 1:
+            G = G + coupling_grad(X, hp.coupling_w, hp.coupling_eps)
+            G = G + churn_bound_grad(X, delta_max,
+                                     jnp.asarray(delta_penalty_w, jnp.float32),
+                                     hp.coupling_eps)
+            Gp = jax.vmap(lambda pb, x: obj.penalty_grad(
+                pb, x, jnp.asarray(penalty_w, jnp.float32)))(rest, X[1:])
+            G = jnp.concatenate([G[:1], G[1:] + Gp])
+        X = X - step_scale * G / L[:, None]
+        return proj(X)
+
+    return jax.lax.fori_loop(0, steps, body, proj(x_init))
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def _solve_horizon_impl(hp, x_current, delta_max, x_init, steps, step_scale,
+                        penalty_w, delta_penalty_w):
+    return _solve_horizon_body(hp, x_current, delta_max, x_init, steps,
+                               step_scale, penalty_w, delta_penalty_w)
+
+
+def solve_horizon(hp: HorizonProblem, x_current, delta_max,
+                  x_init: Optional[jnp.ndarray] = None, steps: int = 600,
+                  step_scale: float = 1.0,
+                  penalty_w: float = DEFAULT_PENALTY_W,
+                  delta_penalty_w: float = DEFAULT_DELTA_PENALTY_W
+                  ) -> jnp.ndarray:
+    """Solve the relaxed time-expanded program; returns the plan X (H, n).
+
+    ``x_current`` (n,) is the currently deployed allocation the committed
+    tick chains from (hard L1 ball of radius ``delta_max``, exact
+    ``project_incremental``); ``x_init`` optionally warm-starts the whole
+    plan (the MPC controller passes its previous plan shifted one tick,
+    with row 0 reset to ``x_current``). ``penalty_w`` is the planned-tick
+    band-penalty weight and ``delta_penalty_w`` the soft churn-bound weight
+    on planned transitions (module docstring; both inert at H=1). Defaults:
+    ``x_init`` = x_current tiled; ``steps`` = 600, matching
+    ``solve_incremental`` so the H=1 program is the myopic warm tick
+    op-for-op. Only row 0 is committed — round it with
+    :func:`round_committed` on the tick-0 problem."""
+    x_current = jnp.asarray(x_current, jnp.float32)
+    delta_max = jnp.asarray(delta_max, jnp.float32)
+    if x_init is None:
+        x_init = jnp.tile(x_current[None, :], (hp.H, 1))
+    return _solve_horizon_impl(hp, x_current, delta_max,
+                               jnp.asarray(x_init, jnp.float32), int(steps),
+                               float(step_scale), float(penalty_w),
+                               float(delta_penalty_w))
+
+
+def round_committed(p0, x_rel0: jnp.ndarray,
+                    respect_plan: bool) -> jnp.ndarray:
+    """Round the committed tick. With ``respect_plan`` (H>1) the rounding
+    problem's lower bound is lifted to ``floor(x_rel0)``, so the polish
+    scale-down cannot strip capacity the plan decided to hold for future
+    ticks — rounding keeps its feasibility-first behavior for TODAY's
+    demand but loses its authority to undo pre-provisioning. With
+    ``respect_plan=False`` (H=1) this is plain ``round_and_polish``,
+    bit-identical to the myopic controller's commit."""
+    if not respect_plan:
+        return round_and_polish(p0, x_rel0)
+    lb = jnp.clip(jnp.floor(x_rel0), p0.lb, p0.ub)
+    return round_and_polish(p0._replace(lb=lb), x_rel0)
+
+
+# ---------------------------------------------------------------------------
+# batched fleet tick (one program per shape bucket per tick, like solve_fleet)
+# ---------------------------------------------------------------------------
+
+
+class HorizonFleetStepResult(NamedTuple):
+    """One batched receding-horizon tick over a fleet of lookahead windows."""
+
+    plan: jnp.ndarray       # (B, H, n) relaxed plans (frozen: x_current tiled)
+    x_int: jnp.ndarray      # (B, n) committed (rounded) tick-0 allocation
+    fun_int: jnp.ndarray    # (B,) tick-0 objective at x_int
+    feasible: jnp.ndarray   # (B,) tick-0 integer feasibility
+
+
+@partial(jax.jit, static_argnames=("steps", "respect_plan"))
+def _horizon_fleet_step_impl(hp: HorizonProblem, x_current: jnp.ndarray,
+                             delta_max: jnp.ndarray, x_init: jnp.ndarray,
+                             active: jnp.ndarray, steps: int,
+                             penalty_w: jnp.ndarray,
+                             delta_penalty_w: jnp.ndarray, respect_plan: bool
+                             ) -> HorizonFleetStepResult:
+    # vmap the SAME body over the (B,) lane axis; vmap preserves per-lane op
+    # structure, so each lane matches a sequential solve_horizon call
+    plan = jax.vmap(
+        lambda pb, xc, dm, xi: _solve_horizon_body(
+            HorizonProblem(pb, hp.coupling_w, hp.coupling_eps), xc, dm, xi,
+            steps, 1.0, penalty_w, delta_penalty_w)
+    )(hp.problem, x_current, delta_max, x_init)
+    p0 = jax.tree_util.tree_map(lambda a: a[:, 0], hp.problem)   # (B, ...)
+    x_int = jax.vmap(lambda pb, xr: round_committed(pb, xr, respect_plan)
+                     )(p0, plan[:, 0])
+    # frozen lanes (expired traces) keep their current allocation untouched
+    plan = jnp.where(active[:, None, None], plan,
+                     jnp.broadcast_to(x_current[:, None, :], plan.shape))
+    x_int = jnp.where(active[:, None], x_int, x_current)
+    f_int = jax.vmap(objective)(p0, x_int)
+    feas = jax.vmap(lambda pb, xi: is_feasible(pb, xi, 1e-3))(p0, x_int)
+    return HorizonFleetStepResult(plan=plan, x_int=x_int, fun_int=f_int,
+                                  feasible=feas)
+
+
+def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
+                             delta_max: Union[float, jnp.ndarray],
+                             x_init: Optional[jnp.ndarray] = None,
+                             active: Optional[np.ndarray] = None,
+                             steps: int = 600,
+                             penalty_w: float = DEFAULT_PENALTY_W,
+                             delta_penalty_w: float = DEFAULT_DELTA_PENALTY_W
+                             ) -> HorizonFleetStepResult:
+    """One receding-horizon tick for EVERY tenant lane in one jitted program.
+
+    ``hp.problem`` leaves carry (B, H, ...) axes — B tenant lanes (padded to
+    one shape bucket, exactly like ``solve_fleet``), each a stacked H-tick
+    window. ``x_current`` (B, n) is the fleet's deployed allocation (the
+    committed tick's hard-churn anchor), ``delta_max`` scalar or (B,),
+    ``x_init`` (B, H, n) the per-lane plan warm starts (default: x_current
+    tiled). ``active`` is the ragged-horizon liveness mask with
+    solve_fleet_step semantics: frozen lanes come back with
+    ``x_int == x_current`` and their plan pinned to it. vmap keeps lanes
+    independent, so live lanes match sequential :func:`solve_horizon` +
+    ``round_and_polish`` calls exactly (CPU, test-enforced)."""
+    B = hp.problem.c.shape[0]
+    H = hp.problem.d.shape[1]
+    x_current = jnp.asarray(x_current, jnp.float32)
+    delta_max = jnp.broadcast_to(jnp.asarray(delta_max, jnp.float32), (B,))
+    if x_init is None:
+        x_init = jnp.tile(x_current[:, None, :], (1, H, 1))
+    active = (jnp.ones(B, bool) if active is None
+              else jnp.asarray(np.asarray(active, bool)))
+    return _horizon_fleet_step_impl(hp, x_current, delta_max,
+                                    jnp.asarray(x_init, jnp.float32), active,
+                                    int(steps),
+                                    jnp.asarray(penalty_w, jnp.float32),
+                                    jnp.asarray(delta_penalty_w, jnp.float32),
+                                    respect_plan=(H > 1))

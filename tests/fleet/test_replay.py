@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import Catalog, make_cloud_catalog, optimize
 from repro.core.scenarios import Scenario
-from repro.fleet import TenantSpec, make_trace, replay_fleet
+from repro.fleet import TRACE_KINDS, TenantSpec, make_trace, replay_fleet
 from repro.fleet.traces import (constant_trace, diurnal_trace,
                                 flash_crowd_trace, ramp_trace, weekly_trace)
 
@@ -21,15 +21,17 @@ def tiny_catalog():
 # traces
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kind", ["diurnal", "flash_crowd", "ramp", "weekly",
-                                  "constant"])
+# satellite: enumerate the registry (exported from repro.fleet so sweeps —
+# horizon_bench in particular — never hardcode the kind list) and check
+# every registered kind is seed-deterministic
+@pytest.mark.parametrize("kind", sorted(TRACE_KINDS))
 def test_trace_shapes_positive_deterministic(kind):
     a = make_trace(kind, BASE, 48, seed=3)
     b = make_trace(kind, BASE, 48, seed=3)
     assert a.shape == (48, 4)
     assert np.all(a > 0)
     np.testing.assert_array_equal(a, b)
-    if kind != "constant":
+    if kind != "constant":   # constant is seed-free by construction
         c = make_trace(kind, BASE, 48, seed=4)
         assert not np.array_equal(a, c)
 
@@ -62,6 +64,31 @@ def test_make_trace_constant_rejects_unknown_kwargs():
     # seed stays accepted at the registry level (universal knob, no-op here)
     np.testing.assert_array_equal(make_trace("constant", BASE, 8, seed=5),
                                   constant_trace(BASE, 8))
+
+
+def test_tenant_spec_validates_trace_at_construction():
+    """Satellite regression: malformed traces must fail AT CONSTRUCTION with
+    a clear ValueError, not deep inside the solver with an opaque broadcast
+    error."""
+    with pytest.raises(ValueError, match="2-D"):
+        TenantSpec(name="flat", trace=np.ones(8))
+    with pytest.raises(ValueError, match="resource dim is 4"):
+        TenantSpec(name="m3", trace=np.ones((6, 3)))
+    with pytest.raises(ValueError, match="at least one tick"):
+        TenantSpec(name="empty", trace=np.ones((0, 4)))
+    # a per-tenant catalog decides the expected dim for that tenant
+    cat = Catalog(make_cloud_catalog().instances[::200])
+    with pytest.raises(ValueError):
+        TenantSpec(name="c", trace=np.ones((6, 5)), catalog=cat)
+    TenantSpec(name="ok", trace=np.ones((6, 4)), catalog=cat)  # no raise
+
+
+def test_replay_fleet_rejects_empty_tenant_list(tiny_catalog):
+    """Satellite regression: an empty fleet must raise a clear ValueError up
+    front (both engines used to fail later with engine-specific errors)."""
+    for mode in ("sequential", "batched"):
+        with pytest.raises(ValueError, match="at least one TenantSpec"):
+            replay_fleet(tiny_catalog, [], replay_mode=mode)
 
 
 # ---------------------------------------------------------------------------
@@ -322,6 +349,30 @@ def test_solver_steps_plumbed_to_batched_engine(tiny_catalog, monkeypatch):
     replay_fleet(tiny_catalog, [spec], run_ca_baseline=False,
                  replay_mode="batched", solver_steps=123)
     assert seen == [123, 123]                   # one warm tick per t=1,2
+
+
+def test_churn_violation_recorded_and_surfaced(tiny_catalog):
+    """Satellite: ControllerStep.churn_violation must record the rounded
+    allocation's excess over delta_max (previously only a code comment), and
+    the fleet summary must surface the fleet max — honest churn comparisons
+    between controllers need the overruns, not just the totals."""
+    # a hard flash crowd under a tight churn bound forces rounding to break
+    # the bound (feasibility-first: shortage beats churn); demand is scaled
+    # so allocations span tens of nodes — at single-node scale the burst is
+    # absorbed by integer over-capacity and nothing overruns
+    trace = flash_crowd_trace(BASE * 25, 4, burst_scale=3.0, noise=0.0,
+                              seed=1)
+    spec = TenantSpec(name="tight", trace=trace, delta_max=1.0, n_starts=2)
+    out = replay_fleet(tiny_catalog, [spec], run_ca_baseline=False)
+    steps = out.tenants[0].steps
+    assert steps[0].replanned and steps[0].churn_violation == 0.0
+    for s in steps[1:]:
+        assert s.churn_violation == pytest.approx(max(0.0, s.churn - 1.0))
+    worst = max(s.churn_violation for s in steps)
+    assert worst > 0.0                      # the scenario does overrun
+    assert out.tenants[0].metrics.max_churn_violation == worst
+    assert out.metrics.max_churn_violation == worst
+    assert "churn overrun" in out.metrics.summary()
 
 
 def test_replay_churn_is_bounded_on_smooth_trace(tiny_catalog):

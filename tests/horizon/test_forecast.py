@@ -1,0 +1,86 @@
+"""Forecaster contracts: shapes, positivity, determinism, registry, and the
+kind-specific behaviors (persistence, smoothing, seasonality, ground truth).
+See docs/horizon.md for the observe/predict contract being enforced."""
+import numpy as np
+import pytest
+
+from repro.fleet.traces import diurnal_trace
+from repro.horizon import (FORECASTER_KINDS, HoltWintersForecaster,
+                           LastValueForecaster, make_forecaster)
+
+BASE = np.array([8.0, 16.0, 4.0, 100.0])
+
+
+def _feed(fc, trace, upto):
+    for d in trace[:upto]:
+        fc.observe(d)
+    return fc
+
+
+@pytest.mark.parametrize("kind", sorted(FORECASTER_KINDS))
+def test_contract_shape_positive_deterministic(kind):
+    """Every kind: (k, m) forecasts, strictly positive, deterministic given
+    the observation stream, and predict() does not mutate state."""
+    trace = diurnal_trace(BASE, 30, seed=2)
+    a = _feed(make_forecaster(kind, trace=trace), trace, 10)
+    b = _feed(make_forecaster(kind, trace=trace), trace, 10)
+    pa, pb = a.predict(6), b.predict(6)
+    assert pa.shape == (6, 4)
+    assert np.all(pa > 0)
+    np.testing.assert_array_equal(pa, pb)
+    # predict is read-only: asking twice gives the same answer
+    np.testing.assert_array_equal(pa, a.predict(6))
+
+
+def test_last_value_is_persistence():
+    fc = LastValueForecaster()
+    fc.observe(np.array([1.0, 2.0, 3.0, 4.0]))
+    fc.observe(np.array([5.0, 6.0, 7.0, 8.0]))
+    np.testing.assert_array_equal(fc.predict(3),
+                                  np.tile([5.0, 6.0, 7.0, 8.0], (3, 1)))
+
+
+def test_ewma_smooths_toward_recent():
+    fc = make_forecaster("ewma", alpha=0.5)
+    fc.observe(np.full(4, 10.0))
+    fc.observe(np.full(4, 20.0))
+    np.testing.assert_allclose(fc.predict(2), np.full((2, 4), 15.0))
+
+
+def test_holt_winters_learns_seasonality():
+    """After two clean cycles, the seasonal forecaster should track the next
+    cycle far better than persistence does."""
+    P = 8
+    t = np.arange(4 * P)
+    wave = 10.0 + 4.0 * np.sin(2 * np.pi * t / P)
+    trace = np.tile(wave[:, None], (1, 4))
+    hw = HoltWintersForecaster(period=P, alpha=0.4, gamma=0.5)
+    lv = LastValueForecaster()
+    upto = 3 * P
+    _feed(hw, trace, upto)
+    _feed(lv, trace, upto)
+    future = trace[upto: upto + P]
+    err_hw = np.abs(hw.predict(P) - future).mean()
+    err_lv = np.abs(lv.predict(P) - future).mean()
+    assert err_hw < 0.5 * err_lv, (err_hw, err_lv)
+
+
+def test_oracle_reads_ground_truth_and_clamps_at_end():
+    trace = diurnal_trace(BASE, 10, seed=1)
+    fc = make_forecaster("oracle", trace=trace)
+    _feed(fc, trace, 4)
+    np.testing.assert_array_equal(fc.predict(3), trace[4:7])
+    _feed(fc, trace[4:], 6)          # now all 10 observed
+    # beyond the end: the final row repeats
+    np.testing.assert_array_equal(fc.predict(2), np.tile(trace[-1], (2, 1)))
+
+
+def test_registry_errors():
+    with pytest.raises(ValueError):
+        make_forecaster("nope")
+    with pytest.raises(ValueError):
+        make_forecaster("oracle")           # oracle needs trace=
+    # non-oracle kinds ignore trace=, so replay code can pass it blindly
+    fc = make_forecaster("last_value", trace=diurnal_trace(BASE, 5))
+    fc.observe(BASE)
+    assert fc.predict(1).shape == (1, 4)

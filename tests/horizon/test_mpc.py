@@ -1,0 +1,144 @@
+"""Receding-horizon controller + fleet integration.
+
+The anchor (ISSUE acceptance): MPC with H=1 and the last_value forecaster
+must reproduce the myopic controller's per-tick INTEGER allocations exactly
+— every lookahead behavior is then an explicit deviation from that anchored
+baseline, not an artifact of a different solver.
+
+Property-style tests run through the deterministic ``repro.testing`` shim
+when the image lacks hypothesis."""
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis — deterministic shim
+    from repro.testing import given, settings, strategies as st
+
+import numpy as np
+import pytest
+
+from repro.core import Catalog, make_cloud_catalog
+from repro.core.controller import InfrastructureOptimizationController
+from repro.fleet import TenantSpec, replay_fleet
+from repro.fleet.traces import (constant_trace, diurnal_trace,
+                                flash_crowd_trace, ramp_trace)
+from repro.horizon import ModelPredictiveController, make_forecaster
+
+BASE = np.array([8.0, 16.0, 4.0, 100.0])
+
+
+@pytest.fixture(scope="module")
+def tiny_catalog():
+    return Catalog(make_cloud_catalog().instances[::40])
+
+
+def test_h1_last_value_mpc_reproduces_myopic(tiny_catalog):
+    """Tentpole acceptance: H=1 + last_value ≡ the myopic controller,
+    per-tick integer allocations compared EXACTLY through replay_fleet."""
+    specs = [
+        TenantSpec(name="a", trace=diurnal_trace(BASE, 4, amplitude=0.3,
+                                                 noise=0.0), n_starts=2),
+        TenantSpec(name="b", trace=ramp_trace(BASE * 0.5, 3, end_scale=1.5,
+                                              noise=0.0), n_starts=2,
+                   delta_max=4.0),
+    ]
+    myo = replay_fleet(tiny_catalog, specs, run_ca_baseline=False)
+    mpc = replay_fleet(tiny_catalog, specs, run_ca_baseline=False,
+                       controller="mpc", horizon=1, forecaster="last_value")
+    assert mpc.metrics.controller == "mpc"
+    for rm, rp in zip(myo.tenants, mpc.tenants):
+        for sm, sp in zip(rm.steps, rp.steps):
+            np.testing.assert_array_equal(sm.counts, sp.counts)
+            assert sm.churn == sp.churn
+            assert sm.replanned == sp.replanned
+        assert rm.metrics.cost_integral == rp.metrics.cost_integral
+
+
+@settings(max_examples=3)
+@given(cat_pick=st.integers(0, 2), trace_seed=st.integers(0, 50))
+def test_h1_equivalence_across_random_catalogs(cat_pick, trace_seed):
+    """Satellite property test: the H=1 ≡ myopic equivalence is structural,
+    not tuned to one catalog — it holds across random catalog slices and
+    random traces (strides drawn from a fixed set so compile shapes repeat
+    across examples)."""
+    stride = (38, 40, 44)[cat_pick]
+    cat = Catalog(make_cloud_catalog().instances[::stride])
+    trace = diurnal_trace(BASE * (0.6 + 0.1 * (trace_seed % 4)), 3,
+                          amplitude=0.35, seed=trace_seed)
+    myo = InfrastructureOptimizationController(catalog=cat, n_starts=2)
+    mpc = ModelPredictiveController(catalog=cat, n_starts=2, horizon=1,
+                                    forecaster=make_forecaster("last_value"))
+    for d in trace:
+        np.testing.assert_array_equal(myo.step(d).counts, mpc.step(d).counts)
+
+
+def test_batched_mpc_matches_sequential(tiny_catalog):
+    """Tentpole acceptance: the batched MPC engine (one vmapped
+    solve_horizon_fleet_step per shape bucket per tick) must yield per-tenant
+    integer allocations identical to the sequential MPC loop on CPU —
+    ragged horizons and a per-tenant catalog included."""
+    cat_other = Catalog(make_cloud_catalog().instances[::50])
+    specs = [
+        TenantSpec(name="a", trace=diurnal_trace(BASE, 4, amplitude=0.3,
+                                                 noise=0.0), n_starts=2),
+        TenantSpec(name="b", trace=ramp_trace(BASE * 0.5, 2, end_scale=1.5,
+                                              noise=0.0), n_starts=2,
+                   catalog=cat_other, delta_max=4.0),
+        TenantSpec(name="c", trace=constant_trace(BASE, 3), n_starts=2),
+    ]
+    kw = dict(run_ca_baseline=False, controller="mpc", horizon=3,
+              forecaster="holt_winters", forecaster_kwargs=dict(period=24))
+    seq = replay_fleet(tiny_catalog, specs, replay_mode="sequential", **kw)
+    bat = replay_fleet(tiny_catalog, specs, replay_mode="batched", **kw)
+    for rs, rb in zip(seq.tenants, bat.tenants):
+        assert len(rs.steps) == len(rb.steps) == rs.spec.trace.shape[0]
+        for ss, sb in zip(rs.steps, rb.steps):
+            np.testing.assert_array_equal(ss.counts, sb.counts)
+            assert ss.churn == sb.churn
+            assert ss.replanned == sb.replanned
+        assert rs.metrics == rb.metrics
+    assert (seq.metrics.total_cost_integral == bat.metrics.total_cost_integral)
+
+
+def test_mpc_lookahead_serves_demand(tiny_catalog):
+    """An H>1 oracle-driven MPC replay on a flash crowd must keep serving
+    demand every tick (the hard tick-0 problem is unchanged; lookahead only
+    reshapes WHERE the plan is headed)."""
+    spec = TenantSpec(name="fc", trace=flash_crowd_trace(BASE, 5,
+                                                         burst_scale=2.5,
+                                                         noise=0.0, seed=3),
+                      n_starts=2, delta_max=16.0)
+    out = replay_fleet(tiny_catalog, [spec], run_ca_baseline=False,
+                       controller="mpc", horizon=4, forecaster="oracle")
+    assert all(s.metrics.satisfied for s in out.tenants[0].steps)
+    assert out.tenants[0].metrics.slo_violation_ticks == 0
+
+
+def test_oracle_regret_plumbing(tiny_catalog):
+    """run_oracle_baseline attaches the oracle twin: oracle-vs-oracle regret
+    is exactly zero, the summary renders it, and the flag is rejected for
+    the myopic controller (regret is an MPC notion)."""
+    spec = TenantSpec(name="t", trace=diurnal_trace(BASE, 3, amplitude=0.2,
+                                                    noise=0.0), n_starts=2)
+    out = replay_fleet(tiny_catalog, [spec], run_ca_baseline=False,
+                       controller="mpc", horizon=2, forecaster="oracle",
+                       run_oracle_baseline=True)
+    assert out.metrics.oracle is not None
+    assert out.metrics.regret_vs_oracle == 0.0
+    assert "regret vs oracle" in out.metrics.summary()
+    with pytest.raises(ValueError):
+        replay_fleet(tiny_catalog, [spec], controller="myopic",
+                     run_oracle_baseline=True)
+
+
+def test_mpc_plan_state(tiny_catalog):
+    """The controller keeps its (H, n) relaxed plan as rolling state."""
+    ctl = ModelPredictiveController(catalog=tiny_catalog, n_starts=2,
+                                    horizon=3,
+                                    forecaster=make_forecaster("ewma"))
+    trace = diurnal_trace(BASE, 3, amplitude=0.2, noise=0.0)
+    for d in trace:
+        ctl.step(d)
+    assert ctl.plan.shape == (3, tiny_catalog.n)
+    assert len(ctl.history) == 3
+    # the committed tick is always within the hard churn bound + rounding
+    shifted = ctl.shifted_plan()
+    np.testing.assert_array_equal(shifted[0], ctl.x_current)

@@ -3,8 +3,8 @@
 
 Fails (exit 1) when:
 
-* a public module under ``src/repro/fleet/`` or ``src/repro/core/`` lacks a
-  module-level docstring,
+* a public module under ``src/repro/fleet/``, ``src/repro/core/`` or
+  ``src/repro/horizon/`` lacks a module-level docstring,
 * a public (non-underscore) top-level function or class in those packages
   lacks a docstring — NamedTuple/dataclass result containers included,
 * a ``docs/*.md`` page referenced from README.md does not exist, or any of
@@ -20,8 +20,9 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-CHECKED_PACKAGES = ("src/repro/fleet", "src/repro/core")
-REQUIRED_DOCS = ("docs/architecture.md", "docs/math.md", "docs/fleet.md")
+CHECKED_PACKAGES = ("src/repro/fleet", "src/repro/core", "src/repro/horizon")
+REQUIRED_DOCS = ("docs/architecture.md", "docs/math.md", "docs/fleet.md",
+                 "docs/horizon.md")
 
 
 def iter_public_modules():
