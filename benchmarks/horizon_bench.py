@@ -23,7 +23,19 @@ where ``churn_cost`` is calibrated to the catalog's median hourly price
 Regret per cell is J minus the oracle forecaster's J at the same (trace, H)
 — the price of forecast error alone (docs/horizon.md).
 
-Run:  PYTHONPATH=src python benchmarks/horizon_bench.py [--quick] [--json PATH]
+Every cell also records ``solver_iters`` — the total inner-PGD iterations
+the replay's warm ticks actually spent (summed over tenants and ticks, read
+off the recorded ``ControllerStep.solver_iters``). By default each cell
+runs under BOTH horizon engines — the adaptive BB/Armijo solver (the
+primary, whose metrics fill the cell) and the original fixed-step solver
+(``objective_fixed`` / ``solver_iters_fixed`` / ``adaptive_beats_fixed``)
+— which is the tentpole's speedup evidence: the adaptive engine must match
+or beat the fixed engine's J while spending fewer iterations at H>=8.
+``--solver adaptive`` / ``--solver fixed`` restrict the sweep to one
+engine to reproduce either side of that claim in isolation.
+
+Run:  PYTHONPATH=src python benchmarks/horizon_bench.py
+          [--quick] [--json PATH] [--solver {adaptive,fixed,both}]
 
 Always writes machine-readable results (default benchmarks/BENCH_horizon.json)
 like fleet_bench does, so the MPC-vs-myopic trajectory is tracked across PRs.
@@ -41,7 +53,7 @@ import numpy as np
 
 from repro.core import Catalog, make_cloud_catalog
 from repro.fleet import TenantSpec, make_trace, replay_fleet
-from repro.horizon import FORECASTER_KINDS
+from repro.horizon import FORECASTER_KINDS, HorizonSolverConfig
 
 DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "BENCH_horizon.json")
@@ -83,21 +95,68 @@ def _cell_metrics(metrics, churn_cost: float) -> dict:
     )
 
 
+def _total_solver_iters(res) -> int:
+    """Warm-tick PGD iterations the whole replay spent (fleet total)."""
+    return int(sum(s.solver_iters for t in res.tenants for s in t.steps))
+
+
+# the fixed-step baseline the adaptive engine is benchmarked against — the
+# same 600-step budget both engines get per warm tick
+FIXED_CFG = HorizonSolverConfig(solver="fixed")
+
+# "matching" tolerance for the adaptive-vs-fixed J comparison: replay J is
+# rounding-quantized (whole nodes move or don't), so sub-half-percent gaps
+# are below the metric's own granularity on these fleets
+MATCH_RTOL = 5e-3
+
+
+def adaptive_fixed_summary(cells):
+    """The tentpole's speedup evidence, machine-readable: over the H>1
+    cells that ran both engines, how many beat / match fixed-step J, the
+    worst relative gap, and the minimum H>=8 iteration-reduction factor."""
+    both = [c for c in cells
+            if c["H"] > 1 and c.get("objective_fixed") is not None]
+    if not both:
+        return None
+    rel = lambda c: c["objective"] / c["objective_fixed"] - 1.0
+    worst = max(both, key=rel)
+    h8 = [c for c in both if c["H"] >= 8]
+    return dict(
+        n_cells=len(both),
+        n_beat=sum(1 for c in both if c["objective"] <= c["objective_fixed"]),
+        n_match=sum(1 for c in both if rel(c) <= MATCH_RTOL),
+        match_rtol=MATCH_RTOL,
+        worst_rel_gap=rel(worst),
+        worst_cell=f"{worst['trace']}/{worst['forecaster']}/H={worst['H']}",
+        h8_all_match=all(rel(c) <= MATCH_RTOL for c in h8),
+        h8_min_iters_reduction=(min(c["solver_iters_fixed"]
+                                    / max(c["solver_iters"], 1)
+                                    for c in h8) if h8 else None),
+    )
+
+
 def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
-        forecasters=None, trace_kinds=("diurnal", "flash_crowd")):
-    """The full sweep; returns the JSON-ready results dict."""
+        forecasters=None, trace_kinds=("diurnal", "flash_crowd"),
+        solvers=("adaptive", "fixed")):
+    """The full sweep; returns the JSON-ready results dict. ``solvers``
+    picks the horizon engines each MPC cell runs under — the first entry is
+    the PRIMARY whose metrics fill the cell; when both run, the cell also
+    carries the fixed-vs-adaptive comparison fields."""
     forecasters = forecasters or sorted(FORECASTER_KINDS)
+    assert all(s in ("adaptive", "fixed") for s in solvers), solvers
     catalog = Catalog(make_cloud_catalog().instances[::40])
     churn_cost = float(np.median([it.hourly_price
                                   for it in catalog.instances]))
     out = dict(config=dict(B=B, T=T, horizons=list(horizons),
                            forecasters=list(forecasters),
                            trace_kinds=list(trace_kinds),
+                           solvers=list(solvers),
                            churn_cost=churn_cost, catalog_n=catalog.n),
                myopic={}, cells=[])
     print("=" * 100)
     print(f"Horizon benchmark: B={B} tenants, T={T} ticks, catalog "
-          f"n={catalog.n}, churn_cost=${churn_cost:.3f}/unit")
+          f"n={catalog.n}, churn_cost=${churn_cost:.3f}/unit, "
+          f"solvers={'+'.join(solvers)}")
     print("=" * 100)
 
     for kind in trace_kinds:
@@ -107,29 +166,49 @@ def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
                            replay_mode="batched")
         myo_cell = _cell_metrics(myo.metrics, churn_cost)
         myo_cell["t_replay"] = time.time() - t0
+        myo_cell["solver_iters"] = _total_solver_iters(myo)
         out["myopic"][kind] = myo_cell
         print(f"\n[{kind}] myopic: cost ${myo_cell['cost']:.2f}  churn "
               f"{myo_cell['churn']:.1f}  slo {myo_cell['slo_ticks']}  "
-              f"J ${myo_cell['objective']:.2f}")
+              f"J ${myo_cell['objective']:.2f}  "
+              f"iters {myo_cell['solver_iters']}")
         print(f"  {'forecaster':>14s} {'H':>3s} {'cost':>9s} {'churn':>8s} "
-              f"{'slo':>4s} {'J':>9s} {'vs myopic':>10s}")
+              f"{'slo':>4s} {'J':>9s} {'vs myopic':>10s} {'iters':>7s} "
+              f"{'fixed J':>9s} {'f-iters':>7s}")
         for H in horizons:
             for fc in forecasters:
-                t0 = time.time()
-                res = replay_fleet(catalog, specs, run_ca_baseline=False,
-                                   replay_mode="batched", controller="mpc",
-                                   horizon=H, forecaster=fc)
-                cell = _cell_metrics(res.metrics, churn_cost)
+                per_solver = {}
+                for solver in solvers:
+                    cfg = FIXED_CFG if solver == "fixed" else None
+                    t0 = time.time()
+                    res = replay_fleet(catalog, specs, run_ca_baseline=False,
+                                       replay_mode="batched",
+                                       controller="mpc", horizon=H,
+                                       forecaster=fc, solver_config=cfg)
+                    sc = _cell_metrics(res.metrics, churn_cost)
+                    sc["solver_iters"] = _total_solver_iters(res)
+                    sc["t_replay"] = time.time() - t0
+                    per_solver[solver] = sc
+                cell = dict(per_solver[solvers[0]])
                 cell.update(trace=kind, forecaster=fc, H=H,
-                            t_replay=time.time() - t0,
+                            solver=solvers[0],
                             beats_myopic=bool(cell["objective"]
                                               < myo_cell["objective"]))
+                fx = per_solver.get("fixed") if solvers[0] != "fixed" else None
+                if fx is not None:
+                    cell["objective_fixed"] = fx["objective"]
+                    cell["solver_iters_fixed"] = fx["solver_iters"]
+                    cell["adaptive_beats_fixed"] = bool(
+                        cell["objective"] <= fx["objective"])
                 out["cells"].append(cell)
                 delta = 100.0 * (cell["objective"] / myo_cell["objective"]
                                  - 1.0)
+                fx_j = f"{fx['objective']:9.2f}" if fx else "        -"
+                fx_i = f"{fx['solver_iters']:7d}" if fx else "      -"
                 print(f"  {fc:>14s} {H:3d} {cell['cost']:9.2f} "
                       f"{cell['churn']:8.1f} {cell['slo_ticks']:4d} "
-                      f"{cell['objective']:9.2f} {delta:+9.1f}%")
+                      f"{cell['objective']:9.2f} {delta:+9.1f}% "
+                      f"{cell['solver_iters']:7d} {fx_j} {fx_i}")
 
     # regret per cell: J minus the oracle's J at the same (trace, H)
     oracle_J = {(c["trace"], c["H"]): c["objective"]
@@ -138,6 +217,17 @@ def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
         ref = oracle_J.get((c["trace"], c["H"]))
         c["regret_vs_oracle"] = (None if ref is None
                                  else c["objective"] - ref)
+
+    out["adaptive_vs_fixed"] = adaptive_fixed_summary(out["cells"])
+    if out["adaptive_vs_fixed"] is not None:
+        s = out["adaptive_vs_fixed"]
+        print(f"\n[adaptive vs fixed] H>1: {s['n_beat']}/{s['n_cells']} "
+              f"cells beat fixed outright, {s['n_match']}/{s['n_cells']} "
+              f"within {100 * MATCH_RTOL:.1f}%; worst "
+              f"{100 * s['worst_rel_gap']:+.2f}% "
+              f"({s['worst_cell']}); H>=8 iters reduction "
+              f">= {s['h8_min_iters_reduction']:.1f}x, all H>=8 cells "
+              f"within tolerance: {s['h8_all_match']}")
 
     winners = [c for c in out["cells"] if c["H"] > 1 and c["beats_myopic"]]
     out["n_winning_cells"] = len(winners)
@@ -159,7 +249,9 @@ def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
 
 
 def main(argv):
-    """CLI: --quick trims the grid; --json PATH overrides the output file."""
+    """CLI: --quick trims the grid; --json PATH overrides the output file;
+    --solver {adaptive,fixed,both} picks the horizon engine(s) each cell
+    runs under (default both — the adaptive-vs-fixed speedup evidence)."""
     quick = "--quick" in argv
     json_path = DEFAULT_JSON
     if "--json" in argv:
@@ -167,11 +259,20 @@ def main(argv):
         if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
             raise SystemExit("--json requires a path argument")
         json_path = argv[i + 1]
+    solvers = ("adaptive", "fixed")
+    if "--solver" in argv:
+        i = argv.index("--solver")
+        if i + 1 >= len(argv) or argv[i + 1] not in ("adaptive", "fixed",
+                                                     "both"):
+            raise SystemExit("--solver requires adaptive, fixed or both")
+        if argv[i + 1] != "both":
+            solvers = (argv[i + 1],)
     if quick:
         out = run(B=3, T=24, horizons=(1, 4, 8),
-                  forecasters=("last_value", "holt_winters", "oracle"))
+                  forecasters=("last_value", "holt_winters", "oracle"),
+                  solvers=solvers)
     else:
-        out = run()
+        out = run(solvers=solvers)
     out["config"]["quick"] = quick
     with open(json_path, "w") as fh:
         json.dump(out, fh, indent=2, sort_keys=True)

@@ -7,11 +7,13 @@ from .problem import AllocationProblem, PenaltyParams
 from .objective import objective as objective_value
 from .objective import (objective_terms, grad_objective,
                         constraint_residuals, is_feasible)
+from .pgd import PGDConfig, pgd_minimize
 from .solver import SolverConfig, SolveResult, solve_relaxation
 from .multistart import multistart_solve, make_starts
 from .rounding import greedy_round, round_and_polish, scale_down
 from .branch_bound import branch_and_bound, BnBResult
-from .incremental import project_l1_ball, project_incremental, solve_incremental
+from .incremental import (project_l1_ball, project_incremental,
+                          solve_incremental, solve_incremental_info)
 from .kkt import kkt_report, KKTReport
 from .catalog import Catalog, InstanceType, make_cloud_catalog, make_tpu_catalog
 from .autoscaler import (NodePool, simulate_cluster_autoscaler,
@@ -26,10 +28,12 @@ from . import workloads
 
 __all__ = [
     "AllocationProblem", "PenaltyParams", "objective_value", "objective_terms",
-    "grad_objective", "constraint_residuals", "is_feasible", "SolverConfig",
+    "grad_objective", "constraint_residuals", "is_feasible", "PGDConfig",
+    "pgd_minimize", "SolverConfig",
     "SolveResult", "solve_relaxation", "multistart_solve", "make_starts",
     "greedy_round", "round_and_polish", "scale_down", "branch_and_bound",
     "BnBResult", "project_l1_ball", "project_incremental", "solve_incremental",
+    "solve_incremental_info",
     "kkt_report", "KKTReport", "Catalog", "InstanceType", "make_cloud_catalog",
     "make_tpu_catalog", "NodePool", "simulate_cluster_autoscaler",
     "simulate_cluster_autoscaler_batch", "default_pools_for", "AllocationMetrics", "evaluate", "per_dim_utilization",

@@ -15,7 +15,7 @@ import numpy as np
 
 from .api import problem_from_demand
 from .catalog import Catalog
-from .incremental import solve_incremental
+from .incremental import solve_incremental_info
 from .metrics import AllocationMetrics, evaluate
 from .multistart import multistart_solve
 from .problem import AllocationProblem, PenaltyParams
@@ -33,7 +33,12 @@ class ControllerStep:
     feasibility-first tradeoff (shortage beats churn). Zero on replans,
     which deliberately ignore the bound. Surfaced fleet-wide by
     ``FleetReplayMetrics.summary()`` so churn comparisons between
-    controllers are honest about bound overruns."""
+    controllers are honest about bound overruns.
+
+    ``solver_iters`` records the PGD iterations the solve behind this tick
+    actually took (0 where the engine did not report one, e.g. cold-start
+    multistart ticks) — the adaptive-vs-fixed speedup evidence
+    ``benchmarks/horizon_bench.py`` aggregates per cell."""
 
     demand: np.ndarray
     counts: np.ndarray
@@ -41,6 +46,7 @@ class ControllerStep:
     churn: float                 # ||x_t - x_{t-1}||_1
     replanned: bool
     churn_violation: float = 0.0  # max(0, churn - delta_max) on warm ticks
+    solver_iters: int = 0         # inner PGD iterations spent on this tick
 
 
 @dataclass
@@ -58,6 +64,10 @@ class InfrastructureOptimizationController:
     normalize: bool = True                       # demand-normalized solver units
     x_current: np.ndarray = None                 # set on first step
     history: List[ControllerStep] = field(default_factory=list)
+
+    # not a dataclass field: last warm solve's PGD iteration count, consumed
+    # by step() when recording the tick (0 until a warm solve has run)
+    _last_solver_iters = 0
 
     def make_problem(self, demand: np.ndarray) -> AllocationProblem:
         """Build this tick's AllocationProblem — the same construction as the
@@ -82,21 +92,26 @@ class InfrastructureOptimizationController:
         """Warm-tick allocation: incremental solve from the current counts
         under the L1 churn bound, then greedy rounding. ``x_init`` optionally
         overrides the warm start (e.g. the previous tick's relaxed solution,
-        plumbed through by the batched replay engine)."""
-        x_rel = solve_incremental(
+        plumbed through by the batched replay engine). The adaptive solve's
+        iteration count is kept on ``_last_solver_iters`` for
+        :meth:`apply_counts` bookkeeping."""
+        x_rel, iters = solve_incremental_info(
             prob, jnp.asarray(self.x_current, jnp.float32),
             jnp.asarray(self.delta_max, jnp.float32),
             x_init=None if x_init is None
             else jnp.asarray(x_init, jnp.float32))
+        self._last_solver_iters = int(iters)
         # rounding may exceed the churn bound slightly when demand jumps;
         # that's the feasibility-first tradeoff (shortage beats churn).
         return np.asarray(round_and_polish(prob, x_rel), np.float64)
 
     def apply_counts(self, demand: np.ndarray, counts: np.ndarray,
-                     replanned: bool) -> ControllerStep:
+                     replanned: bool, solver_iters: int = 0) -> ControllerStep:
         """Record an allocation computed for this tick (by :meth:`step`, or
         externally by the batched fleet engine): compute churn and metrics,
-        advance ``x_current``, append to history."""
+        advance ``x_current``, append to history. ``solver_iters`` optionally
+        records the inner PGD iterations the solve took (see
+        ``ControllerStep.solver_iters``)."""
         demand = np.asarray(demand, np.float64)
         x = np.asarray(counts, np.float64)
         churn = float(np.abs(x - (self.x_current if self.x_current is not None
@@ -108,7 +123,8 @@ class InfrastructureOptimizationController:
         step = ControllerStep(demand=demand, counts=x,
                               metrics=evaluate(self.catalog, x, demand),
                               churn=churn, replanned=replanned,
-                              churn_violation=violation)
+                              churn_violation=violation,
+                              solver_iters=int(solver_iters))
         self.history.append(step)
         return step
 
@@ -120,9 +136,11 @@ class InfrastructureOptimizationController:
         prob = self.make_problem(demand)
         if self.x_current is None:
             x, replanned = self.cold_start_counts(prob), True
+            self._last_solver_iters = 0
         else:
             x, replanned = self.incremental_counts(prob, x_init=x_init), False
-        return self.apply_counts(demand, x, replanned)
+        return self.apply_counts(demand, x, replanned,
+                                 solver_iters=self._last_solver_iters)
 
     def replan_on_failure(self, failed_counts: np.ndarray,
                           demand: np.ndarray) -> ControllerStep:

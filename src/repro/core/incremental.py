@@ -4,6 +4,15 @@ Implemented as an exact Euclidean projection onto the L1 ball centered at
 ``x_current`` (Duchi et al. 2008), composed with the box projection by a short
 alternating (Dykstra-like) loop. Used by the controller to bound per-step
 cluster churn — the paper's "bounded perturbation" methodology.
+
+``solve_incremental`` (the warm tick of both the myopic controller and —
+under vmap — the batched fleet engine ``solve_fleet_step``) runs the shared
+Barzilai-Borwein + Armijo projected-gradient engine (``core.pgd``) on the
+eq.(1) objective over this feasible set: ``steps`` is an iteration BUDGET,
+not an exact count — the solve early-stops once an accepted step moves no
+coordinate by more than the tolerance. The H=1 time-expanded program in
+``repro.horizon.solver`` reduces op-for-op to this function (same engine,
+same merit, same projection), which anchors the MPC ≡ myopic equivalence.
 """
 from __future__ import annotations
 
@@ -12,6 +21,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .pgd import PGDConfig, pgd_minimize
 from .problem import AllocationProblem
 import repro.core.objective as obj
 
@@ -49,27 +59,52 @@ def project_incremental(
     return jax.lax.fori_loop(0, n_alternations, body, obj.project(prob, x))
 
 
-@partial(jax.jit, static_argnames=("steps",))
+@partial(jax.jit, static_argnames=("cfg",))
+def _solve_incremental_impl(prob, x_current, delta_max, x0, cfg: PGDConfig):
+    F = partial(obj.objective, prob)
+    G = partial(obj.grad_objective, prob)
+
+    def proj(x):
+        return project_incremental(prob, x, x_current, delta_max)
+
+    return pgd_minimize(F, G, proj, x0, cfg)
+
+
 def solve_incremental(
     prob: AllocationProblem,
     x_current: jnp.ndarray,
     delta_max,
     x_init=None,
     steps: int = 600,
-    step_scale: float = 1.0,
+    cfg: PGDConfig | None = None,
 ) -> jnp.ndarray:
-    """PGD on f with the incremental-adoption feasible set. Warm-started from
-    the current allocation (the natural production warm start)."""
+    """Adaptive PGD on f with the incremental-adoption feasible set, warm-
+    started from the current allocation (the natural production warm start).
+
+    Runs the shared BB/Armijo engine (``core.pgd.pgd_minimize``): ``steps``
+    is the iteration budget (``PGDConfig.max_iters``); pass ``cfg`` to
+    control the full ladder/tolerance instead. Returns the relaxed solution
+    only — use :func:`solve_incremental_info` when the caller also wants the
+    iteration count (benchmark instrumentation)."""
+    return solve_incremental_info(prob, x_current, delta_max, x_init=x_init,
+                                  steps=steps, cfg=cfg)[0]
+
+
+def solve_incremental_info(
+    prob: AllocationProblem,
+    x_current: jnp.ndarray,
+    delta_max,
+    x_init=None,
+    steps: int = 600,
+    cfg: PGDConfig | None = None,
+):
+    """:func:`solve_incremental` variant returning ``(x, iters)`` — the
+    relaxed solution plus the PGD iterations actually taken (the early-
+    stopping win the adaptive engine buys over the old fixed-step loop)."""
     delta_max = jnp.asarray(delta_max, jnp.float32)
     x0 = x_current if x_init is None else x_init
-
-    L = (2.0 * prob.params.beta3 * jnp.sum(prob.K * prob.K)
-         + jnp.linalg.norm(prob.c) + 1e-3)
-
-    def body(i, x):
-        g = obj.grad_objective(prob, x)
-        x = x - step_scale * g / L
-        return project_incremental(prob, x, x_current, delta_max)
-
-    return jax.lax.fori_loop(0, steps, body,
-                             project_incremental(prob, x0, x_current, delta_max))
+    if cfg is None:
+        cfg = PGDConfig(max_iters=int(steps))
+    x, _, iters = _solve_incremental_impl(prob, jnp.asarray(x_current),
+                                          delta_max, jnp.asarray(x0), cfg)
+    return x, iters

@@ -23,7 +23,11 @@ from .solver import SolveResult, SolverConfig, solve_relaxation
 
 class MultiStartResult(NamedTuple):
     """Winner (+ per-start diagnostics) of a multi-start solve; ``x_int`` is
-    the best feasible ROUNDED solution across starts."""
+    the best feasible ROUNDED solution across starts. The per-start rounded
+    candidates (``x_int_all`` / ``fun_int_all`` / ``feas_int_all``) are kept
+    so callers can re-score the candidate set against a DIFFERENT merit —
+    the receding-horizon controller's ``cold_start="window"`` scores them
+    against the whole lookahead window's objective instead of tick 0's."""
 
     best: SolveResult
     x_int: jnp.ndarray          # (n,) best ROUNDED integer solution
@@ -31,6 +35,9 @@ class MultiStartResult(NamedTuple):
     all_fun: jnp.ndarray        # (S,) relaxed objective per start
     all_feasible: jnp.ndarray   # (S,)
     x_all: jnp.ndarray          # (S, n)
+    x_int_all: jnp.ndarray      # (S, n) rounded candidate per start
+    fun_int_all: jnp.ndarray    # (S,) objective per rounded candidate
+    feas_int_all: jnp.ndarray   # (S,) integer feasibility per candidate
 
 
 def make_starts(prob: AllocationProblem, n_starts: int, seed: int = 0) -> jnp.ndarray:
@@ -102,4 +109,5 @@ def multistart_solve(
     best = jax.tree_util.tree_map(lambda a: a[i], res)
     return MultiStartResult(best=best, x_int=x_int[j], fun_int=f_int[j],
                             all_fun=res.fun, all_feasible=res.feasible,
-                            x_all=res.x)
+                            x_all=res.x, x_int_all=x_int, fun_int_all=f_int,
+                            feas_int_all=feas_int)

@@ -1,0 +1,148 @@
+"""Shared projected-gradient engine: Barzilai-Borwein step + Armijo ladder.
+
+Every inner solve loop in this codebase is the same algorithm — propose a
+Barzilai-Borwein (BB1) step, safeguard it with an Armijo backtracking ladder
+evaluated as one batch (vmap-friendly: no data-dependent trip counts inside
+an iteration), accept the largest decreasing candidate, stop when the
+projected move is tiny. This module is that loop, extracted once and
+parameterized by ``(value_fn, grad_fn, project_fn, config)`` so the three
+consumers share a single implementation:
+
+* ``core.solver._pgd``            — the barrier/penalty relaxation solver
+  (merit = eq.(1) objective + log-barrier or quadratic penalty).
+* ``core.incremental.solve_incremental`` — the controller's warm tick
+  (merit = eq.(1) objective; projection = box ∩ L1 churn ball), which the
+  batched fleet engine ``solve_fleet_step`` vmaps across tenant lanes.
+* ``repro.horizon.solver``        — the time-expanded MPC program (merit =
+  per-tick objectives + churn coupling + soft churn bound + planned-tick
+  band penalty; projection = exact ``project_incremental`` chaining on the
+  committed tick, box on planned rows).
+
+The engine is jit- and vmap-safe: the iterate may have ANY shape (``(n,)``
+for a single tick, ``(H, n)`` for a plan), all inner products flatten over
+every axis, and the loop is a ``lax.while_loop`` whose batching rule freezes
+finished lanes in place — so a vmapped call's per-lane trajectory is
+identical to a sequential call on the same data (the property every
+batched ≡ sequential equivalence test in this repo leans on).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PGDConfig(NamedTuple):
+    """Hashable knobs of the shared BB/Armijo engine (static under jit).
+
+    ``max_iters`` bounds the iteration count; the loop stops earlier when an
+    accepted step moves no coordinate by more than ``tol`` (or when the
+    ladder collapses without finding a decreasing candidate). ``step0`` is
+    both the initial BB step and the reset value when the BB denominator
+    degenerates; the ladder evaluates ``n_backtracks`` candidates at ratios
+    ``backtrack ** (-1 .. n_backtracks-2)`` of the proposed step (one
+    upscale, like ``core.solver``); ``armijo_c`` is the sufficient-decrease
+    slope on the PROJECTED step."""
+
+    max_iters: int = 600           # iteration budget (early-stops on tol)
+    step0: float = 1.0             # initial / fallback BB step
+    n_backtracks: int = 12         # Armijo ladder length
+    backtrack: float = 0.5         # ladder ratio
+    armijo_c: float = 1e-4         # sufficient-decrease constant
+    tol: float = 1e-6              # stop when the accepted move is tiny
+    ftol: float = 1e-4             # an accepted step whose RELATIVE merit
+                                   # progress falls below this counts as
+                                   # "flat" ...
+    max_flat: int = 10             # ... and max_flat CONSECUTIVE flat steps
+                                   # stop the loop (progress has stalled at
+                                   # ~ftol/iter; one flat step alone is NOT
+                                   # convergence — BB progress comes in
+                                   # bursts separated by plateaus). The
+                                   # default trades the merit's last ~0.1%
+                                   # for a fraction of the iterations; pass
+                                   # ftol=0.0 to only stop on true cycling
+                                   # (the high-accuracy barrier-solver mode)
+
+
+def _flat_dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """<a, b> over every axis (iterates may be (n,) or (H, n)).
+
+    Elementwise multiply + reduce rather than ``jnp.vdot``: a vmapped dot
+    lowers to a batched ``dot_general`` whose accumulation order differs
+    from the unbatched kernel's in the last ulps, and the adaptive line
+    search amplifies ulps into different accept/reject decisions — which
+    would break the bit-exact batched ≡ sequential trajectory equivalence
+    the fleet engines promise. A plain reduce batches order-preservingly."""
+    return jnp.sum(a * b)
+
+
+def pgd_minimize(
+    value_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    grad_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    project_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    x0: jnp.ndarray,
+    cfg: PGDConfig = PGDConfig(),
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Minimize ``value_fn`` over the set ``project_fn`` projects onto.
+
+    Per iteration: propose ``bb * ratios`` candidate steps, project each
+    (``x - s * g``), evaluate all candidate VALUES as one vmapped batch,
+    accept the first (largest) candidate satisfying Armijo sufficient
+    decrease on the projected step, then refresh the BB1 step from the
+    accepted move. No candidate accepted -> shrink the proposal and retry;
+    converged (move < tol) or ladder exhausted -> stop.
+
+    Returns ``(x, value, iters)`` where ``iters`` is the number of
+    iterations actually taken (the early-stopping wins the benchmarks
+    report). The iterate shape is whatever ``x0`` has; ``value_fn`` must map
+    it to a scalar and ``grad_fn``/``project_fn`` to its own shape."""
+    ratios = cfg.backtrack ** jnp.arange(-1, cfg.n_backtracks - 1)  # 1 upscale
+
+    def cond(state):
+        x, fx, g, bb, it, flat, done = state
+        return (~done) & (it < cfg.max_iters)
+
+    def body(state):
+        x, fx, g, bb, it, flat, _ = state
+        steps = bb * ratios
+        cands = jax.vmap(
+            lambda s: project_fn(x - s * g))(steps)            # (L, *x.shape)
+        fcands = jax.vmap(value_fn)(cands)                     # (L,)
+        # Armijo on the projected step: F(x+) <= F(x) + c * <g, x+ - x>
+        diff = cands - x[None]
+        dec = fcands - (fx + cfg.armijo_c *
+                        jnp.sum(diff * g[None],
+                                axis=tuple(range(1, diff.ndim))))
+        ok = (dec <= 0.0) & jnp.isfinite(fcands)
+        idx = jnp.argmax(ok)          # first (largest) accepting step
+        any_ok = jnp.any(ok)
+        x_new = jnp.where(any_ok, cands[idx], x)
+        f_new = jnp.where(any_ok, fcands[idx], fx)
+        g_new = grad_fn(x_new)
+        # BB1 step from the accepted move (safeguarded into [1e-8, 1e4])
+        dx = x_new - x
+        dg = g_new - g
+        denom = _flat_dot(dx, dg)
+        bb_new = jnp.where(jnp.abs(denom) > 1e-12,
+                           jnp.abs(_flat_dot(dx, dx) / denom), cfg.step0)
+        bb_new = jnp.clip(bb_new, 1e-8, 1e4)
+        bb_new = jnp.where(any_ok, bb_new,
+                           bb * cfg.backtrack ** cfg.n_backtracks)
+        move = jnp.max(jnp.abs(dx))
+        # converged when an ACCEPTED step barely moves, or when max_flat
+        # CONSECUTIVE accepted steps barely improved the merit (boundary
+        # cycling: the alternating projection keeps the iterate drifting
+        # along a flat ridge). One flat step alone never stops the loop —
+        # BB progress comes in bursts separated by plateaus.
+        is_flat = any_ok & (f_new >= fx - cfg.ftol * (1.0 + jnp.abs(fx)))
+        flat_new = jnp.where(is_flat, flat + 1, jnp.where(any_ok, 0, flat))
+        done = ((~any_ok) & (bb < 1e-7)) | (any_ok & (move < cfg.tol)) \
+            | (flat_new >= cfg.max_flat)
+        return (x_new, f_new, g_new, bb_new, it + 1, flat_new, done)
+
+    x0 = project_fn(x0)
+    state = (x0, value_fn(x0), grad_fn(x0), jnp.asarray(cfg.step0),
+             jnp.asarray(0), jnp.asarray(0), jnp.asarray(False))
+    x, fx, _, _, it, _, _ = jax.lax.while_loop(cond, body, state)
+    return x, fx, it

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.core.objective as obj
+from .pgd import PGDConfig, pgd_minimize
 from .problem import AllocationProblem
 
 
@@ -78,52 +79,22 @@ def phase1_point(prob: AllocationProblem, x0: jnp.ndarray, steps: int = 200,
 
 
 def _pgd(prob, x0, barrier_t, penalty_w, use_barrier, cfg: SolverConfig):
-    """Inner projected-gradient loop: Barzilai-Borwein step proposal,
-    safeguarded by an Armijo backtracking ladder (vmap-friendly: candidate
-    steps are evaluated as a batch)."""
+    """Inner projected-gradient loop, routed through the shared BB/Armijo
+    engine (``core.pgd.pgd_minimize``): merit = eq.(1) objective + barrier
+    or quadratic penalty, projection = box ∩ mask."""
 
     F = partial(obj.composite, prob, barrier_t=barrier_t, penalty_w=penalty_w,
                 use_barrier=use_barrier)
     G = partial(obj.composite_grad, prob, barrier_t=barrier_t,
                 penalty_w=penalty_w, use_barrier=use_barrier)
-
-    ratios = cfg.backtrack ** jnp.arange(-1, cfg.n_backtracks - 1)  # 1 upscale
-
-    def cond(state):
-        x, fx, g, bb, it, done = state
-        return (~done) & (it < cfg.max_iters)
-
-    def body(state):
-        x, fx, g, bb, it, _ = state
-        steps = bb * ratios
-        cands = jax.vmap(lambda s: obj.project(prob, x - s * g))(steps)   # (B, n)
-        fcands = jax.vmap(F)(cands)                                       # (B,)
-        # Armijo on the projected step: F(x+) <= F(x) + c * g^T (x+ - x)
-        dec = fcands - (fx + cfg.armijo_c *
-                        jnp.einsum("n,bn->b", g, cands - x[None, :]))
-        ok = (dec <= 0.0) & jnp.isfinite(fcands)
-        idx = jnp.argmax(ok)         # first (largest) accepting step
-        any_ok = jnp.any(ok)
-        x_new = jnp.where(any_ok, cands[idx], x)
-        f_new = jnp.where(any_ok, fcands[idx], fx)
-        g_new = G(x_new)
-        # BB1 step from the accepted move (safeguarded into [1e-8, 1e4])
-        dx = x_new - x
-        dg = g_new - g
-        denom = jnp.vdot(dx, dg)
-        bb_new = jnp.where(jnp.abs(denom) > 1e-12,
-                           jnp.abs(jnp.vdot(dx, dx) / denom), cfg.step0)
-        bb_new = jnp.clip(bb_new, 1e-8, 1e4)
-        bb_new = jnp.where(any_ok, bb_new, bb * cfg.backtrack ** cfg.n_backtracks)
-        move = jnp.max(jnp.abs(dx))
-        done = ((~any_ok) & (bb < 1e-7)) | (any_ok & (move < cfg.tol))
-        return (x_new, f_new, g_new, bb_new, it + 1, done)
-
-    x0 = obj.project(prob, x0)
-    state = (x0, F(x0), G(x0), jnp.asarray(cfg.step0), jnp.asarray(0),
-             jnp.asarray(False))
-    x, fx, _, _, it, _ = jax.lax.while_loop(cond, body, state)
-    return x, fx, it
+    # ftol=0.0: the barrier solver keeps its high-accuracy behavior — the
+    # flat-streak stop only fires on literal zero-progress cycling (the
+    # relaxation feeds KKT certificates and BnB bounds, so trading merit
+    # digits for iterations is the warm-tick engines' business, not ours)
+    pcfg = PGDConfig(max_iters=cfg.max_iters, step0=cfg.step0,
+                     n_backtracks=cfg.n_backtracks, backtrack=cfg.backtrack,
+                     armijo_c=cfg.armijo_c, tol=cfg.tol, ftol=0.0)
+    return pgd_minimize(F, G, partial(obj.project, prob), x0, pcfg)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

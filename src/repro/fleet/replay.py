@@ -253,10 +253,13 @@ def _make_controller(catalog: Catalog, spec: TenantSpec
 def _make_mpc_controller(catalog: Catalog, spec: TenantSpec, *, horizon: int,
                          forecaster: str, forecaster_kwargs: Optional[dict],
                          coupling_w: float, coupling_eps: float,
-                         solver_steps: int):
+                         solver_steps: int, solver_config=None,
+                         cold_start: str = "myopic"):
     """Build one tenant's receding-horizon controller (the MPC counterpart
     of :func:`_make_controller`); the forecaster gets the tenant's own trace
-    so ``forecaster="oracle"`` reads that tenant's future.
+    so ``forecaster="oracle"`` reads that tenant's future. ``solver_config``
+    (a ``repro.horizon.HorizonSolverConfig``) configures the per-tick
+    engine; when None the controller builds one from ``solver_steps``.
 
     repro.horizon is imported lazily: it reuses ``repro.fleet.batching`` for
     window stacking, so a module-level import here would be circular."""
@@ -269,7 +272,8 @@ def _make_mpc_controller(catalog: Catalog, spec: TenantSpec, *, horizon: int,
         params=spec.params, n_starts=spec.n_starts,
         allowed_idx=spec.allowed_idx, horizon=horizon, forecaster=fc,
         coupling_w=coupling_w, coupling_eps=coupling_eps,
-        solver_steps=solver_steps)
+        solver_steps=solver_steps, solver_config=solver_config,
+        cold_start=cold_start)
 
 
 def _assemble_replay(spec: TenantSpec, steps: List[ControllerStep],
@@ -371,6 +375,7 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                 starts = make_fleet_starts(batch, n_starts, seed=0)
                 res = solve_fleet(batch, starts=starts, hot_loop=hot_loop)
                 X_int = np.asarray(res.x_int, np.float64)
+                lane_iters = np.zeros(len(idx), np.int64)
             else:
                 X_cur = embed_solutions(
                     batch, [ctls[b].x_current for b in idx])
@@ -383,6 +388,7 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                 res = solve_fleet_step(batch, X_cur, delta, x_init=X_init,
                                        steps=solver_steps)
                 X_int = np.asarray(res.x_int, np.float64)
+                lane_iters = np.asarray(res.iters, np.int64)
             # only pay the relaxed-solution transfer when it will be used
             X_rel = np.asarray(res.x) if warm_start == "relaxed" else None
             for i, b in enumerate(idx):
@@ -390,7 +396,8 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                     continue         # frozen: no churn, no metrics, no state
                 n_true = int(batch.n_true[i])
                 ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
-                                     replanned=(t == 0))
+                                     replanned=(t == 0),
+                                     solver_iters=int(lane_iters[i]))
                 if X_rel is not None:
                     x_rel_prev[b] = X_rel[i, :n_true]
     return [ctl.history for ctl in ctls]
@@ -400,7 +407,8 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                               *, horizon: int, forecaster: str,
                               forecaster_kwargs: Optional[dict],
                               coupling_w: float, coupling_eps: float,
-                              solver_steps: int,
+                              solver_steps: int, solver_config=None,
+                              cold_start: str = "myopic",
                               hot_loop: Optional[str] = None
                               ) -> List[List[ControllerStep]]:
     """Batched receding-horizon replay: one ``solve_horizon_fleet_step``
@@ -410,18 +418,24 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
     Mirrors :func:`_replay_fleet_batched` exactly where the two overlap:
     the same (bucket, n_starts) grouping, the same ``solve_fleet`` cold
     start (the MPC cold tick IS the myopic cold tick — no allocation means
-    no churn to plan around), and the same ragged-horizon freezing. The
-    warm tick stacks each live tenant's H-tick window (observed demand +
-    forecasts) padded to its bucket's dims, solves all lanes in one jitted
-    vmapped program, commits tick 0 via ``apply_counts``, and stores each
-    lane's relaxed plan back on its controller for the next tick's shifted
-    warm start. Per-tenant integer allocations match the sequential MPC
-    engine on CPU (test-enforced), forecaster state included — forecasts
-    depend only on the observed trace, never on solver output."""
+    no churn to plan around; with ``cold_start="window"`` the same solve's
+    per-start rounded candidates are re-ranked by each tenant's whole
+    window, exactly like the sequential controller), and the same
+    ragged-horizon freezing. The warm tick stacks each live tenant's H-tick
+    window (observed demand + forecasts) padded to its bucket's dims,
+    solves all lanes in one jitted vmapped program (engine and budget from
+    ``solver_config``), commits tick 0 via ``apply_counts`` with the lane's
+    iteration count, and stores each lane's relaxed plan back on its
+    controller for the next tick's shifted warm start. Per-tenant integer
+    allocations match the sequential MPC engine on CPU (test-enforced),
+    forecaster state included — forecasts depend only on the observed
+    trace, never on solver output."""
     import jax
     import jax.numpy as jnp
 
-    from repro.horizon import HorizonProblem, solve_horizon_fleet_step
+    from repro.horizon import (HorizonProblem, select_window_candidate,
+                               solve_horizon_fleet_step,
+                               window_candidate_scores)
 
     assert len(tenants) > 0, "empty fleet"
     traces = [np.asarray(spec.trace, np.float64) for spec in tenants]
@@ -432,7 +446,9 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                                  forecaster_kwargs=forecaster_kwargs,
                                  coupling_w=coupling_w,
                                  coupling_eps=coupling_eps,
-                                 solver_steps=solver_steps)
+                                 solver_steps=solver_steps,
+                                 solver_config=solver_config,
+                                 cold_start=cold_start)
             for spec in tenants]
     groups = _replay_batch_groups(ctls, tenants)
     # each live tenant's CURRENT window of per-tick problems; frozen tenants
@@ -451,16 +467,28 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                 continue
             if t == 0:
                 # cold start: identical to the myopic batched engine (and to
-                # a sequential cold_start_counts call per tenant)
+                # a sequential cold_start_counts call per tenant); with
+                # cold_start="window" the SAME per-start rounded candidates
+                # are re-ranked by each tenant's whole-window objective at
+                # its true shape (matching the sequential controller's
+                # cold_window_counts selection exactly)
                 batch = stack_problems([windows[b][0] for b in idx],
                                        n_max=n_pad, m_max=m_pad, p_max=p_pad,
                                        active=active)
                 starts = make_fleet_starts(batch, n_starts, seed=0)
                 res = solve_fleet(batch, starts=starts, hot_loop=hot_loop)
                 X_int = np.asarray(res.x_int, np.float64)
+                cand_all = np.asarray(res.x_int_all, np.float64)
+                feas_all = np.asarray(res.feas_int_all, bool)
                 for i, b in enumerate(idx):
                     n_true = int(batch.n_true[i])
-                    x = X_int[i, :n_true]
+                    if cold_start == "window":
+                        cands = cand_all[i, :, :n_true]
+                        scores = window_candidate_scores(windows[b], cands)
+                        x = cands[select_window_candidate(scores,
+                                                          feas_all[i])]
+                    else:
+                        x = X_int[i, :n_true]
                     ctls[b].apply_counts(traces[b][t], x, replanned=True)
                     ctls[b].plan = np.tile(x, (horizon, 1))
                 continue
@@ -482,16 +510,21 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                 problem=prob_bh,
                 coupling_w=jnp.asarray(coupling_w, jnp.float32),
                 coupling_eps=jnp.asarray(coupling_eps, jnp.float32))
+            # every controller in the replay shares one resolved config
+            # (built in __post_init__ when solver_config was None)
             res = solve_horizon_fleet_step(hp, X_cur, delta, x_init=X_init,
-                                           active=active, steps=solver_steps)
+                                           active=active,
+                                           cfg=ctls[idx[0]].solver_config)
             X_int = np.asarray(res.x_int, np.float64)
             plans = np.asarray(res.plan, np.float64)
+            lane_iters = np.asarray(res.iters, np.int64)
             for i, b in enumerate(idx):
                 if not active[i]:
                     continue
                 n_true = ctls[b].catalog.n
                 ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
-                                     replanned=False)
+                                     replanned=False,
+                                     solver_iters=int(lane_iters[i]))
                 ctls[b].plan = plans[i, :, :n_true]
     return [ctl.history for ctl in ctls]
 
@@ -504,6 +537,8 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                  forecaster_kwargs: Optional[dict] = None,
                  coupling_w: Optional[float] = None,
                  coupling_eps: Optional[float] = None,
+                 solver_config=None,
+                 cold_start: str = "myopic",
                  run_oracle_baseline: bool = False,
                  run_ca_baseline: bool = True,
                  ca_engine: str = "vectorized",
@@ -537,6 +572,17 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
       ``repro.horizon.problem``'s tuned values), and commits tick 0.
       ``horizon=1`` with any forecaster reproduces the myopic controller's
       integer allocations exactly (test-enforced).
+
+    ``solver_config`` (MPC only; a ``repro.horizon.HorizonSolverConfig``)
+    configures every warm tick's horizon solve per replay — engine choice
+    (``solver="adaptive"`` BB/Armijo ladder vs ``"fixed"`` step), iteration
+    budget, tolerance, ladder parameters and penalty weights — instead of
+    relying on module constants (when None, a default config is built from
+    ``solver_steps``). ``cold_start`` (MPC only) selects the cold tick's
+    candidate ranking: ``"myopic"`` (tick-0 merit, the default) or
+    ``"window"`` (the same multistart candidates re-scored against each
+    tenant's whole lookahead window — see ``repro.horizon.controller``).
+    Both engines honor both knobs identically (equivalence holds).
 
     ``run_oracle_baseline`` (MPC only) additionally replays the SAME fleet
     and controller under the ground-truth oracle forecaster and attaches
@@ -581,7 +627,8 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
         mpc_kwargs = dict(horizon=horizon, forecaster=forecaster,
                           forecaster_kwargs=forecaster_kwargs,
                           coupling_w=coupling_w, coupling_eps=coupling_eps,
-                          solver_steps=solver_steps)
+                          solver_steps=solver_steps,
+                          solver_config=solver_config, cold_start=cold_start)
         if replay_mode == "sequential":
             ctls = [_make_mpc_controller(catalog, spec, **mpc_kwargs)
                     for spec in tenants]
@@ -615,6 +662,8 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                               controller="mpc", horizon=horizon,
                               forecaster="oracle", coupling_w=coupling_w,
                               coupling_eps=coupling_eps,
+                              solver_config=solver_config,
+                              cold_start=cold_start,
                               run_ca_baseline=False, warm_start=warm_start,
                               solver_steps=solver_steps, hot_loop=hot_loop)
         oracle_metrics = [r.metrics for r in oracle.tenants]

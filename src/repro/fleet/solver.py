@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.incremental import solve_incremental
+from repro.core.incremental import solve_incremental_info
 from repro.core.multistart import make_starts
 from repro.core.objective import is_feasible, objective
 from repro.core.problem import AllocationProblem
@@ -38,7 +38,13 @@ from .batching import (BucketedFleet, FleetBatch, bucket_problems,
 
 
 class FleetSolveResult(NamedTuple):
-    """Per-tenant outputs of a batched fleet solve (leading axis = tenant)."""
+    """Per-tenant outputs of a batched fleet solve (leading axis = tenant).
+
+    The per-start rounded candidates (``x_int_all`` / ``fun_int_all`` /
+    ``feas_int_all``) mirror ``core.multistart.MultiStartResult``: callers
+    can re-score the whole candidate set against a different merit — the
+    batched MPC replay's ``cold_start="window"`` scores them against each
+    tenant's whole lookahead window instead of tick 0."""
 
     x: jnp.ndarray            # (B, n) best relaxed solution per tenant
     fun: jnp.ndarray          # (B,) objective at x
@@ -48,6 +54,9 @@ class FleetSolveResult(NamedTuple):
     used_barrier: jnp.ndarray  # (B, S)
     all_fun: jnp.ndarray      # (B, S) relaxed objective per start
     iters: jnp.ndarray        # total PGD iterations (fleet-wide)
+    x_int_all: jnp.ndarray    # (B, S, n) rounded candidate per start
+    fun_int_all: jnp.ndarray  # (B, S) objective per rounded candidate
+    feas_int_all: jnp.ndarray  # (B, S) integer feasibility per candidate
 
 
 # ---------------------------------------------------------------------------
@@ -262,7 +271,8 @@ def _solve_fleet_impl(prob: AllocationProblem, starts: jnp.ndarray,
         x=take_b(x, i, 1), fun=take_b(fun, i, 0),
         x_int=take_b(x_int, j, 1), fun_int=take_b(f_int, j, 0),
         feasible=take_b(feas_int, j, 0),
-        used_barrier=strict, all_fun=fun, iters=iters)
+        used_barrier=strict, all_fun=fun, iters=iters,
+        x_int_all=x_int, fun_int_all=f_int, feas_int_all=feas_int)
 
 
 def solve_fleet(
@@ -393,7 +403,10 @@ def solve_fleet_bucketed(
         x_int=gather("x_int", is_solution=True), fun_int=gather("fun_int"),
         feasible=gather("feasible"), used_barrier=gather("used_barrier"),
         all_fun=gather("all_fun"),
-        iters=jnp.asarray(sum(int(r.iters) for r in results)))
+        iters=jnp.asarray(sum(int(r.iters) for r in results)),
+        x_int_all=gather("x_int_all", is_solution=True),
+        fun_int_all=gather("fun_int_all"),
+        feas_int_all=gather("feas_int_all"))
 
 
 # ---------------------------------------------------------------------------
@@ -408,15 +421,16 @@ class FleetStepResult(NamedTuple):
     x_int: jnp.ndarray     # (B, n) rounded allocation actually deployed
     fun_int: jnp.ndarray   # (B,) objective at x_int
     feasible: jnp.ndarray  # (B,) integer-solution feasibility
+    iters: jnp.ndarray     # (B,) adaptive-PGD iterations per lane
 
 
 @partial(jax.jit, static_argnames=("steps",))
 def _step_fleet_impl(prob: AllocationProblem, x_current: jnp.ndarray,
                      delta_max: jnp.ndarray, x_init: jnp.ndarray,
                      active: jnp.ndarray, steps: int) -> FleetStepResult:
-    x_rel = jax.vmap(
-        lambda pb, xc, dm, xi: solve_incremental(pb, xc, dm, x_init=xi,
-                                                 steps=steps)
+    x_rel, iters = jax.vmap(
+        lambda pb, xc, dm, xi: solve_incremental_info(pb, xc, dm, x_init=xi,
+                                                      steps=steps)
     )(prob, x_current, delta_max, x_init)
     x_int = jax.vmap(round_and_polish)(prob, x_rel)
     # frozen lanes (active=False) keep their warm start as the answer; the
@@ -425,7 +439,8 @@ def _step_fleet_impl(prob: AllocationProblem, x_current: jnp.ndarray,
     x_int = jnp.where(active[:, None], x_int, x_current)
     f_int = jax.vmap(objective)(prob, x_int)
     feas = jax.vmap(lambda pb, xi: is_feasible(pb, xi, 1e-3))(prob, x_int)
-    return FleetStepResult(x=x_rel, x_int=x_int, fun_int=f_int, feasible=feas)
+    return FleetStepResult(x=x_rel, x_int=x_int, fun_int=f_int, feasible=feas,
+                           iters=jnp.where(active, iters, 0))
 
 
 def solve_fleet_step(

@@ -28,13 +28,16 @@ from .forecast import (FORECASTER_KINDS, EWMAForecaster, Forecaster,
                        OracleForecaster, make_forecaster)
 from .problem import (DEFAULT_COUPLING_EPS, DEFAULT_COUPLING_W,
                       HorizonProblem, churn_bound_grad, churn_bound_penalty,
+                      commit_coupling_grad, commit_coupling_penalty,
                       coupling_grad, coupling_penalty, expand_problems,
                       horizon_objective, horizon_objective_terms,
                       smoothed_churn, tick_problem)
 from .solver import (DEFAULT_DELTA_PENALTY_W, DEFAULT_PENALTY_W,
-                     HorizonFleetStepResult, round_committed, solve_horizon,
-                     solve_horizon_fleet_step)
-from .controller import ModelPredictiveController
+                     HorizonFleetStepResult, HorizonSolveResult,
+                     HorizonSolverConfig, round_committed, solve_horizon,
+                     solve_horizon_fleet_step, solve_horizon_info)
+from .controller import (ModelPredictiveController, select_window_candidate,
+                         window_candidate_scores)
 
 __all__ = [
     "Forecaster", "LastValueForecaster", "EWMAForecaster",
@@ -43,10 +46,13 @@ __all__ = [
     "HorizonProblem", "expand_problems", "tick_problem",
     "horizon_objective", "horizon_objective_terms",
     "coupling_penalty", "coupling_grad", "smoothed_churn",
+    "commit_coupling_penalty", "commit_coupling_grad",
     "churn_bound_penalty", "churn_bound_grad",
     "DEFAULT_COUPLING_W", "DEFAULT_COUPLING_EPS", "DEFAULT_PENALTY_W",
     "DEFAULT_DELTA_PENALTY_W",
-    "solve_horizon", "solve_horizon_fleet_step", "HorizonFleetStepResult",
+    "solve_horizon", "solve_horizon_info", "solve_horizon_fleet_step",
+    "HorizonFleetStepResult", "HorizonSolveResult", "HorizonSolverConfig",
     "round_committed",
-    "ModelPredictiveController",
+    "ModelPredictiveController", "window_candidate_scores",
+    "select_window_candidate",
 ]

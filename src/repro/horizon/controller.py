@@ -16,11 +16,28 @@ State beyond the myopic controller is exactly two things: the forecaster
 warm-starts the next solve shifted one tick (row 0 reset to the deployed
 counts — the same warm start the myopic tick uses).
 
+The per-tick solve runs the shared BB/Armijo engine by default
+(``HorizonSolverConfig``, see ``repro.horizon.solver``); every recorded
+``ControllerStep.solver_iters`` is the iteration count that tick actually
+spent — the adaptive-vs-fixed evidence the horizon benchmark aggregates.
+
+Cold start (``cold_start``): the first tick has no allocation, hence no
+churn to plan around, so it is always the myopic multistart candidate set.
+
+* ``"myopic"`` (default) — pick the best rounded candidate by TICK-0
+  integer merit, identical at every H (and to the batched fleet cold
+  start).
+* ``"window"`` — score the SAME rounded candidates against the WHOLE
+  window's objective (each candidate held constant across the H ticks; the
+  coupling term of a constant plan is exactly 0), picking the mix that is
+  cheapest for where demand is HEADED rather than where it is. At H=1 the
+  window is just tick 0, so the selection — and the myopic equivalence —
+  is unchanged.
+
 Equivalences that anchor the design (both test-enforced):
 
 * cold tick — no allocation exists, so there is no churn to plan around;
-  the committed tick is the myopic multistart cold start, identical at
-  every H.
+  the committed tick comes from the myopic multistart candidates.
 * ``horizon=1`` — the window is just the observed demand; the solve reduces
   op-for-op to ``solve_incremental`` (see repro.horizon.solver), so the MPC
   controller reproduces the myopic controller's integer allocations exactly
@@ -34,14 +51,48 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+import repro.core.objective as obj
 from repro.core.controller import (ControllerStep,
                                    InfrastructureOptimizationController)
+from repro.core.multistart import multistart_solve
 from repro.core.problem import AllocationProblem
 
 from .forecast import Forecaster, LastValueForecaster
 from .problem import (DEFAULT_COUPLING_EPS, DEFAULT_COUPLING_W,
                       expand_problems)
-from .solver import DEFAULT_PENALTY_W, round_committed, solve_horizon
+from .solver import (DEFAULT_PENALTY_W, HorizonSolverConfig, round_committed,
+                     solve_horizon_info)
+
+
+def window_candidate_scores(probs: List[AllocationProblem],
+                            candidates: np.ndarray) -> np.ndarray:
+    """Whole-window objective of each cold-start candidate held constant
+    across the window: ``scores[s] = Σ_h f_h(candidates[s])``.
+
+    This is exactly the time-expanded objective of the constant plan
+    ``tile(candidates[s], (H, 1))`` — the inter-tick coupling of a constant
+    plan is 0 by construction (``s_eps(0) = 0``), so no coupling weight
+    enters the cold-start selection. Shared by the sequential controller and
+    the batched MPC replay so both engines rank candidates identically."""
+    import jax
+
+    cands = jnp.asarray(np.asarray(candidates, np.float32))     # (S, n)
+    scores = np.zeros(cands.shape[0], np.float64)
+    for pb in probs:
+        # one vmapped evaluation per tick (not one dispatch per candidate)
+        scores += np.asarray(
+            jax.vmap(lambda c: obj.objective(pb, c))(cands), np.float64)
+    return scores
+
+
+def select_window_candidate(scores: np.ndarray,
+                            feasible: np.ndarray) -> int:
+    """Pick the candidate index by window score, tick-0-infeasible ones
+    pushed behind every feasible one (the same +1e12 merit convention the
+    myopic multistart selection uses — at H=1 the two selections agree
+    exactly)."""
+    merit = np.where(np.asarray(feasible, bool), scores, scores + 1e12)
+    return int(np.argmin(merit))
 
 
 @dataclass
@@ -60,14 +111,19 @@ class ModelPredictiveController(InfrastructureOptimizationController):
                          program (the committed tick's churn stays a hard
                          ``delta_max`` ball regardless).
     * ``coupling_eps`` — smoothing epsilon of the coupling |·|.
-    * ``solver_steps`` — PGD budget per tick (600 = the myopic warm tick's
-                         ``solve_incremental`` budget; required for the
-                         H=1 equivalence).
-    * ``penalty_w``    — band-penalty weight on PLANNED ticks (see
-                         repro.horizon.solver: planned rows need the
-                         solver's quadratic coverage penalty because they
-                         never receive the feasibility-first rounding;
-                         inert at H=1).
+    * ``solver_config``— a ``HorizonSolverConfig``: engine choice
+                         (adaptive BB/Armijo vs fixed-step), iteration
+                         budget, tolerance, ladder parameters and penalty
+                         weights, all in one per-replay object. When given
+                         it wins wholesale over the two legacy knobs below.
+    * ``solver_steps`` — legacy: PGD budget per tick (600 = the myopic warm
+                         tick's ``solve_incremental`` budget; required for
+                         the H=1 equivalence).
+    * ``penalty_w``    — legacy: band-penalty weight on PLANNED ticks (see
+                         repro.horizon.solver; inert at H=1).
+    * ``cold_start``   — ``"myopic"`` (tick-0 merit) or ``"window"``
+                         (whole-window merit) candidate selection on the
+                         cold tick (module docstring).
 
     ``plan`` holds the last relaxed plan (H, n): rows 1..H-1 are the
     controller's current intentions for the next ticks (useful diagnostics:
@@ -77,15 +133,23 @@ class ModelPredictiveController(InfrastructureOptimizationController):
     forecaster: Optional[Forecaster] = None
     coupling_w: float = DEFAULT_COUPLING_W
     coupling_eps: float = DEFAULT_COUPLING_EPS
+    solver_config: Optional[HorizonSolverConfig] = None
     solver_steps: int = 600
     penalty_w: float = DEFAULT_PENALTY_W
+    cold_start: str = "myopic"
     plan: Optional[np.ndarray] = None
 
     def __post_init__(self) -> None:
-        """Default the forecaster; validate the window length."""
+        """Default the forecaster; resolve the solver config; validate."""
         assert self.horizon >= 1, self.horizon
+        assert self.cold_start in ("myopic", "window"), self.cold_start
         if self.forecaster is None:
             self.forecaster = LastValueForecaster()
+        if self.solver_config is None:
+            self.solver_config = HorizonSolverConfig(
+                steps=int(self.solver_steps), penalty_w=float(self.penalty_w))
+        assert self.solver_config.solver in ("adaptive", "fixed"), \
+            self.solver_config.solver
 
     # -- window construction -------------------------------------------------
 
@@ -119,21 +183,40 @@ class ModelPredictiveController(InfrastructureOptimizationController):
                       else self.x_current)
         return out
 
+    # -- cold start ----------------------------------------------------------
+
+    def cold_window_counts(self, probs: List[AllocationProblem]) -> np.ndarray:
+        """``cold_start="window"``: rank the myopic multistart's rounded
+        candidates by the WHOLE window's objective (each candidate held
+        constant across the window — the constant plan's coupling is 0) and
+        return the winner. Tick-0-infeasible candidates lose to every
+        feasible one, so today's demand is still covered; at H=1 the window
+        score IS the tick-0 merit and the selection matches
+        ``cold_start_counts`` exactly."""
+        ms = multistart_solve(probs[0], n_starts=self.n_starts)
+        cands = np.asarray(ms.x_int_all, np.float64)             # (S, n)
+        scores = window_candidate_scores(probs, cands)
+        j = select_window_candidate(scores, np.asarray(ms.feas_int_all))
+        return cands[j]
+
     # -- the receding-horizon tick -------------------------------------------
 
     def plan_counts(self, probs: List[AllocationProblem]) -> np.ndarray:
         """Warm tick: solve the time-expanded program, store the relaxed
-        plan, and return the committed tick's rounded counts — rounded
+        plan (and the engine's iteration count on ``_last_solver_iters``),
+        and return the committed tick's rounded counts — rounded
         plan-respectingly when H > 1 (``round_committed``), so the polish
         scale-down cannot strip pre-provisioned capacity."""
         hp = expand_problems(probs, coupling_w=self.coupling_w,
                              coupling_eps=self.coupling_eps)
-        X = solve_horizon(hp, jnp.asarray(self.x_current, jnp.float32),
-                          jnp.asarray(self.delta_max, jnp.float32),
-                          x_init=jnp.asarray(self.shifted_plan(), jnp.float32),
-                          steps=self.solver_steps, penalty_w=self.penalty_w)
-        self.plan = np.asarray(X, np.float64)
-        return np.asarray(round_committed(probs[0], X[0],
+        res = solve_horizon_info(
+            hp, jnp.asarray(self.x_current, jnp.float32),
+            jnp.asarray(self.delta_max, jnp.float32),
+            x_init=jnp.asarray(self.shifted_plan(), jnp.float32),
+            cfg=self.solver_config)
+        self.plan = np.asarray(res.plan, np.float64)
+        self._last_solver_iters = int(res.iters)
+        return np.asarray(round_committed(probs[0], res.plan[0],
                                           respect_plan=(self.horizon > 1)),
                           np.float64)
 
@@ -147,10 +230,17 @@ class ModelPredictiveController(InfrastructureOptimizationController):
         demands = self.window_demands(demand)
         probs = self.window_problems(demands)
         if self.x_current is None:
-            # cold: no churn to couple — the myopic multistart cold start,
-            # identical at every H (and to the batched fleet cold start)
-            x, replanned = self.cold_start_counts(probs[0]), True
+            # cold: no churn to couple — the myopic multistart candidates,
+            # ranked by tick-0 merit ("myopic", identical at every H and to
+            # the batched fleet cold start) or by the whole-window
+            # objective ("window")
+            x = (self.cold_window_counts(probs)
+                 if self.cold_start == "window"
+                 else self.cold_start_counts(probs[0]))
+            replanned = True
+            self._last_solver_iters = 0
             self.plan = np.tile(x, (self.horizon, 1))
         else:
             x, replanned = self.plan_counts(probs), False
-        return self.apply_counts(demand, x, replanned)
+        return self.apply_counts(demand, x, replanned,
+                                 solver_iters=self._last_solver_iters)

@@ -7,8 +7,13 @@ construction, demand normalization included) into one program over the
 plan matrix ``X ∈ R^{H×n}``:
 
     min_X  Σ_h f_h(X_h)  +  w · Σ_{h=1..H-1} Σ_i s_eps((X_h - X_{h-1})_i)
+                         +  w · Σ_i s_eps((X_0 - x_current)_i)
     s.t.   X_h ∈ box_h ∩ mask_h                          (every tick)
            ||X_0 - x_current||_1 <= delta_max            (committed tick)
+
+(the second coupling term — the COMMITTED transition's churn price,
+:func:`commit_coupling_penalty` — is assembled by the solver, which holds
+``x_current``; like every H>1-only term it is statically absent at H=1)
 
 where f_h is the per-tick eq.(1) objective (cost + consolidation +
 volume-discount + log-fragmentation/shortage terms) of that tick's
@@ -120,6 +125,34 @@ def coupling_grad(X: jnp.ndarray, w, eps) -> jnp.ndarray:
     S = w * D / jnp.sqrt(D * D + eps)            # (H-1, n)
     Z = jnp.zeros_like(X[:1])
     return jnp.concatenate([Z, S]) - jnp.concatenate([S, Z])
+
+
+def commit_coupling_penalty(X: jnp.ndarray, x_current: jnp.ndarray,
+                            w, eps) -> jnp.ndarray:
+    """w · Σ_i s_eps((X_0 − x_current)_i) — the COMMITTED transition's
+    churn, priced like every other transition in the window.
+
+    The inter-tick coupling prices churn BETWEEN plan rows, but the
+    transition the controller is about to PAY — deployed ``x_current`` to
+    committed ``X_0`` — was only hard-bounded (the delta_max ball), never
+    priced. A solver that fully converges the relaxed program then chases
+    every demand wiggle to the ball boundary: the objective sees no reason
+    not to. (The old fixed-step solver hid this by under-converging — its
+    laziness acted as an accidental proximal regularizer; the adaptive
+    engine converges for real and needs the price made explicit.) Zero at
+    H = 1, where the window reduces to the myopic tick and the myopic
+    controller's hard-ball-only semantics (paper §III.E) must be exact."""
+    D = X[0] - x_current
+    return w * jnp.sum(jnp.sqrt(D * D + eps) - jnp.sqrt(eps))
+
+
+def commit_coupling_grad(X: jnp.ndarray, x_current: jnp.ndarray,
+                         w, eps) -> jnp.ndarray:
+    """Analytic gradient of :func:`commit_coupling_penalty` wrt the plan X
+    (only row 0 is touched; ``x_current`` is a constant)."""
+    D = X[0] - x_current
+    S = w * D / jnp.sqrt(D * D + eps)
+    return jnp.concatenate([S[None], jnp.zeros_like(X[1:])], axis=0)
 
 
 def smoothed_churn(X: jnp.ndarray, eps) -> jnp.ndarray:

@@ -10,17 +10,29 @@ Two entry points, both one compiled program per call:
   and ragged-horizon freezing, so a batched MPC replay issues one program
   per shape bucket per tick.
 
-The iteration mirrors ``core.incremental.solve_incremental`` (the myopic
-controller's warm tick) tick-by-tick:
+The default iteration is the shared Barzilai-Borwein + Armijo-ladder
+engine (``repro.core.pgd.pgd_minimize`` — the SAME loop the core barrier
+solver and ``solve_incremental`` run), applied to the horizon merit
 
-    X ← Π( X - ∇F(X) / L )
+    F(X) = Σ_h f_h(X_h)                       per-tick eq.(1) objectives
+         + coupling(X)                        smoothed inter-tick churn
+         + commit_coupling(X_0, x_current)    the COMMITTED churn, priced
+         + churn_bound(X)                     hinge² excess over delta_max
+         + Σ_{h≥1} penalty(prob_h, X_h)       planned-tick band penalty
 
-with ∇F = per-tick analytic eq.(1) gradients (``core.objective``) plus the
-smoothed inter-tick churn coupling, per-tick Lipschitz-ish steps L_h, and a
-projection Π that applies exact ``project_incremental`` chaining from
-``x_current`` on the COMMITTED tick (hard L1 churn ball — the same bound
-the myopic controller enforces) and the box/mask projection on the planned
-ticks, whose churn stays soft via the coupling penalty.
+with a projection Π that applies exact ``project_incremental`` chaining
+from ``x_current`` on the COMMITTED tick (hard L1 churn ball — the same
+bound the myopic controller enforces) and the box/mask projection on the
+planned ticks, whose churn stays soft via the coupling penalty. The BB
+step adapts to the window's curvature, so deep windows (H ≥ 8) converge in
+a fraction of the fixed-step budget — ``HorizonSolverConfig.steps`` is a
+BUDGET, and the solve reports how many iterations it actually took.
+
+``HorizonSolverConfig(solver="fixed")`` keeps the original fixed-step
+scheme (``X ← Π(X - ∇F(X)/L)`` with per-tick Lipschitz-ish steps, exactly
+the myopic warm tick's iteration) — the baseline the adaptive engine is
+benchmarked against in ``benchmarks/horizon_bench.py`` and
+``tests/horizon/test_solver_convergence.py``.
 
 Two H>1-only terms make the lookahead real rather than decorative:
 
@@ -42,8 +54,9 @@ Two H>1-only terms make the lookahead real rather than decorative:
 At H = 1 both terms — and the coupling — vanish STRUCTURALLY (H is static
 under jit, so they are absent from the compiled program, not just zero; a
 one-tick window has no future to protect) and the tick reduces op-for-op
-to ``solve_incremental`` + plain ``round_and_polish``: MPC with a one-tick
-window reproduces the myopic controller's allocations exactly
+to ``solve_incremental`` + plain ``round_and_polish``: the same shared
+engine on the same merit over the same feasible set, so MPC with a
+one-tick window reproduces the myopic controller's allocations exactly
 (test-enforced — the equivalence anchor for everything the lookahead
 adds).
 
@@ -51,7 +64,10 @@ The COLD start of an MPC replay needs no horizon solve at all: with no
 current allocation there is no churn to couple, and the first committed
 tick is the same multistart phase1→barrier-PGD→rounding program the myopic
 controller (and ``solve_fleet``) runs — the horizon controller reuses those
-core/fleet pieces directly rather than duplicating them here.
+core/fleet pieces directly rather than duplicating them here. With
+``cold_start="window"`` the controller still reuses that multistart
+candidate set but scores every rounded candidate against the WHOLE
+window's objective instead of tick 0's (see ``repro.horizon.controller``).
 """
 from __future__ import annotations
 
@@ -65,33 +81,146 @@ import numpy as np
 import repro.core.objective as obj
 from repro.core.incremental import project_incremental
 from repro.core.objective import is_feasible, objective
+from repro.core.pgd import PGDConfig, pgd_minimize
 from repro.core.rounding import round_and_polish
 
-from .problem import (HorizonProblem, churn_bound_grad, coupling_grad,
-                      tick_problem)
+from .problem import (HorizonProblem, churn_bound_grad, churn_bound_penalty,
+                      commit_coupling_grad, commit_coupling_penalty,
+                      coupling_grad, coupling_penalty, tick_problem)
 
 # planned-tick band-penalty weight; matches core.solver.SolverConfig's
 # penalty_w — the same quadratic fallback weight the barrier solver uses
 DEFAULT_PENALTY_W = 1e3
-# soft churn-BOUND weight on planned transitions (problem.churn_bound_penalty)
-# — strong enough that a one-tick excess of 1 node costs ~a node-hour, weak
-# enough that the committed tick's step size stays usable
-DEFAULT_DELTA_PENALTY_W = 50.0
+# soft churn-BOUND weight on planned transitions (problem.churn_bound_penalty).
+# Retuned for the ADAPTIVE engine: the seed-era 50.0 was calibrated against
+# the fixed-step solver, which moved so little per solve that the hinge
+# needed a huge weight to act at all; a solver that actually converges
+# obeys it, and at 50.0 it over-pre-provisions (pays cost for bursts the
+# per-tick churn budget could absorb on arrival). 10.0 keeps the
+# pre-provisioning behavior for genuinely unabsorbable bursts while cutting
+# both cost and churn on the horizon_bench flash-crowd fleets.
+DEFAULT_DELTA_PENALTY_W = 10.0
+
+
+class HorizonSolverConfig(NamedTuple):
+    """Hashable horizon-solver knobs (static under jit) — the per-replay
+    configuration ``replay_fleet(controller="mpc", solver_config=...)``
+    plumbs through to every tick's solve.
+
+    ``solver`` picks the engine: ``"adaptive"`` (default) is the shared
+    BB/Armijo ladder (``core.pgd``); ``"fixed"`` the original fixed-step
+    scheme. ``steps`` is the per-tick iteration budget (the adaptive engine
+    early-stops at ``tol``; fixed always runs the full count — 600 matches
+    the myopic ``solve_incremental`` budget). ``step0`` / ``n_backtracks``
+    / ``backtrack`` / ``armijo_c`` are the adaptive ladder's parameters
+    (``core.pgd.PGDConfig``); ``step_scale`` scales the fixed engine's
+    Lipschitz step only. ``penalty_w`` weights the planned-tick band
+    penalty and ``delta_penalty_w`` the soft churn bound on planned
+    transitions (both inert at H=1)."""
+
+    solver: str = "adaptive"       # "adaptive" (BB/Armijo) | "fixed"
+    steps: int = 600               # per-tick iteration budget
+    tol: float = 1e-6              # adaptive: stop when the move is tiny
+    ftol: float = 1e-4             # adaptive: ... or merit progress is flat
+    max_flat: int = 10             # adaptive: consecutive flat steps to stop
+    step0: float = 1.0             # adaptive: initial/fallback BB step
+    n_backtracks: int = 12         # adaptive: Armijo ladder length
+    backtrack: float = 0.5         # adaptive: ladder ratio
+    armijo_c: float = 1e-4         # adaptive: sufficient-decrease slope
+    step_scale: float = 1.0        # fixed: Lipschitz-step scale
+    penalty_w: float = DEFAULT_PENALTY_W
+    delta_penalty_w: float = DEFAULT_DELTA_PENALTY_W
+
+    def pgd(self) -> PGDConfig:
+        """The ``core.pgd.PGDConfig`` this config's adaptive fields map to."""
+        return PGDConfig(max_iters=self.steps, step0=self.step0,
+                         n_backtracks=self.n_backtracks,
+                         backtrack=self.backtrack, armijo_c=self.armijo_c,
+                         tol=self.tol, ftol=self.ftol,
+                         max_flat=self.max_flat)
+
+
+class HorizonSolveResult(NamedTuple):
+    """One relaxed horizon solve: the plan plus the iterations it took."""
+
+    plan: jnp.ndarray       # (H, n) relaxed time-expanded solution
+    iters: jnp.ndarray      # PGD iterations actually taken (== steps, fixed)
 
 
 def _tick_lipschitz(prob) -> jnp.ndarray:
-    """Per-tick step denominator, the exact expression solve_incremental
-    uses (required for the H=1 op-for-op equivalence)."""
+    """Per-tick step denominator of the FIXED engine, the exact expression
+    the pre-adaptive ``solve_incremental`` used (kept for the fixed-vs-
+    adaptive benchmark baseline)."""
     return (2.0 * prob.params.beta3 * jnp.sum(prob.K * prob.K)
             + jnp.linalg.norm(prob.c) + 1e-3)
 
 
-def _solve_horizon_body(hp: HorizonProblem, x_current: jnp.ndarray,
-                        delta_max: jnp.ndarray, x_init: jnp.ndarray,
-                        steps: int, step_scale: float, penalty_w: float,
-                        delta_penalty_w: float) -> jnp.ndarray:
-    """The (un-jitted) PGD loop over one plan X (H, n) — shared by the
-    single-tenant and the vmapped fleet entry points."""
+def _horizon_merit_fns(hp: HorizonProblem, x_current: jnp.ndarray,
+                       delta_max: jnp.ndarray, penalty_w: float,
+                       delta_penalty_w: float):
+    """The (value, grad, project) triple of the time-expanded program, in
+    the shape the shared PGD engine consumes. All H>1-only terms are
+    STATICALLY absent at H=1 (H is static under jit/vmap tracing), so the
+    H=1 triple is exactly ``solve_incremental``'s merit and feasible set."""
+    prob = hp.problem
+    H = hp.H
+    p0 = tick_problem(hp, 0)
+
+    if H == 1:
+        # the UNBATCHED per-tick ops, not vmap-over-1: op-for-op (and in
+        # practice bit-for-bit) the merit triple solve_incremental hands the
+        # shared engine — the adaptive line search is chaotic in the last
+        # ulps, so the H=1 ≡ myopic equivalence needs identical op graphs,
+        # not just identical math
+        def value1(X):
+            return obj.objective(p0, X[0])
+
+        def grad1(X):
+            return obj.grad_objective(p0, X[0])[None]
+
+        def proj1(X):
+            return project_incremental(p0, X[0], x_current, delta_max)[None]
+
+        return value1, grad1, proj1
+
+    rest = jax.tree_util.tree_map(lambda a: a[1:], prob)
+    pw = jnp.asarray(penalty_w, jnp.float32)
+    dpw = jnp.asarray(delta_penalty_w, jnp.float32)
+
+    def value(X):
+        val = jnp.sum(jax.vmap(obj.objective)(prob, X))
+        val = val + coupling_penalty(X, hp.coupling_w, hp.coupling_eps)
+        val = val + commit_coupling_penalty(X, x_current, hp.coupling_w,
+                                            hp.coupling_eps)
+        val = val + churn_bound_penalty(X, delta_max, dpw, hp.coupling_eps)
+        val = val + jnp.sum(jax.vmap(
+            lambda pb, x: obj.penalty(pb, x, pw))(rest, X[1:]))
+        return val
+
+    def grad(X):
+        G = jax.vmap(obj.grad_objective)(prob, X)
+        G = G + coupling_grad(X, hp.coupling_w, hp.coupling_eps)
+        G = G + commit_coupling_grad(X, x_current, hp.coupling_w,
+                                     hp.coupling_eps)
+        G = G + churn_bound_grad(X, delta_max, dpw, hp.coupling_eps)
+        Gp = jax.vmap(
+            lambda pb, x: obj.penalty_grad(pb, x, pw))(rest, X[1:])
+        return jnp.concatenate([G[:1], G[1:] + Gp])
+
+    def proj(X):
+        x0 = project_incremental(p0, X[0], x_current, delta_max)
+        rest_X = jax.vmap(obj.project)(rest, X[1:])
+        return jnp.concatenate([x0[None], rest_X], axis=0)
+
+    return value, grad, proj
+
+
+def _solve_horizon_fixed(hp: HorizonProblem, x_current: jnp.ndarray,
+                         delta_max: jnp.ndarray, x_init: jnp.ndarray,
+                         steps: int, step_scale: float, penalty_w: float,
+                         delta_penalty_w: float) -> jnp.ndarray:
+    """The original fixed-step PGD loop over one plan X (H, n) — kept as the
+    ``solver="fixed"`` baseline the adaptive engine is measured against."""
     prob = hp.problem
     H = hp.H                              # static under jit/vmap tracing
     p0 = tick_problem(hp, 0)
@@ -99,10 +228,11 @@ def _solve_horizon_body(hp: HorizonProblem, x_current: jnp.ndarray,
     if H > 1:
         rest = jax.tree_util.tree_map(lambda a: a[1:], prob)
         # curvature of the smoothed |u|: s''(0) = 1/sqrt(eps), two coupling
-        # terms touch each row, plus ~2w per adjacent transition from the
+        # terms touch each row (the committed row's second one is the
+        # commit-churn price), plus ~2w per adjacent transition from the
         # churn-bound hinge; planned rows add the band penalty's
         # 2*w*sum(K^2). Statically absent at H=1 so the step size matches
-        # solve_incremental exactly.
+        # the pre-adaptive solve_incremental exactly.
         L = (L + 2.0 * hp.coupling_w / jnp.sqrt(hp.coupling_eps)
              + 4.0 * delta_penalty_w)
         pen_curv = 2.0 * penalty_w * jax.vmap(
@@ -120,6 +250,8 @@ def _solve_horizon_body(hp: HorizonProblem, x_current: jnp.ndarray,
         G = jax.vmap(obj.grad_objective)(prob, X)
         if H > 1:
             G = G + coupling_grad(X, hp.coupling_w, hp.coupling_eps)
+            G = G + commit_coupling_grad(X, x_current, hp.coupling_w,
+                                         hp.coupling_eps)
             G = G + churn_bound_grad(X, delta_max,
                                      jnp.asarray(delta_penalty_w, jnp.float32),
                                      hp.coupling_eps)
@@ -132,40 +264,97 @@ def _solve_horizon_body(hp: HorizonProblem, x_current: jnp.ndarray,
     return jax.lax.fori_loop(0, steps, body, proj(x_init))
 
 
-@partial(jax.jit, static_argnames=("steps",))
-def _solve_horizon_impl(hp, x_current, delta_max, x_init, steps, step_scale,
-                        penalty_w, delta_penalty_w):
-    return _solve_horizon_body(hp, x_current, delta_max, x_init, steps,
-                               step_scale, penalty_w, delta_penalty_w)
+def _solve_horizon_body(hp: HorizonProblem, x_current: jnp.ndarray,
+                        delta_max: jnp.ndarray, x_init: jnp.ndarray,
+                        cfg: HorizonSolverConfig):
+    """The (un-jitted) solve of one plan X (H, n), dispatching on the
+    configured engine — shared by the single-tenant and the vmapped fleet
+    entry points. Returns ``(X, iters)``."""
+    if cfg.solver == "fixed":
+        X = _solve_horizon_fixed(hp, x_current, delta_max, x_init, cfg.steps,
+                                 cfg.step_scale, cfg.penalty_w,
+                                 cfg.delta_penalty_w)
+        return X, jnp.asarray(cfg.steps)
+    value, grad, proj = _horizon_merit_fns(hp, x_current, delta_max,
+                                           cfg.penalty_w, cfg.delta_penalty_w)
+    X, _, iters = pgd_minimize(value, grad, proj, x_init, cfg.pgd())
+    return X, iters
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _solve_horizon_impl(hp, x_current, delta_max, x_init,
+                        cfg: HorizonSolverConfig):
+    return _solve_horizon_body(hp, x_current, delta_max, x_init, cfg)
+
+
+def _resolve_cfg(cfg: Optional[HorizonSolverConfig], steps: Optional[int],
+                 step_scale: Optional[float], penalty_w: Optional[float],
+                 delta_penalty_w: Optional[float]) -> HorizonSolverConfig:
+    """Merge the legacy per-argument knobs into a HorizonSolverConfig; an
+    explicit ``cfg`` wins wholesale (the per-replay plumbing path)."""
+    if cfg is not None:
+        assert cfg.solver in ("adaptive", "fixed"), cfg.solver
+        return cfg
+    out = HorizonSolverConfig()
+    if steps is not None:
+        out = out._replace(steps=int(steps))
+    if step_scale is not None:
+        out = out._replace(step_scale=float(step_scale))
+    if penalty_w is not None:
+        out = out._replace(penalty_w=float(penalty_w))
+    if delta_penalty_w is not None:
+        out = out._replace(delta_penalty_w=float(delta_penalty_w))
+    return out
+
+
+def solve_horizon_info(hp: HorizonProblem, x_current, delta_max,
+                       x_init: Optional[jnp.ndarray] = None,
+                       steps: Optional[int] = None,
+                       step_scale: Optional[float] = None,
+                       penalty_w: Optional[float] = None,
+                       delta_penalty_w: Optional[float] = None,
+                       cfg: Optional[HorizonSolverConfig] = None
+                       ) -> HorizonSolveResult:
+    """:func:`solve_horizon` variant returning the plan AND the iteration
+    count the engine actually spent (== ``steps`` for the fixed engine; the
+    early-stopping win for the adaptive one — what the benchmark's
+    ``solver_iters`` cells aggregate)."""
+    cfg = _resolve_cfg(cfg, steps, step_scale, penalty_w, delta_penalty_w)
+    x_current = jnp.asarray(x_current, jnp.float32)
+    delta_max = jnp.asarray(delta_max, jnp.float32)
+    if x_init is None:
+        x_init = jnp.tile(x_current[None, :], (hp.H, 1))
+    X, iters = _solve_horizon_impl(hp, x_current, delta_max,
+                                   jnp.asarray(x_init, jnp.float32), cfg)
+    return HorizonSolveResult(plan=X, iters=iters)
 
 
 def solve_horizon(hp: HorizonProblem, x_current, delta_max,
-                  x_init: Optional[jnp.ndarray] = None, steps: int = 600,
-                  step_scale: float = 1.0,
-                  penalty_w: float = DEFAULT_PENALTY_W,
-                  delta_penalty_w: float = DEFAULT_DELTA_PENALTY_W
-                  ) -> jnp.ndarray:
+                  x_init: Optional[jnp.ndarray] = None,
+                  steps: Optional[int] = None,
+                  step_scale: Optional[float] = None,
+                  penalty_w: Optional[float] = None,
+                  delta_penalty_w: Optional[float] = None,
+                  cfg: Optional[HorizonSolverConfig] = None) -> jnp.ndarray:
     """Solve the relaxed time-expanded program; returns the plan X (H, n).
 
     ``x_current`` (n,) is the currently deployed allocation the committed
     tick chains from (hard L1 ball of radius ``delta_max``, exact
     ``project_incremental``); ``x_init`` optionally warm-starts the whole
     plan (the MPC controller passes its previous plan shifted one tick,
-    with row 0 reset to ``x_current``). ``penalty_w`` is the planned-tick
-    band-penalty weight and ``delta_penalty_w`` the soft churn-bound weight
-    on planned transitions (module docstring; both inert at H=1). Defaults:
-    ``x_init`` = x_current tiled; ``steps`` = 600, matching
-    ``solve_incremental`` so the H=1 program is the myopic warm tick
-    op-for-op. Only row 0 is committed — round it with
-    :func:`round_committed` on the tick-0 problem."""
-    x_current = jnp.asarray(x_current, jnp.float32)
-    delta_max = jnp.asarray(delta_max, jnp.float32)
-    if x_init is None:
-        x_init = jnp.tile(x_current[None, :], (hp.H, 1))
-    return _solve_horizon_impl(hp, x_current, delta_max,
-                               jnp.asarray(x_init, jnp.float32), int(steps),
-                               float(step_scale), float(penalty_w),
-                               float(delta_penalty_w))
+    with row 0 reset to ``x_current``). ``cfg`` (a
+    :class:`HorizonSolverConfig`) selects and parameterizes the engine —
+    adaptive BB/Armijo by default, ``solver="fixed"`` for the original
+    fixed-step loop; the remaining keyword knobs are legacy per-field
+    overrides of the default config (ignored when ``cfg`` is given). The
+    default budget (600) matches ``solve_incremental`` so the H=1 program
+    is the myopic warm tick op-for-op. Only row 0 is committed — round it
+    with :func:`round_committed` on the tick-0 problem. Use
+    :func:`solve_horizon_info` to also get the iteration count."""
+    return solve_horizon_info(hp, x_current, delta_max, x_init=x_init,
+                              steps=steps, step_scale=step_scale,
+                              penalty_w=penalty_w,
+                              delta_penalty_w=delta_penalty_w, cfg=cfg).plan
 
 
 def round_committed(p0, x_rel0: jnp.ndarray,
@@ -195,21 +384,20 @@ class HorizonFleetStepResult(NamedTuple):
     x_int: jnp.ndarray      # (B, n) committed (rounded) tick-0 allocation
     fun_int: jnp.ndarray    # (B,) tick-0 objective at x_int
     feasible: jnp.ndarray   # (B,) tick-0 integer feasibility
+    iters: jnp.ndarray      # (B,) PGD iterations per lane (frozen lanes: 0)
 
 
-@partial(jax.jit, static_argnames=("steps", "respect_plan"))
+@partial(jax.jit, static_argnames=("cfg", "respect_plan"))
 def _horizon_fleet_step_impl(hp: HorizonProblem, x_current: jnp.ndarray,
                              delta_max: jnp.ndarray, x_init: jnp.ndarray,
-                             active: jnp.ndarray, steps: int,
-                             penalty_w: jnp.ndarray,
-                             delta_penalty_w: jnp.ndarray, respect_plan: bool
-                             ) -> HorizonFleetStepResult:
+                             active: jnp.ndarray, cfg: HorizonSolverConfig,
+                             respect_plan: bool) -> HorizonFleetStepResult:
     # vmap the SAME body over the (B,) lane axis; vmap preserves per-lane op
     # structure, so each lane matches a sequential solve_horizon call
-    plan = jax.vmap(
+    plan, iters = jax.vmap(
         lambda pb, xc, dm, xi: _solve_horizon_body(
             HorizonProblem(pb, hp.coupling_w, hp.coupling_eps), xc, dm, xi,
-            steps, 1.0, penalty_w, delta_penalty_w)
+            cfg)
     )(hp.problem, x_current, delta_max, x_init)
     p0 = jax.tree_util.tree_map(lambda a: a[:, 0], hp.problem)   # (B, ...)
     x_int = jax.vmap(lambda pb, xr: round_committed(pb, xr, respect_plan)
@@ -221,16 +409,18 @@ def _horizon_fleet_step_impl(hp: HorizonProblem, x_current: jnp.ndarray,
     f_int = jax.vmap(objective)(p0, x_int)
     feas = jax.vmap(lambda pb, xi: is_feasible(pb, xi, 1e-3))(p0, x_int)
     return HorizonFleetStepResult(plan=plan, x_int=x_int, fun_int=f_int,
-                                  feasible=feas)
+                                  feasible=feas,
+                                  iters=jnp.where(active, iters, 0))
 
 
 def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
                              delta_max: Union[float, jnp.ndarray],
                              x_init: Optional[jnp.ndarray] = None,
                              active: Optional[np.ndarray] = None,
-                             steps: int = 600,
-                             penalty_w: float = DEFAULT_PENALTY_W,
-                             delta_penalty_w: float = DEFAULT_DELTA_PENALTY_W
+                             steps: Optional[int] = None,
+                             penalty_w: Optional[float] = None,
+                             delta_penalty_w: Optional[float] = None,
+                             cfg: Optional[HorizonSolverConfig] = None
                              ) -> HorizonFleetStepResult:
     """One receding-horizon tick for EVERY tenant lane in one jitted program.
 
@@ -241,9 +431,13 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
     ``x_init`` (B, H, n) the per-lane plan warm starts (default: x_current
     tiled). ``active`` is the ragged-horizon liveness mask with
     solve_fleet_step semantics: frozen lanes come back with
-    ``x_int == x_current`` and their plan pinned to it. vmap keeps lanes
-    independent, so live lanes match sequential :func:`solve_horizon` +
-    ``round_and_polish`` calls exactly (CPU, test-enforced)."""
+    ``x_int == x_current``, their plan pinned to it and ``iters == 0``.
+    ``cfg`` selects/parameterizes the engine exactly as in
+    :func:`solve_horizon` (the legacy keyword knobs override the default
+    config when ``cfg`` is omitted). vmap keeps lanes independent, so live
+    lanes match sequential :func:`solve_horizon` + ``round_and_polish``
+    calls exactly (CPU, test-enforced)."""
+    cfg = _resolve_cfg(cfg, steps, None, penalty_w, delta_penalty_w)
     B = hp.problem.c.shape[0]
     H = hp.problem.d.shape[1]
     x_current = jnp.asarray(x_current, jnp.float32)
@@ -254,7 +448,4 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
               else jnp.asarray(np.asarray(active, bool)))
     return _horizon_fleet_step_impl(hp, x_current, delta_max,
                                     jnp.asarray(x_init, jnp.float32), active,
-                                    int(steps),
-                                    jnp.asarray(penalty_w, jnp.float32),
-                                    jnp.asarray(delta_penalty_w, jnp.float32),
-                                    respect_plan=(H > 1))
+                                    cfg, respect_plan=(H > 1))

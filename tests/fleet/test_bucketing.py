@@ -128,9 +128,12 @@ def test_bucketed_solve_matches_unbucketed():
     np.testing.assert_array_equal(np.asarray(buck.x_int),
                                   np.asarray(flat.x_int))
     # relaxed trajectories may part ways in the last ulps under different
-    # padded reduction shapes — same tolerance as the ragged vmap-path test
+    # padded reduction shapes; the BB/Armijo engine's accept/reject line
+    # search amplifies those ulps more than the old fixed ladder did, so
+    # the relaxed values get solver tolerance while the INTEGER results
+    # above stay the exact-equality gate
     np.testing.assert_allclose(np.asarray(buck.fun), np.asarray(flat.fun),
-                               rtol=1e-3)
+                               rtol=5e-3)
     assert bool(np.all(np.asarray(buck.feasible)))
 
 

@@ -116,3 +116,31 @@ def test_objective_terms_split():
     np.testing.assert_allclose(
         float(jnp.sum(terms["per_tick"]) + terms["coupling"]),
         float(horizon_objective(hp, X)), rtol=1e-6)
+
+
+@settings(max_examples=6)
+@given(seed=st.integers(0, 10_000), H=st.integers(2, 5))
+def test_commit_coupling_grad_matches_autodiff(seed, H):
+    """The committed transition's churn-price gradient (only row 0 moves;
+    x_current is a constant) must agree with jax.grad."""
+    from repro.horizon import commit_coupling_grad, commit_coupling_penalty
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(H, 7)), jnp.float32)
+    xc = jnp.asarray(rng.normal(size=(7,)), jnp.float32)
+    w, eps = jnp.asarray(0.3, jnp.float32), jnp.asarray(1e-4, jnp.float32)
+    g_auto = jax.grad(lambda x: commit_coupling_penalty(x, xc, w, eps))(X)
+    np.testing.assert_allclose(
+        np.asarray(commit_coupling_grad(X, xc, w, eps)),
+        np.asarray(g_auto), rtol=1e-4, atol=1e-6)
+
+
+def test_commit_coupling_vanishes_when_committed_row_holds():
+    """No committed movement -> no price (s(0) = 0 exactly), regardless of
+    what the planned rows do."""
+    from repro.horizon import commit_coupling_grad, commit_coupling_penalty
+    xc = jnp.asarray([2.0, 3.0, 1.0])
+    X = jnp.stack([xc, xc * 4.0, xc * 0.5])
+    assert float(commit_coupling_penalty(X, xc, 1.0, 1e-6)) == 0.0
+    g = commit_coupling_grad(X, xc, 1.0, 1e-6)
+    assert float(jnp.abs(g[0]).max()) == 0.0
+    assert float(jnp.abs(g[1:]).max()) == 0.0      # planned rows untouched
