@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast docs-check bench bench-fleet bench-json bench-horizon example-fleet
+.PHONY: test test-fast docs-check bench bench-fleet bench-json bench-horizon example-fleet trace-demo
 
 test:            ## tier-1 verify: the full test suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -29,3 +29,6 @@ bench-horizon:   ## quick MPC-vs-myopic sweep -> benchmarks/BENCH_horizon.json
 
 example-fleet:   ## trace-driven fleet replay demo (batched engine)
 	PYTHONPATH=src $(PY) examples/fleet_replay.py
+
+trace-demo:      ## instrumented replay -> benchmarks/artifacts/trace.json (fails on schema violations)
+	PYTHONPATH=src $(PY) tools/trace_demo.py

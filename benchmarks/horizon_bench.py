@@ -39,6 +39,11 @@ Run:  PYTHONPATH=src python benchmarks/horizon_bench.py
 
 Always writes machine-readable results (default benchmarks/BENCH_horizon.json)
 like fleet_bench does, so the MPC-vs-myopic trajectory is tracked across PRs.
+Every replay runs instrumented (repro.obs): per-cell ``t_replay`` is split
+into ``t_compile`` (first-call compile-tagged ticks) and ``t_execute``
+(steady state), and the JSON gains a ``telemetry`` section (run-wide
+compile/steady split, pooled steady-tick percentiles, one cell's per-phase
+breakdown) plus a ``provenance`` block (git SHA, jax versions, platform).
 The acceptance gate: at least one (trace, forecaster, H>1) cell must beat the
 myopic controller's J on the same fleet.
 """
@@ -54,6 +59,7 @@ import numpy as np
 from repro.core import Catalog, make_cloud_catalog
 from repro.fleet import TenantSpec, make_trace, replay_fleet
 from repro.horizon import FORECASTER_KINDS, HorizonSolverConfig
+from repro.obs import ReplayReport, percentiles, provenance_block, telemetry
 
 DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "BENCH_horizon.json")
@@ -98,6 +104,32 @@ def _cell_metrics(metrics, churn_cost: float) -> dict:
 def _total_solver_iters(res) -> int:
     """Warm-tick PGD iterations the whole replay spent (fleet total)."""
     return int(sum(s.solver_iters for t in res.tenants for s in t.steps))
+
+
+def _instrumented_replay(**kw):
+    """One instrumented ``replay_fleet``: ``(result, timing, steady_ticks,
+    report)`` where ``timing`` splits the wall clock into compile-tagged
+    vs steady-state tick time (the per-cell t_replay used to fold JIT
+    compilation into whichever cell ran a shape first) and
+    ``steady_ticks`` are the raw steady-state tick latencies in ms for
+    run-wide percentile pooling. The compile tag means "first call for
+    this compile key IN THIS CELL": later cells re-running an
+    already-compiled shape still tag ~2 ticks compile, so cross-cell
+    compile seconds are a small overestimate — the steady-state numbers
+    are the comparable ones."""
+    t0 = time.time()
+    with telemetry() as rec:
+        res = replay_fleet(**kw)
+    dt = time.time() - t0
+    rep = ReplayReport.from_recorder(rec)
+    tick = next((p for p in rep.phases if p.name == "replay/tick"), None)
+    timing = dict(
+        t_replay=dt,
+        t_compile=(tick.compile_ms / 1e3 if tick else 0.0),
+        t_execute=(tick.execute_ms / 1e3 if tick else 0.0))
+    steady = [e.dur_us / 1e3 for e in rec.events
+              if e.name == "replay/tick" and e.phase != "compile"]
+    return res, timing, steady, rep
 
 
 # the fixed-step baseline the adaptive engine is benchmarked against — the
@@ -159,19 +191,31 @@ def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
           f"solvers={'+'.join(solvers)}")
     print("=" * 100)
 
+    # run-wide telemetry rollup: compile/steady seconds summed over every
+    # instrumented replay, tick latencies pooled for percentiles, and the
+    # last adaptive MPC cell's full per-phase report as an exemplar
+    tel = dict(compile_s=0.0, execute_s=0.0)
+    steady_ticks: list = []
+    example_report = None
+
     for kind in trace_kinds:
         specs = _fleet(catalog, kind, B, T)
-        t0 = time.time()
-        myo = replay_fleet(catalog, specs, run_ca_baseline=False,
-                           replay_mode="batched")
+        myo, timing, steady, _ = _instrumented_replay(
+            catalog=catalog, tenants=specs, run_ca_baseline=False,
+            replay_mode="batched")
         myo_cell = _cell_metrics(myo.metrics, churn_cost)
-        myo_cell["t_replay"] = time.time() - t0
+        myo_cell.update(timing)
         myo_cell["solver_iters"] = _total_solver_iters(myo)
         out["myopic"][kind] = myo_cell
+        tel["compile_s"] += timing["t_compile"]
+        tel["execute_s"] += timing["t_execute"]
+        steady_ticks.extend(steady)
         print(f"\n[{kind}] myopic: cost ${myo_cell['cost']:.2f}  churn "
               f"{myo_cell['churn']:.1f}  slo {myo_cell['slo_ticks']}  "
               f"J ${myo_cell['objective']:.2f}  "
-              f"iters {myo_cell['solver_iters']}")
+              f"iters {myo_cell['solver_iters']}  "
+              f"[compile {timing['t_compile']:.1f}s, "
+              f"steady {timing['t_execute']:.1f}s]")
         print(f"  {'forecaster':>14s} {'H':>3s} {'cost':>9s} {'churn':>8s} "
               f"{'slo':>4s} {'J':>9s} {'vs myopic':>10s} {'iters':>7s} "
               f"{'fixed J':>9s} {'f-iters':>7s}")
@@ -180,15 +224,20 @@ def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
                 per_solver = {}
                 for solver in solvers:
                     cfg = FIXED_CFG if solver == "fixed" else None
-                    t0 = time.time()
-                    res = replay_fleet(catalog, specs, run_ca_baseline=False,
-                                       replay_mode="batched",
-                                       controller="mpc", horizon=H,
-                                       forecaster=fc, solver_config=cfg)
+                    res, timing, steady, rep = _instrumented_replay(
+                        catalog=catalog, tenants=specs,
+                        run_ca_baseline=False, replay_mode="batched",
+                        controller="mpc", horizon=H, forecaster=fc,
+                        solver_config=cfg)
                     sc = _cell_metrics(res.metrics, churn_cost)
                     sc["solver_iters"] = _total_solver_iters(res)
-                    sc["t_replay"] = time.time() - t0
+                    sc.update(timing)
                     per_solver[solver] = sc
+                    tel["compile_s"] += timing["t_compile"]
+                    tel["execute_s"] += timing["t_execute"]
+                    steady_ticks.extend(steady)
+                    if solver == "adaptive":
+                        example_report = rep
                 cell = dict(per_solver[solvers[0]])
                 cell.update(trace=kind, forecaster=fc, H=H,
                             solver=solvers[0],
@@ -217,6 +266,19 @@ def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
         ref = oracle_J.get((c["trace"], c["H"]))
         c["regret_vs_oracle"] = (None if ref is None
                                  else c["objective"] - ref)
+
+    # BENCH telemetry section: run-wide compile/steady split, pooled
+    # steady-state tick percentiles, and one cell's per-phase breakdown
+    tel["n_steady_ticks"] = len(steady_ticks)
+    tel["tick_ms"] = percentiles(steady_ticks, (50, 95, 99))
+    if example_report is not None:
+        tel["example_cell"] = example_report.to_dict()
+    out["telemetry"] = tel
+    if tel["tick_ms"]:
+        print(f"\n[telemetry] compile {tel['compile_s']:.1f}s vs steady "
+              f"{tel['execute_s']:.1f}s across the sweep; steady tick "
+              f"p50 {tel['tick_ms']['p50']:.1f}ms  "
+              f"p99 {tel['tick_ms']['p99']:.1f}ms")
 
     out["adaptive_vs_fixed"] = adaptive_fixed_summary(out["cells"])
     if out["adaptive_vs_fixed"] is not None:
@@ -274,6 +336,7 @@ def main(argv):
     else:
         out = run(solvers=solvers)
     out["config"]["quick"] = quick
+    out["provenance"] = provenance_block(argv)
     with open(json_path, "w") as fh:
         json.dump(out, fh, indent=2, sort_keys=True)
         fh.write("\n")

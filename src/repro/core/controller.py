@@ -64,6 +64,12 @@ class InfrastructureOptimizationController:
     normalize: bool = True                       # demand-normalized solver units
     x_current: np.ndarray = None                 # set on first step
     history: List[ControllerStep] = field(default_factory=list)
+    # opt-in solver observability: when True, every warm solve also captures
+    # the engine's per-iteration convergence rows (core.pgd.PGDTrace, one
+    # entry per warm tick on ``solver_traces``). The traced program computes
+    # the same solution — see repro.obs.solver_trace.
+    capture_solver_trace: bool = False
+    solver_traces: List = field(default_factory=list)
 
     # not a dataclass field: last warm solve's PGD iteration count, consumed
     # by step() when recording the tick (0 until a warm solve has run)
@@ -94,12 +100,20 @@ class InfrastructureOptimizationController:
         overrides the warm start (e.g. the previous tick's relaxed solution,
         plumbed through by the batched replay engine). The adaptive solve's
         iteration count is kept on ``_last_solver_iters`` for
-        :meth:`apply_counts` bookkeeping."""
-        x_rel, iters = solve_incremental_info(
-            prob, jnp.asarray(self.x_current, jnp.float32),
-            jnp.asarray(self.delta_max, jnp.float32),
-            x_init=None if x_init is None
-            else jnp.asarray(x_init, jnp.float32))
+        :meth:`apply_counts` bookkeeping; with ``capture_solver_trace`` the
+        engine's convergence rows are appended to ``solver_traces``."""
+        x_init = None if x_init is None else jnp.asarray(x_init, jnp.float32)
+        if self.capture_solver_trace:
+            x_rel, iters, trace = solve_incremental_info(
+                prob, jnp.asarray(self.x_current, jnp.float32),
+                jnp.asarray(self.delta_max, jnp.float32),
+                x_init=x_init, capture_trace=True)
+            self.solver_traces.append(
+                type(trace)(*(np.asarray(f) for f in trace)))
+        else:
+            x_rel, iters = solve_incremental_info(
+                prob, jnp.asarray(self.x_current, jnp.float32),
+                jnp.asarray(self.delta_max, jnp.float32), x_init=x_init)
         self._last_solver_iters = int(iters)
         # rounding may exceed the churn bound slightly when demand jumps;
         # that's the feasibility-first tradeoff (shortage beats churn).

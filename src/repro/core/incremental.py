@@ -21,7 +21,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .pgd import PGDConfig, pgd_minimize
+from .pgd import PGDConfig, pgd_minimize, pgd_minimize_traced
 from .problem import AllocationProblem
 import repro.core.objective as obj
 
@@ -70,6 +70,20 @@ def _solve_incremental_impl(prob, x_current, delta_max, x0, cfg: PGDConfig):
     return pgd_minimize(F, G, proj, x0, cfg)
 
 
+@partial(jax.jit, static_argnames=("cfg",))
+def _solve_incremental_traced_impl(prob, x_current, delta_max, x0,
+                                   cfg: PGDConfig):
+    """The traced twin of ``_solve_incremental_impl``: same merit triple,
+    same engine, plus the fixed-size per-iteration PGDTrace capture."""
+    F = partial(obj.objective, prob)
+    G = partial(obj.grad_objective, prob)
+
+    def proj(x):
+        return project_incremental(prob, x, x_current, delta_max)
+
+    return pgd_minimize_traced(F, G, proj, x0, cfg)
+
+
 def solve_incremental(
     prob: AllocationProblem,
     x_current: jnp.ndarray,
@@ -97,14 +111,26 @@ def solve_incremental_info(
     x_init=None,
     steps: int = 600,
     cfg: PGDConfig | None = None,
+    capture_trace: bool = False,
 ):
     """:func:`solve_incremental` variant returning ``(x, iters)`` — the
     relaxed solution plus the PGD iterations actually taken (the early-
-    stopping win the adaptive engine buys over the old fixed-step loop)."""
+    stopping win the adaptive engine buys over the old fixed-step loop).
+
+    With ``capture_trace=True`` it returns ``(x, iters, trace)`` instead,
+    where ``trace`` is the engine's per-iteration ``core.pgd.PGDTrace``
+    (fixed-size ``(steps,)`` arrays — vmap-safe, so the batched fleet tick
+    can surface one trace per lane; see ``repro.obs.solver_trace``). The
+    solution and iteration count match the untraced call: the trace is
+    extra loop state, not extra math."""
     delta_max = jnp.asarray(delta_max, jnp.float32)
     x0 = x_current if x_init is None else x_init
     if cfg is None:
         cfg = PGDConfig(max_iters=int(steps))
+    if capture_trace:
+        x, _, iters, tr = _solve_incremental_traced_impl(
+            prob, jnp.asarray(x_current), delta_max, jnp.asarray(x0), cfg)
+        return x, iters, tr
     x, _, iters = _solve_incremental_impl(prob, jnp.asarray(x_current),
                                           delta_max, jnp.asarray(x0), cfg)
     return x, iters

@@ -77,34 +77,69 @@ def _flat_dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(a * b)
 
 
-def pgd_minimize(
+class PGDTrace(NamedTuple):
+    """Per-iteration convergence capture of one :func:`pgd_minimize_traced`
+    run — FIXED-SIZE ``(cfg.max_iters,)`` arrays (static shape), so the
+    traced engine stays jit- and vmap-safe: a vmapped traced solve returns
+    ``(B, max_iters)`` leaves, one full trace per lane. Rows at indices
+    ``>= iters`` were never written: ``merit``/``step``/``move`` hold NaN,
+    ``accepted`` False and ``rung`` -1 there (the validity sentinel —
+    consumers slice ``[:iters]``).
+
+    Fields, one row per iteration actually taken:
+
+    * ``merit``    — merit value AFTER the iteration (the accepted
+      candidate's value; unchanged from the previous iterate on a rejected
+      ladder). ``merit[iters-1]`` equals the ``fx`` the engine returns.
+    * ``step``     — the BB base step proposed at iteration start (the
+      ladder evaluates ``step * backtrack**(-1..n_backtracks-2)``).
+    * ``accepted`` — whether any ladder rung satisfied Armijo decrease.
+    * ``rung``     — index of the accepted ladder rung (0 = the upscaled
+      candidate, larger = more backtracking; -1 when the whole ladder was
+      rejected).
+    * ``move``     — max-abs coordinate move of the step (0 on rejection).
+    """
+
+    merit: jnp.ndarray      # (L,) float32 merit after each iteration
+    step: jnp.ndarray       # (L,) float32 proposed BB base step
+    accepted: jnp.ndarray   # (L,) bool   Armijo ladder found a candidate
+    rung: jnp.ndarray       # (L,) int32  accepted ladder index (-1: none)
+    move: jnp.ndarray       # (L,) float32 max|dx| of the accepted step
+
+
+def _empty_trace(L: int) -> PGDTrace:
+    return PGDTrace(merit=jnp.full((L,), jnp.nan, jnp.float32),
+                    step=jnp.full((L,), jnp.nan, jnp.float32),
+                    accepted=jnp.zeros((L,), bool),
+                    rung=jnp.full((L,), -1, jnp.int32),
+                    move=jnp.full((L,), jnp.nan, jnp.float32))
+
+
+def _pgd_minimize_impl(
     value_fn: Callable[[jnp.ndarray], jnp.ndarray],
     grad_fn: Callable[[jnp.ndarray], jnp.ndarray],
     project_fn: Callable[[jnp.ndarray], jnp.ndarray],
     x0: jnp.ndarray,
-    cfg: PGDConfig = PGDConfig(),
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Minimize ``value_fn`` over the set ``project_fn`` projects onto.
+    cfg: PGDConfig,
+    trace: bool,
+):
+    """The one BB/Armijo loop, with optional per-iteration trace capture.
 
-    Per iteration: propose ``bb * ratios`` candidate steps, project each
-    (``x - s * g``), evaluate all candidate VALUES as one vmapped batch,
-    accept the first (largest) candidate satisfying Armijo sufficient
-    decrease on the projected step, then refresh the BB1 step from the
-    accepted move. No candidate accepted -> shrink the proposal and retry;
-    converged (move < tol) or ladder exhausted -> stop.
-
-    Returns ``(x, value, iters)`` where ``iters`` is the number of
-    iterations actually taken (the early-stopping wins the benchmarks
-    report). The iterate shape is whatever ``x0`` has; ``value_fn`` must map
-    it to a scalar and ``grad_fn``/``project_fn`` to its own shape."""
+    ``trace`` is a PYTHON-level flag resolved at trace time: with
+    ``trace=False`` the loop-carried state (hence the compiled program) is
+    exactly the pre-trace engine's — the bit-exactness guarantees of every
+    batched ≡ sequential test are untouched. With ``trace=True`` the state
+    additionally carries a :class:`PGDTrace` written at index ``it`` each
+    iteration; the iterate computation itself is THE SAME ops either way,
+    so the traced run's ``(x, fx, iters)`` matches the untraced run's."""
     ratios = cfg.backtrack ** jnp.arange(-1, cfg.n_backtracks - 1)  # 1 upscale
 
     def cond(state):
-        x, fx, g, bb, it, flat, done = state
+        x, fx, g, bb, it, flat, done = state[:7]
         return (~done) & (it < cfg.max_iters)
 
     def body(state):
-        x, fx, g, bb, it, flat, _ = state
+        x, fx, g, bb, it, flat = state[:6]
         steps = bb * ratios
         cands = jax.vmap(
             lambda s: project_fn(x - s * g))(steps)            # (L, *x.shape)
@@ -139,10 +174,75 @@ def pgd_minimize(
         flat_new = jnp.where(is_flat, flat + 1, jnp.where(any_ok, 0, flat))
         done = ((~any_ok) & (bb < 1e-7)) | (any_ok & (move < cfg.tol)) \
             | (flat_new >= cfg.max_flat)
-        return (x_new, f_new, g_new, bb_new, it + 1, flat_new, done)
+        out = (x_new, f_new, g_new, bb_new, it + 1, flat_new, done)
+        if trace:
+            tr: PGDTrace = state[7]
+            tr = PGDTrace(
+                merit=tr.merit.at[it].set(f_new.astype(jnp.float32)),
+                step=tr.step.at[it].set(bb.astype(jnp.float32)),
+                accepted=tr.accepted.at[it].set(any_ok),
+                rung=tr.rung.at[it].set(
+                    jnp.where(any_ok, idx, -1).astype(jnp.int32)),
+                move=tr.move.at[it].set(
+                    jnp.where(any_ok, move, 0.0).astype(jnp.float32)))
+            return out + (tr,)
+        return out
 
     x0 = project_fn(x0)
     state = (x0, value_fn(x0), grad_fn(x0), jnp.asarray(cfg.step0),
              jnp.asarray(0), jnp.asarray(0), jnp.asarray(False))
-    x, fx, _, _, it, _, _ = jax.lax.while_loop(cond, body, state)
+    if trace:
+        state = state + (_empty_trace(cfg.max_iters),)
+    final = jax.lax.while_loop(cond, body, state)
+    x, fx, it = final[0], final[1], final[4]
+    return x, fx, it, (final[7] if trace else None)
+
+
+def pgd_minimize(
+    value_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    grad_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    project_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    x0: jnp.ndarray,
+    cfg: PGDConfig = PGDConfig(),
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Minimize ``value_fn`` over the set ``project_fn`` projects onto.
+
+    Per iteration: propose ``bb * ratios`` candidate steps, project each
+    (``x - s * g``), evaluate all candidate VALUES as one vmapped batch,
+    accept the first (largest) candidate satisfying Armijo sufficient
+    decrease on the projected step, then refresh the BB1 step from the
+    accepted move. No candidate accepted -> shrink the proposal and retry;
+    converged (move < tol) or ladder exhausted -> stop.
+
+    Returns ``(x, value, iters)`` where ``iters`` is the number of
+    iterations actually taken (the early-stopping wins the benchmarks
+    report). The iterate shape is whatever ``x0`` has; ``value_fn`` must map
+    it to a scalar and ``grad_fn``/``project_fn`` to its own shape. Use
+    :func:`pgd_minimize_traced` to also capture the per-iteration
+    convergence trace."""
+    x, fx, it, _ = _pgd_minimize_impl(value_fn, grad_fn, project_fn, x0, cfg,
+                                      trace=False)
     return x, fx, it
+
+
+def pgd_minimize_traced(
+    value_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    grad_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    project_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    x0: jnp.ndarray,
+    cfg: PGDConfig = PGDConfig(),
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, PGDTrace]:
+    """:func:`pgd_minimize` with per-iteration convergence capture.
+
+    Returns ``(x, value, iters, trace)`` where ``trace`` is a
+    :class:`PGDTrace` of fixed-size ``(cfg.max_iters,)`` arrays — the
+    fixed size keeps the capture jit/vmap-safe (vmapping this function
+    yields ``(B, max_iters)`` per-lane traces). The iterate math is the
+    SAME op sequence as the untraced engine (the trace arrays are extra
+    loop state, not extra math), so ``(x, value, iters)`` match a plain
+    ``pgd_minimize`` call; ``trace.merit[iters-1] == value`` whenever at
+    least one iteration ran. See ``repro.obs.solver_trace`` for analysis
+    helpers (validity slicing, per-lane extraction, summaries)."""
+    x, fx, it, tr = _pgd_minimize_impl(value_fn, grad_fn, project_fn, x0, cfg,
+                                       trace=True)
+    return x, fx, it, tr

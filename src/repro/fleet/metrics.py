@@ -15,7 +15,7 @@ Metric definitions (see docs/fleet.md for the full glossary):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -37,6 +37,13 @@ class TenantReplayMetrics:
     mean_diversity: float         # mean distinct instance types per tick
     peak_cost: float
     max_churn_violation: float = 0.0  # worst per-tick excess over delta_max
+    # per-tick PGD iteration counts (ControllerStep.solver_iters; 0 on cold
+    # multistart ticks). None for baselines that run no solver (the CA
+    # replay). compare=False: solver EFFORT is diagnostics, not part of the
+    # engine-equivalence contract — padded-reduction ulps can shift Armijo
+    # accepts between the sequential and batched engines by a few
+    # iterations even though the quantized allocations agree exactly.
+    solver_iters: Optional[List[int]] = field(default=None, compare=False)
 
     @property
     def slo_violation_rate(self) -> float:
@@ -45,13 +52,16 @@ class TenantReplayMetrics:
 
 def tenant_metrics(name: str, steps: Sequence[AllocationMetrics],
                    churns: Sequence[float],
-                   churn_violations: Optional[Sequence[float]] = None
+                   churn_violations: Optional[Sequence[float]] = None,
+                   solver_iters: Optional[Sequence[int]] = None
                    ) -> TenantReplayMetrics:
     """Integrate one tenant's per-tick snapshot metrics over the trace (see
     the module docstring / docs/fleet.md for each metric's definition).
     ``churn_violations`` are the per-tick ``ControllerStep.churn_violation``
     values — the rounded allocation's excess over ``delta_max`` — omitted
-    for baselines that carry no churn bound (the CA replay)."""
+    for baselines that carry no churn bound (the CA replay); likewise
+    ``solver_iters`` (the per-tick ``ControllerStep.solver_iters``) feeds
+    the fleet-level iteration percentiles and is omitted for baselines."""
     costs = np.asarray([s.total_cost for s in steps], np.float64)
     return TenantReplayMetrics(
         name=name,
@@ -67,6 +77,8 @@ def tenant_metrics(name: str, steps: Sequence[AllocationMetrics],
         max_churn_violation=(float(np.max(churn_violations))
                              if churn_violations is not None
                              and len(churn_violations) else 0.0),
+        solver_iters=(None if solver_iters is None
+                      else [int(i) for i in solver_iters]),
     )
 
 
@@ -122,6 +134,22 @@ class FleetReplayMetrics:
         return max((t.max_churn_violation for t in self.tenants), default=0.0)
 
     @property
+    def solver_iters_percentiles(self) -> Optional[dict]:
+        """Fleet-wide per-tick PGD iteration percentiles (p50/p95/max) over
+        WARM ticks — cold multistart ticks report 0 iterations and are
+        excluded so the percentiles describe the incremental engine the
+        replay actually spends its time in. None when no tenant recorded
+        iteration counts (CA baseline replays) or every tick was cold."""
+        vals = [i for t in self.tenants if t.solver_iters is not None
+                for i in t.solver_iters if i > 0]
+        if not vals:
+            return None
+        arr = np.asarray(vals, np.float64)
+        return {"p50": float(np.percentile(arr, 50)),
+                "p95": float(np.percentile(arr, 95)),
+                "max": int(arr.max())}
+
+    @property
     def baseline_cost_integral(self) -> Optional[float]:
         if self.baseline is None:
             return None
@@ -171,6 +199,11 @@ class FleetReplayMetrics:
             f"(worst per-tick excess over delta_max)",
             f"  mean fragmentation : {self.mean_fragmentation:.2f} providers",
         ]
+        pct = self.solver_iters_percentiles
+        if pct is not None:
+            lines.append(f"  solver iters/tick  : p50 {pct['p50']:.0f}, "
+                         f"p95 {pct['p95']:.0f}, max {pct['max']} "
+                         f"(warm ticks)")
         if self.baseline is not None:
             lines.append(f"  CA baseline cost   : "
                          f"${self.baseline_cost_integral:,.2f}")

@@ -68,6 +68,7 @@ from repro.core.controller import (ControllerStep,
                                    InfrastructureOptimizationController)
 from repro.core.metrics import AllocationMetrics, evaluate
 from repro.core.problem import PenaltyParams
+from repro.obs.telemetry import gauge, span
 
 from .batching import bucket_dims, embed_solutions, stack_problems
 from .metrics import FleetReplayMetrics, TenantReplayMetrics, tenant_metrics
@@ -130,10 +131,18 @@ class TenantReplay:
 
 @dataclass
 class FleetReplayResult:
-    """Everything a replay produced: per-tenant histories + fleet rollup."""
+    """Everything a replay produced: per-tenant histories + fleet rollup.
+
+    ``solver_traces`` is None unless the replay ran with
+    ``capture_solver_trace=True``: one list per tenant holding that
+    tenant's per-WARM-tick PGD convergence rows (``core.pgd.PGDTrace``,
+    numpy leaves; cold ticks run the multistart solver, which is not
+    traced). Both engines and both controllers fill it the same way — see
+    ``repro.obs.solver_trace`` for the schema and analysis helpers."""
 
     tenants: List[TenantReplay]
     metrics: FleetReplayMetrics
+    solver_traces: Optional[List[List]] = None
 
 
 def default_ca_pools(catalog: Catalog, demand: np.ndarray,
@@ -283,7 +292,8 @@ def _assemble_replay(spec: TenantSpec, steps: List[ControllerStep],
     both replay engines."""
     met = tenant_metrics(spec.name, [s.metrics for s in steps],
                          [s.churn for s in steps],
-                         churn_violations=[s.churn_violation for s in steps])
+                         churn_violations=[s.churn_violation for s in steps],
+                         solver_iters=[s.solver_iters for s in steps])
     ca_met, ca_counts = ca if ca is not None else (None, None)
     return TenantReplay(spec=spec, steps=steps, metrics=met,
                         ca_metrics=ca_met, ca_counts=ca_counts)
@@ -300,6 +310,32 @@ def replay_tenant(catalog: Catalog, spec: TenantSpec, *,
     ca = (_ca_baseline(catalog, spec, ca_expander, ca_mode)
           if run_ca_baseline else None)
     return _assemble_replay(spec, steps, ca)
+
+
+def _replay_sequential(ctls, tenants: Sequence[TenantSpec], controller: str,
+                       capture_solver_trace: bool):
+    """The instrumented sequential loop shared by both controllers: one
+    ``replay/tick`` span per (tenant, tick), warm ticks optionally tracing
+    the solver through the controller's ``capture_solver_trace`` flag.
+    Returns ``(histories, solver_traces)`` like the batched engines."""
+    histories, solver_traces = [], []
+    for ctl, spec in zip(ctls, tenants):
+        ctl.capture_solver_trace = capture_solver_trace
+        steps = []
+        for t, demand in enumerate(np.asarray(spec.trace, np.float64)):
+            # compile key: the cold (t=0) and warm programs compile
+            # separately, per problem shape and per traced/untraced variant
+            with span("replay/tick", cat="replay", tick=t,
+                      engine="sequential", controller=controller,
+                      tenant=spec.name,
+                      compile_key=("seq_tick", controller, ctl.catalog.n,
+                                   t > 0, capture_solver_trace)):
+                step = ctl.step(demand)
+                steps.append(step)
+            gauge("replay/solver_iters", step.solver_iters)
+        histories.append(steps)
+        solver_traces.append(list(ctl.solver_traces))
+    return histories, solver_traces
 
 
 # ---------------------------------------------------------------------------
@@ -328,11 +364,13 @@ def _replay_batch_groups(ctls: Sequence[InfrastructureOptimizationController],
 def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                           warm_start: str = "counts",
                           solver_steps: int = 600,
-                          hot_loop: Optional[str] = None
-                          ) -> List[List[ControllerStep]]:
+                          hot_loop: Optional[str] = None,
+                          capture_solver_trace: bool = False):
     """Step ALL tenants through their traces with one batched solve per shape
-    bucket per tick. Returns per-tenant step histories (controller objects
-    hold the same state the sequential engine would leave behind).
+    bucket per tick. Returns ``(histories, solver_traces)``: per-tenant step
+    histories (controller objects hold the same state the sequential engine
+    would leave behind) and — with ``capture_solver_trace`` — each tenant's
+    per-warm-tick PGD convergence rows (else empty lists).
 
     Horizons may be RAGGED: the fleet runs for ``max_b T_b`` ticks, and a
     tenant whose trace ends freezes in place. Its batch lane persists (so
@@ -340,7 +378,13 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     the last allocation as a fixed warm start; ``solve_fleet_step`` returns
     frozen rows untouched (``FleetBatch.active``), no ``apply_counts`` is
     recorded, and its history stops at exactly ``T_b`` steps — identical to
-    a sequential replay of that tenant alone."""
+    a sequential replay of that tenant alone.
+
+    Telemetry (``repro.obs``): each tick is a ``replay/tick`` span wrapping
+    per-bucket ``replay/stack`` / ``replay/solve`` / ``replay/round`` spans;
+    solve spans carry a compile key per (program, bucket shape) so first
+    calls are tagged as compile time. Spans only measure — allocations are
+    bit-identical with telemetry on or off (test-enforced)."""
     assert warm_start in ("counts", "relaxed"), warm_start
     assert len(tenants) > 0, "empty fleet"
     traces = [np.asarray(spec.trace, np.float64) for spec in tenants]
@@ -354,53 +398,86 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     # per-tenant problem of the CURRENT tick; frozen tenants keep their last
     # one so stacked shapes stay put (its solve result is discarded)
     probs: List = [None] * len(tenants)
+    solver_traces: List[List] = [[] for _ in tenants]
 
     for t in range(int(T_len.max())):
-        for b, ctl in enumerate(ctls):
-            if t < T_len[b]:
-                probs[b] = ctl.make_problem(traces[b][t])
-        for key, idx in sorted(groups.items()):
-            n_pad, m_pad, p_pad, n_starts = key
-            active = T_len[idx] > t                     # (Bk,) liveness
-            if not active.any():
-                continue        # whole bucket expired: nothing left to solve
-            batch = stack_problems([probs[b] for b in idx],
-                                   n_max=n_pad, m_max=m_pad, p_max=p_pad,
-                                   active=active)
-            if t == 0:
-                # cold start: one batched multistart solve for the bucket,
-                # per-tenant starts drawn at true shape (seed 0, as the
-                # sequential controller's multistart_solve does). Every
-                # tenant is live at t=0 (traces are non-empty).
-                starts = make_fleet_starts(batch, n_starts, seed=0)
-                res = solve_fleet(batch, starts=starts, hot_loop=hot_loop)
-                X_int = np.asarray(res.x_int, np.float64)
-                lane_iters = np.zeros(len(idx), np.int64)
-            else:
-                X_cur = embed_solutions(
-                    batch, [ctls[b].x_current for b in idx])
-                X_init = None
-                if warm_start == "relaxed" and x_rel_prev[idx[0]] is not None:
-                    X_init = embed_solutions(
-                        batch, [x_rel_prev[b] for b in idx])
-                delta = np.asarray([tenants[b].delta_max for b in idx],
-                                   np.float32)
-                res = solve_fleet_step(batch, X_cur, delta, x_init=X_init,
-                                       steps=solver_steps)
-                X_int = np.asarray(res.x_int, np.float64)
-                lane_iters = np.asarray(res.iters, np.int64)
-            # only pay the relaxed-solution transfer when it will be used
-            X_rel = np.asarray(res.x) if warm_start == "relaxed" else None
-            for i, b in enumerate(idx):
-                if not active[i]:
-                    continue         # frozen: no churn, no metrics, no state
-                n_true = int(batch.n_true[i])
-                ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
-                                     replanned=(t == 0),
-                                     solver_iters=int(lane_iters[i]))
-                if X_rel is not None:
-                    x_rel_prev[b] = X_rel[i, :n_true]
-    return [ctl.history for ctl in ctls]
+        # ticks 0 (cold program) and 1 (warm program) each trigger an XLA
+        # compile; min(t, 1) makes exactly those two first-seen (tagged
+        # phase="compile"), so tick percentiles reflect steady state
+        with span("replay/tick", cat="replay", tick=t, engine="batched",
+                  controller="myopic",
+                  compile_key=("tick", "batched", "myopic", min(t, 1))):
+            tick_iters = 0
+            for b, ctl in enumerate(ctls):
+                if t < T_len[b]:
+                    probs[b] = ctl.make_problem(traces[b][t])
+            for key, idx in sorted(groups.items()):
+                n_pad, m_pad, p_pad, n_starts = key
+                active = T_len[idx] > t                 # (Bk,) liveness
+                if not active.any():
+                    continue    # whole bucket expired: nothing left to solve
+                with span("replay/stack", cat="replay", bucket=str(key)):
+                    batch = stack_problems([probs[b] for b in idx],
+                                           n_max=n_pad, m_max=m_pad,
+                                           p_max=p_pad, active=active)
+                if t == 0:
+                    # cold start: one batched multistart solve for the
+                    # bucket, per-tenant starts drawn at true shape (seed 0,
+                    # as the sequential controller's multistart_solve does).
+                    # Every tenant is live at t=0 (traces are non-empty).
+                    with span("replay/solve", cat="replay", bucket=str(key),
+                              compile_key=("solve_fleet", key, len(idx)),
+                              cold=True) as sp:
+                        starts = make_fleet_starts(batch, n_starts, seed=0)
+                        res = solve_fleet(batch, starts=starts,
+                                          hot_loop=hot_loop)
+                        sp.fence(res.x_int)
+                    X_int = np.asarray(res.x_int, np.float64)
+                    lane_iters = np.zeros(len(idx), np.int64)
+                    tick_iters += int(res.iters)
+                else:
+                    X_cur = embed_solutions(
+                        batch, [ctls[b].x_current for b in idx])
+                    X_init = None
+                    if (warm_start == "relaxed"
+                            and x_rel_prev[idx[0]] is not None):
+                        X_init = embed_solutions(
+                            batch, [x_rel_prev[b] for b in idx])
+                    delta = np.asarray([tenants[b].delta_max for b in idx],
+                                       np.float32)
+                    with span("replay/solve", cat="replay", bucket=str(key),
+                              compile_key=("solve_fleet_step", key, len(idx),
+                                           capture_solver_trace)) as sp:
+                        res = solve_fleet_step(
+                            batch, X_cur, delta, x_init=X_init,
+                            steps=solver_steps,
+                            capture_trace=capture_solver_trace)
+                        sp.fence(res.x_int)
+                    X_int = np.asarray(res.x_int, np.float64)
+                    lane_iters = np.asarray(res.iters, np.int64)
+                    tick_iters += int(lane_iters.sum())
+                # only pay the relaxed-solution transfer when it will be used
+                X_rel = np.asarray(res.x) if warm_start == "relaxed" else None
+                # cold-start FleetSolveResult has no trace field; warm ticks
+                # carry one only when capture_solver_trace asked for it
+                batch_tr = getattr(res, "trace", None)
+                lane_tr = (None if batch_tr is None
+                           else [np.asarray(f) for f in batch_tr])
+                with span("replay/round", cat="replay", bucket=str(key)):
+                    for i, b in enumerate(idx):
+                        if not active[i]:
+                            continue  # frozen: no churn, no metrics, no state
+                        n_true = int(batch.n_true[i])
+                        ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
+                                             replanned=(t == 0),
+                                             solver_iters=int(lane_iters[i]))
+                        if lane_tr is not None:
+                            solver_traces[b].append(
+                                type(batch_tr)(*(f[i] for f in lane_tr)))
+                        if X_rel is not None:
+                            x_rel_prev[b] = X_rel[i, :n_true]
+            gauge("replay/solver_iters", tick_iters)
+    return [ctl.history for ctl in ctls], solver_traces
 
 
 def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
@@ -409,11 +486,13 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                               coupling_w: float, coupling_eps: float,
                               solver_steps: int, solver_config=None,
                               cold_start: str = "myopic",
-                              hot_loop: Optional[str] = None
-                              ) -> List[List[ControllerStep]]:
+                              hot_loop: Optional[str] = None,
+                              capture_solver_trace: bool = False):
     """Batched receding-horizon replay: one ``solve_horizon_fleet_step``
     call per shape bucket per warm tick, the fleet analogue of
-    ``ModelPredictiveController.step``.
+    ``ModelPredictiveController.step``. Returns ``(histories,
+    solver_traces)`` exactly like :func:`_replay_fleet_batched`, and emits
+    the same ``replay/*`` telemetry spans.
 
     Mirrors :func:`_replay_fleet_batched` exactly where the two overlap:
     the same (bucket, n_starts) grouping, the same ``solve_fleet`` cold
@@ -454,8 +533,14 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
     # each live tenant's CURRENT window of per-tick problems; frozen tenants
     # keep their last one so stacked shapes stay put (results discarded)
     windows: List = [None] * len(tenants)
+    solver_traces: List[List] = [[] for _ in tenants]
 
     for t in range(int(T_len.max())):
+      # same compile-tick tagging rationale as the myopic engine above
+      with span("replay/tick", cat="replay", tick=t, engine="batched",
+                controller="mpc",
+                compile_key=("tick", "batched", "mpc", min(t, 1))):
+        tick_iters = 0
         for b, ctl in enumerate(ctls):
             if t < T_len[b]:
                 windows[b] = ctl.window_problems(
@@ -472,38 +557,48 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                 # are re-ranked by each tenant's whole-window objective at
                 # its true shape (matching the sequential controller's
                 # cold_window_counts selection exactly)
-                batch = stack_problems([windows[b][0] for b in idx],
-                                       n_max=n_pad, m_max=m_pad, p_max=p_pad,
-                                       active=active)
-                starts = make_fleet_starts(batch, n_starts, seed=0)
-                res = solve_fleet(batch, starts=starts, hot_loop=hot_loop)
+                with span("replay/stack", cat="replay", bucket=str(key)):
+                    batch = stack_problems([windows[b][0] for b in idx],
+                                           n_max=n_pad, m_max=m_pad,
+                                           p_max=p_pad, active=active)
+                with span("replay/solve", cat="replay", bucket=str(key),
+                          compile_key=("solve_fleet", key, len(idx)),
+                          cold=True) as sp:
+                    starts = make_fleet_starts(batch, n_starts, seed=0)
+                    res = solve_fleet(batch, starts=starts, hot_loop=hot_loop)
+                    sp.fence(res.x_int)
+                tick_iters += int(res.iters)
                 X_int = np.asarray(res.x_int, np.float64)
                 cand_all = np.asarray(res.x_int_all, np.float64)
                 feas_all = np.asarray(res.feas_int_all, bool)
-                for i, b in enumerate(idx):
-                    n_true = int(batch.n_true[i])
-                    if cold_start == "window":
-                        cands = cand_all[i, :, :n_true]
-                        scores = window_candidate_scores(windows[b], cands)
-                        x = cands[select_window_candidate(scores,
-                                                          feas_all[i])]
-                    else:
-                        x = X_int[i, :n_true]
-                    ctls[b].apply_counts(traces[b][t], x, replanned=True)
-                    ctls[b].plan = np.tile(x, (horizon, 1))
+                with span("replay/round", cat="replay", bucket=str(key)):
+                    for i, b in enumerate(idx):
+                        n_true = int(batch.n_true[i])
+                        if cold_start == "window":
+                            cands = cand_all[i, :, :n_true]
+                            scores = window_candidate_scores(windows[b],
+                                                             cands)
+                            x = cands[select_window_candidate(scores,
+                                                              feas_all[i])]
+                        else:
+                            x = X_int[i, :n_true]
+                        ctls[b].apply_counts(traces[b][t], x, replanned=True)
+                        ctls[b].plan = np.tile(x, (horizon, 1))
                 continue
             # warm tick: stack each tenant's H-tick window at the bucket's
             # pad dims, then one vmapped horizon solve for the whole bucket
-            stacked = [stack_problems(windows[b], n_max=n_pad, m_max=m_pad,
-                                      p_max=p_pad).problem for b in idx]
-            prob_bh = jax.tree_util.tree_map(
-                lambda *leaves: jnp.stack(leaves), *stacked)
-            X_cur = np.zeros((len(idx), n_pad), np.float32)
-            X_init = np.zeros((len(idx), horizon, n_pad), np.float32)
-            for i, b in enumerate(idx):
-                n_true = ctls[b].catalog.n
-                X_cur[i, :n_true] = ctls[b].x_current
-                X_init[i, :, :n_true] = ctls[b].shifted_plan()
+            with span("replay/stack", cat="replay", bucket=str(key)):
+                stacked = [stack_problems(windows[b], n_max=n_pad,
+                                          m_max=m_pad, p_max=p_pad).problem
+                           for b in idx]
+                prob_bh = jax.tree_util.tree_map(
+                    lambda *leaves: jnp.stack(leaves), *stacked)
+                X_cur = np.zeros((len(idx), n_pad), np.float32)
+                X_init = np.zeros((len(idx), horizon, n_pad), np.float32)
+                for i, b in enumerate(idx):
+                    n_true = ctls[b].catalog.n
+                    X_cur[i, :n_true] = ctls[b].x_current
+                    X_init[i, :, :n_true] = ctls[b].shifted_plan()
             delta = np.asarray([tenants[b].delta_max for b in idx],
                                np.float32)
             hp = HorizonProblem(
@@ -512,21 +607,34 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                 coupling_eps=jnp.asarray(coupling_eps, jnp.float32))
             # every controller in the replay shares one resolved config
             # (built in __post_init__ when solver_config was None)
-            res = solve_horizon_fleet_step(hp, X_cur, delta, x_init=X_init,
-                                           active=active,
-                                           cfg=ctls[idx[0]].solver_config)
+            with span("replay/solve", cat="replay", bucket=str(key),
+                      compile_key=("solve_horizon_fleet_step", key, len(idx),
+                                   horizon, capture_solver_trace)) as sp:
+                res = solve_horizon_fleet_step(
+                    hp, X_cur, delta, x_init=X_init, active=active,
+                    cfg=ctls[idx[0]].solver_config,
+                    capture_trace=capture_solver_trace)
+                sp.fence(res.x_int)
             X_int = np.asarray(res.x_int, np.float64)
             plans = np.asarray(res.plan, np.float64)
             lane_iters = np.asarray(res.iters, np.int64)
-            for i, b in enumerate(idx):
-                if not active[i]:
-                    continue
-                n_true = ctls[b].catalog.n
-                ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
-                                     replanned=False,
-                                     solver_iters=int(lane_iters[i]))
-                ctls[b].plan = plans[i, :, :n_true]
-    return [ctl.history for ctl in ctls]
+            tick_iters += int(lane_iters.sum())
+            lane_tr = (None if res.trace is None
+                       else [np.asarray(f) for f in res.trace])
+            with span("replay/round", cat="replay", bucket=str(key)):
+                for i, b in enumerate(idx):
+                    if not active[i]:
+                        continue
+                    n_true = ctls[b].catalog.n
+                    ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
+                                         replanned=False,
+                                         solver_iters=int(lane_iters[i]))
+                    ctls[b].plan = plans[i, :, :n_true]
+                    if lane_tr is not None:
+                        solver_traces[b].append(
+                            type(res.trace)(*(f[i] for f in lane_tr)))
+        gauge("replay/solver_iters", tick_iters)
+    return [ctl.history for ctl in ctls], solver_traces
 
 
 def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
@@ -546,7 +654,8 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                  ca_mode: str = "wave",
                  warm_start: str = "counts",
                  solver_steps: int = 600,
-                 hot_loop: Optional[str] = None) -> FleetReplayResult:
+                 hot_loop: Optional[str] = None,
+                 capture_solver_trace: bool = False) -> FleetReplayResult:
     """Replay every tenant; returns per-tenant histories + fleet aggregates.
 
     ``replay_mode`` selects the optimizer engine:
@@ -604,7 +713,20 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     tick through one :func:`simulate_cluster_autoscaler_batch` call per
     distinct catalog; ``"sequential"`` loops
     :func:`simulate_cluster_autoscaler` per tenant — the oracle the
-    vectorized engine must match tick-for-tick."""
+    vectorized engine must match tick-for-tick.
+
+    ``capture_solver_trace=True`` records every warm tick's PGD convergence
+    rows and returns them as ``FleetReplayResult.solver_traces`` (both
+    engines, both controllers; MPC requires the adaptive engine — the fixed
+    loop has no ladder to trace). Traced solves compute bit-identical
+    allocations; they are merely separately-compiled programs that also
+    write the per-iteration log.
+
+    Run a replay inside ``with repro.obs.telemetry() as rec:`` to collect
+    per-tick/per-phase timing spans, then aggregate them with
+    ``repro.obs.report.ReplayReport.from_recorder(rec)``. Without a
+    recorder installed every instrumentation point is a no-op, and either
+    way allocations, churn and metrics are bit-identical (test-enforced)."""
     if len(tenants) == 0:
         raise ValueError("replay_fleet needs at least one TenantSpec; got an "
                          "empty tenant list")
@@ -632,23 +754,21 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
         if replay_mode == "sequential":
             ctls = [_make_mpc_controller(catalog, spec, **mpc_kwargs)
                     for spec in tenants]
-            histories = [[ctl.step(demand)
-                          for demand in np.asarray(spec.trace, np.float64)]
-                         for ctl, spec in zip(ctls, tenants)]
+            histories, traces_out = _replay_sequential(
+                ctls, tenants, "mpc", capture_solver_trace)
         else:
-            histories = _replay_fleet_batched_mpc(catalog, tenants,
-                                                  hot_loop=hot_loop,
-                                                  **mpc_kwargs)
+            histories, traces_out = _replay_fleet_batched_mpc(
+                catalog, tenants, hot_loop=hot_loop,
+                capture_solver_trace=capture_solver_trace, **mpc_kwargs)
     elif replay_mode == "sequential":
         ctls = [_make_controller(catalog, spec) for spec in tenants]
-        histories = [[ctl.step(demand)
-                      for demand in np.asarray(spec.trace, np.float64)]
-                     for ctl, spec in zip(ctls, tenants)]
+        histories, traces_out = _replay_sequential(
+            ctls, tenants, "myopic", capture_solver_trace)
     else:
-        histories = _replay_fleet_batched(catalog, tenants,
-                                          warm_start=warm_start,
-                                          solver_steps=solver_steps,
-                                          hot_loop=hot_loop)
+        histories, traces_out = _replay_fleet_batched(
+            catalog, tenants, warm_start=warm_start,
+            solver_steps=solver_steps, hot_loop=hot_loop,
+            capture_solver_trace=capture_solver_trace)
     if not run_ca_baseline:
         cas = [None] * len(tenants)
     elif ca_engine == "vectorized":
@@ -657,7 +777,7 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
         cas = [_ca_baseline(catalog, spec, ca_expander, ca_mode)
                for spec in tenants]
     oracle_metrics = None
-    if run_oracle_baseline:
+    if run_oracle_baseline:  # the oracle twin is a baseline: never traced
         oracle = replay_fleet(catalog, tenants, replay_mode=replay_mode,
                               controller="mpc", horizon=horizon,
                               forecaster="oracle", coupling_w=coupling_w,
@@ -667,11 +787,15 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                               run_ca_baseline=False, warm_start=warm_start,
                               solver_steps=solver_steps, hot_loop=hot_loop)
         oracle_metrics = [r.metrics for r in oracle.tenants]
-    replays = [_assemble_replay(spec, steps, ca)
-               for spec, steps, ca in zip(tenants, histories, cas)]
-    metrics = FleetReplayMetrics(
-        tenants=[r.metrics for r in replays],
-        baseline=([r.ca_metrics for r in replays] if run_ca_baseline else None),
-        replay_mode=replay_mode, controller=controller,
-        oracle=oracle_metrics)
-    return FleetReplayResult(tenants=replays, metrics=metrics)
+    with span("replay/metrics", cat="replay"):
+        replays = [_assemble_replay(spec, steps, ca)
+                   for spec, steps, ca in zip(tenants, histories, cas)]
+        metrics = FleetReplayMetrics(
+            tenants=[r.metrics for r in replays],
+            baseline=([r.ca_metrics for r in replays]
+                      if run_ca_baseline else None),
+            replay_mode=replay_mode, controller=controller,
+            oracle=oracle_metrics)
+    return FleetReplayResult(
+        tenants=replays, metrics=metrics,
+        solver_traces=traces_out if capture_solver_trace else None)

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.incremental import solve_incremental_info
 from repro.core.multistart import make_starts
+from repro.core.pgd import PGDTrace
 from repro.core.objective import is_feasible, objective
 from repro.core.problem import AllocationProblem
 from repro.core.rounding import round_and_polish
@@ -415,13 +416,19 @@ def solve_fleet_bucketed(
 
 
 class FleetStepResult(NamedTuple):
-    """One batched incremental tick over the whole fleet."""
+    """One batched incremental tick over the whole fleet.
+
+    ``trace`` is None unless the tick ran with ``capture_trace=True``, in
+    which case it is a batched ``core.pgd.PGDTrace`` whose leaves carry a
+    leading (B,) lane axis — per-lane convergence rows, fixed-size
+    ``steps`` long (see ``repro.obs.solver_trace``)."""
 
     x: jnp.ndarray         # (B, n) relaxed incremental solution
     x_int: jnp.ndarray     # (B, n) rounded allocation actually deployed
     fun_int: jnp.ndarray   # (B,) objective at x_int
     feasible: jnp.ndarray  # (B,) integer-solution feasibility
     iters: jnp.ndarray     # (B,) adaptive-PGD iterations per lane
+    trace: Optional[PGDTrace] = None  # (B, steps) per-lane convergence rows
 
 
 @partial(jax.jit, static_argnames=("steps",))
@@ -443,6 +450,27 @@ def _step_fleet_impl(prob: AllocationProblem, x_current: jnp.ndarray,
                            iters=jnp.where(active, iters, 0))
 
 
+@partial(jax.jit, static_argnames=("steps",))
+def _step_fleet_traced_impl(prob: AllocationProblem, x_current: jnp.ndarray,
+                            delta_max: jnp.ndarray, x_init: jnp.ndarray,
+                            active: jnp.ndarray, steps: int
+                            ) -> FleetStepResult:
+    """Traced twin of ``_step_fleet_impl``: same solves, plus per-lane
+    PGDTrace capture (the trace is extra while_loop state, not extra math,
+    so ``(x, x_int, iters)`` match the untraced program)."""
+    x_rel, iters, trace = jax.vmap(
+        lambda pb, xc, dm, xi: solve_incremental_info(
+            pb, xc, dm, x_init=xi, steps=steps, capture_trace=True)
+    )(prob, x_current, delta_max, x_init)
+    x_int = jax.vmap(round_and_polish)(prob, x_rel)
+    x_rel = jnp.where(active[:, None], x_rel, x_current)
+    x_int = jnp.where(active[:, None], x_int, x_current)
+    f_int = jax.vmap(objective)(prob, x_int)
+    feas = jax.vmap(lambda pb, xi: is_feasible(pb, xi, 1e-3))(prob, x_int)
+    return FleetStepResult(x=x_rel, x_int=x_int, fun_int=f_int, feasible=feas,
+                           iters=jnp.where(active, iters, 0), trace=trace)
+
+
 def solve_fleet_step(
     fleet: Union[FleetBatch, AllocationProblem],
     x_current: jnp.ndarray,
@@ -450,6 +478,7 @@ def solve_fleet_step(
     x_init: Optional[jnp.ndarray] = None,
     steps: int = 600,
     active: Optional[np.ndarray] = None,
+    capture_trace: bool = False,
 ) -> FleetStepResult:
     """One incremental-adoption tick for EVERY tenant in one jitted program.
 
@@ -472,7 +501,11 @@ def solve_fleet_step(
     rows carry the last allocation forward unchanged. Defaults to the
     batch's own ``FleetBatch.active`` mask, else all-live. Live lanes are
     unaffected — vmap keeps lanes independent, so results on live tenants
-    are identical whether or not frozen rows share the batch."""
+    are identical whether or not frozen rows share the batch.
+
+    ``capture_trace=True`` additionally returns per-lane PGD convergence
+    rows in ``FleetStepResult.trace`` (a separately-compiled program whose
+    solves agree with the untraced one — test-enforced)."""
     prob = fleet.problem if isinstance(fleet, FleetBatch) else fleet
     if active is None and isinstance(fleet, FleetBatch):
         active = fleet.active_mask
@@ -482,5 +515,5 @@ def solve_fleet_step(
     x_init = x_current if x_init is None else jnp.asarray(x_init, jnp.float32)
     active = (jnp.ones(B, bool) if active is None
               else jnp.asarray(np.asarray(active, bool)))
-    return _step_fleet_impl(prob, x_current, delta_max, x_init, active,
-                            int(steps))
+    impl = _step_fleet_traced_impl if capture_trace else _step_fleet_impl
+    return impl(prob, x_current, delta_max, x_init, active, int(steps))

@@ -56,6 +56,7 @@ from repro.core.controller import (ControllerStep,
                                    InfrastructureOptimizationController)
 from repro.core.multistart import multistart_solve
 from repro.core.problem import AllocationProblem
+from repro.obs.telemetry import span
 
 from .forecast import Forecaster, LastValueForecaster
 from .problem import (DEFAULT_COUPLING_EPS, DEFAULT_COUPLING_W,
@@ -206,19 +207,31 @@ class ModelPredictiveController(InfrastructureOptimizationController):
         plan (and the engine's iteration count on ``_last_solver_iters``),
         and return the committed tick's rounded counts — rounded
         plan-respectingly when H > 1 (``round_committed``), so the polish
-        scale-down cannot strip pre-provisioned capacity."""
+        scale-down cannot strip pre-provisioned capacity. With the inherited
+        ``capture_solver_trace`` flag the engine's convergence rows are
+        appended to ``solver_traces`` (adaptive engine only)."""
         hp = expand_problems(probs, coupling_w=self.coupling_w,
                              coupling_eps=self.coupling_eps)
-        res = solve_horizon_info(
-            hp, jnp.asarray(self.x_current, jnp.float32),
-            jnp.asarray(self.delta_max, jnp.float32),
-            x_init=jnp.asarray(self.shifted_plan(), jnp.float32),
-            cfg=self.solver_config)
+        with span("mpc/plan", cat="mpc",
+                  compile_key=("solve_horizon", self.horizon, self.catalog.n,
+                               self.solver_config,
+                               self.capture_solver_trace)) as sp:
+            res = solve_horizon_info(
+                hp, jnp.asarray(self.x_current, jnp.float32),
+                jnp.asarray(self.delta_max, jnp.float32),
+                x_init=jnp.asarray(self.shifted_plan(), jnp.float32),
+                cfg=self.solver_config,
+                capture_trace=self.capture_solver_trace)
+            sp.fence(res.plan)
+        if res.trace is not None:
+            self.solver_traces.append(
+                type(res.trace)(*(np.asarray(f) for f in res.trace)))
         self.plan = np.asarray(res.plan, np.float64)
         self._last_solver_iters = int(res.iters)
-        return np.asarray(round_committed(probs[0], res.plan[0],
-                                          respect_plan=(self.horizon > 1)),
-                          np.float64)
+        with span("mpc/commit", cat="mpc"):
+            return np.asarray(round_committed(probs[0], res.plan[0],
+                                              respect_plan=(self.horizon > 1)),
+                              np.float64)
 
     def step(self, demand: np.ndarray,
              x_init: Optional[np.ndarray] = None) -> ControllerStep:
@@ -227,8 +240,10 @@ class ModelPredictiveController(InfrastructureOptimizationController):
         ``x_init`` is accepted for interface parity with the myopic
         controller but ignored — the MPC warm start is the shifted plan."""
         demand = np.asarray(demand, np.float64)
-        demands = self.window_demands(demand)
-        probs = self.window_problems(demands)
+        with span("mpc/forecast", cat="mpc"):
+            demands = self.window_demands(demand)
+        with span("mpc/window", cat="mpc"):
+            probs = self.window_problems(demands)
         if self.x_current is None:
             # cold: no churn to couple — the myopic multistart candidates,
             # ranked by tick-0 merit ("myopic", identical at every H and to

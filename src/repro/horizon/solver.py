@@ -81,7 +81,8 @@ import numpy as np
 import repro.core.objective as obj
 from repro.core.incremental import project_incremental
 from repro.core.objective import is_feasible, objective
-from repro.core.pgd import PGDConfig, pgd_minimize
+from repro.core.pgd import (PGDConfig, PGDTrace, pgd_minimize,
+                            pgd_minimize_traced)
 from repro.core.rounding import round_and_polish
 
 from .problem import (HorizonProblem, churn_bound_grad, churn_bound_penalty,
@@ -141,10 +142,15 @@ class HorizonSolverConfig(NamedTuple):
 
 
 class HorizonSolveResult(NamedTuple):
-    """One relaxed horizon solve: the plan plus the iterations it took."""
+    """One relaxed horizon solve: the plan plus the iterations it took.
+
+    ``trace`` is None unless the solve ran with ``capture_trace=True``
+    (adaptive engine only): the engine's per-iteration ``core.pgd.PGDTrace``
+    with ``cfg.steps`` fixed-size rows (see ``repro.obs.solver_trace``)."""
 
     plan: jnp.ndarray       # (H, n) relaxed time-expanded solution
     iters: jnp.ndarray      # PGD iterations actually taken (== steps, fixed)
+    trace: Optional[PGDTrace] = None  # (steps,) convergence rows (opt-in)
 
 
 def _tick_lipschitz(prob) -> jnp.ndarray:
@@ -266,17 +272,24 @@ def _solve_horizon_fixed(hp: HorizonProblem, x_current: jnp.ndarray,
 
 def _solve_horizon_body(hp: HorizonProblem, x_current: jnp.ndarray,
                         delta_max: jnp.ndarray, x_init: jnp.ndarray,
-                        cfg: HorizonSolverConfig):
+                        cfg: HorizonSolverConfig, trace: bool = False):
     """The (un-jitted) solve of one plan X (H, n), dispatching on the
     configured engine — shared by the single-tenant and the vmapped fleet
-    entry points. Returns ``(X, iters)``."""
+    entry points. Returns ``(X, iters)``, or ``(X, iters, PGDTrace)`` with
+    ``trace=True`` (adaptive engine only — the fixed loop has no ladder to
+    record; callers reject that combination before tracing)."""
     if cfg.solver == "fixed":
+        assert not trace, "solver='fixed' has no convergence trace"
         X = _solve_horizon_fixed(hp, x_current, delta_max, x_init, cfg.steps,
                                  cfg.step_scale, cfg.penalty_w,
                                  cfg.delta_penalty_w)
         return X, jnp.asarray(cfg.steps)
     value, grad, proj = _horizon_merit_fns(hp, x_current, delta_max,
                                            cfg.penalty_w, cfg.delta_penalty_w)
+    if trace:
+        X, _, iters, tr = pgd_minimize_traced(value, grad, proj, x_init,
+                                              cfg.pgd())
+        return X, iters, tr
     X, _, iters = pgd_minimize(value, grad, proj, x_init, cfg.pgd())
     return X, iters
 
@@ -285,6 +298,14 @@ def _solve_horizon_body(hp: HorizonProblem, x_current: jnp.ndarray,
 def _solve_horizon_impl(hp, x_current, delta_max, x_init,
                         cfg: HorizonSolverConfig):
     return _solve_horizon_body(hp, x_current, delta_max, x_init, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _solve_horizon_traced_impl(hp, x_current, delta_max, x_init,
+                               cfg: HorizonSolverConfig):
+    """Traced twin of ``_solve_horizon_impl`` (adaptive engine only)."""
+    return _solve_horizon_body(hp, x_current, delta_max, x_init, cfg,
+                               trace=True)
 
 
 def _resolve_cfg(cfg: Optional[HorizonSolverConfig], steps: Optional[int],
@@ -313,19 +334,29 @@ def solve_horizon_info(hp: HorizonProblem, x_current, delta_max,
                        step_scale: Optional[float] = None,
                        penalty_w: Optional[float] = None,
                        delta_penalty_w: Optional[float] = None,
-                       cfg: Optional[HorizonSolverConfig] = None
-                       ) -> HorizonSolveResult:
+                       cfg: Optional[HorizonSolverConfig] = None,
+                       capture_trace: bool = False) -> HorizonSolveResult:
     """:func:`solve_horizon` variant returning the plan AND the iteration
     count the engine actually spent (== ``steps`` for the fixed engine; the
     early-stopping win for the adaptive one — what the benchmark's
-    ``solver_iters`` cells aggregate)."""
+    ``solver_iters`` cells aggregate). ``capture_trace=True`` additionally
+    fills ``HorizonSolveResult.trace`` with the engine's per-iteration
+    convergence rows; the fixed engine has no ladder to trace, so that
+    combination raises ``ValueError``."""
     cfg = _resolve_cfg(cfg, steps, step_scale, penalty_w, delta_penalty_w)
+    if capture_trace and cfg.solver == "fixed":
+        raise ValueError("capture_trace requires the adaptive engine; "
+                         "solver='fixed' records no convergence trace")
     x_current = jnp.asarray(x_current, jnp.float32)
     delta_max = jnp.asarray(delta_max, jnp.float32)
     if x_init is None:
         x_init = jnp.tile(x_current[None, :], (hp.H, 1))
-    X, iters = _solve_horizon_impl(hp, x_current, delta_max,
-                                   jnp.asarray(x_init, jnp.float32), cfg)
+    x_init = jnp.asarray(x_init, jnp.float32)
+    if capture_trace:
+        X, iters, tr = _solve_horizon_traced_impl(hp, x_current, delta_max,
+                                                  x_init, cfg)
+        return HorizonSolveResult(plan=X, iters=iters, trace=tr)
+    X, iters = _solve_horizon_impl(hp, x_current, delta_max, x_init, cfg)
     return HorizonSolveResult(plan=X, iters=iters)
 
 
@@ -378,27 +409,33 @@ def round_committed(p0, x_rel0: jnp.ndarray,
 
 
 class HorizonFleetStepResult(NamedTuple):
-    """One batched receding-horizon tick over a fleet of lookahead windows."""
+    """One batched receding-horizon tick over a fleet of lookahead windows.
+
+    ``trace`` is None unless the tick ran with ``capture_trace=True``:
+    per-lane ``core.pgd.PGDTrace`` rows with a leading (B,) axis."""
 
     plan: jnp.ndarray       # (B, H, n) relaxed plans (frozen: x_current tiled)
     x_int: jnp.ndarray      # (B, n) committed (rounded) tick-0 allocation
     fun_int: jnp.ndarray    # (B,) tick-0 objective at x_int
     feasible: jnp.ndarray   # (B,) tick-0 integer feasibility
     iters: jnp.ndarray      # (B,) PGD iterations per lane (frozen lanes: 0)
+    trace: Optional[PGDTrace] = None  # (B, steps) convergence rows (opt-in)
 
 
-@partial(jax.jit, static_argnames=("cfg", "respect_plan"))
-def _horizon_fleet_step_impl(hp: HorizonProblem, x_current: jnp.ndarray,
+def _horizon_fleet_step_body(hp: HorizonProblem, x_current: jnp.ndarray,
                              delta_max: jnp.ndarray, x_init: jnp.ndarray,
                              active: jnp.ndarray, cfg: HorizonSolverConfig,
-                             respect_plan: bool) -> HorizonFleetStepResult:
+                             respect_plan: bool, trace: bool
+                             ) -> HorizonFleetStepResult:
     # vmap the SAME body over the (B,) lane axis; vmap preserves per-lane op
     # structure, so each lane matches a sequential solve_horizon call
-    plan, iters = jax.vmap(
+    solved = jax.vmap(
         lambda pb, xc, dm, xi: _solve_horizon_body(
             HorizonProblem(pb, hp.coupling_w, hp.coupling_eps), xc, dm, xi,
-            cfg)
+            cfg, trace=trace)
     )(hp.problem, x_current, delta_max, x_init)
+    plan, iters = solved[0], solved[1]
+    tr = solved[2] if trace else None
     p0 = jax.tree_util.tree_map(lambda a: a[:, 0], hp.problem)   # (B, ...)
     x_int = jax.vmap(lambda pb, xr: round_committed(pb, xr, respect_plan)
                      )(p0, plan[:, 0])
@@ -410,7 +447,27 @@ def _horizon_fleet_step_impl(hp: HorizonProblem, x_current: jnp.ndarray,
     feas = jax.vmap(lambda pb, xi: is_feasible(pb, xi, 1e-3))(p0, x_int)
     return HorizonFleetStepResult(plan=plan, x_int=x_int, fun_int=f_int,
                                   feasible=feas,
-                                  iters=jnp.where(active, iters, 0))
+                                  iters=jnp.where(active, iters, 0),
+                                  trace=tr)
+
+
+@partial(jax.jit, static_argnames=("cfg", "respect_plan"))
+def _horizon_fleet_step_impl(hp: HorizonProblem, x_current: jnp.ndarray,
+                             delta_max: jnp.ndarray, x_init: jnp.ndarray,
+                             active: jnp.ndarray, cfg: HorizonSolverConfig,
+                             respect_plan: bool) -> HorizonFleetStepResult:
+    return _horizon_fleet_step_body(hp, x_current, delta_max, x_init, active,
+                                    cfg, respect_plan, trace=False)
+
+
+@partial(jax.jit, static_argnames=("cfg", "respect_plan"))
+def _horizon_fleet_step_traced_impl(hp: HorizonProblem, x_current, delta_max,
+                                    x_init, active, cfg: HorizonSolverConfig,
+                                    respect_plan: bool
+                                    ) -> HorizonFleetStepResult:
+    """Traced twin of ``_horizon_fleet_step_impl`` (adaptive engine only)."""
+    return _horizon_fleet_step_body(hp, x_current, delta_max, x_init, active,
+                                    cfg, respect_plan, trace=True)
 
 
 def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
@@ -420,7 +477,8 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
                              steps: Optional[int] = None,
                              penalty_w: Optional[float] = None,
                              delta_penalty_w: Optional[float] = None,
-                             cfg: Optional[HorizonSolverConfig] = None
+                             cfg: Optional[HorizonSolverConfig] = None,
+                             capture_trace: bool = False
                              ) -> HorizonFleetStepResult:
     """One receding-horizon tick for EVERY tenant lane in one jitted program.
 
@@ -436,8 +494,15 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
     :func:`solve_horizon` (the legacy keyword knobs override the default
     config when ``cfg`` is omitted). vmap keeps lanes independent, so live
     lanes match sequential :func:`solve_horizon` + ``round_and_polish``
-    calls exactly (CPU, test-enforced)."""
+    calls exactly (CPU, test-enforced).
+
+    ``capture_trace=True`` additionally returns per-lane PGD convergence
+    rows in ``HorizonFleetStepResult.trace`` (adaptive engine only —
+    ``solver='fixed'`` raises ``ValueError``)."""
     cfg = _resolve_cfg(cfg, steps, None, penalty_w, delta_penalty_w)
+    if capture_trace and cfg.solver == "fixed":
+        raise ValueError("capture_trace requires the adaptive engine; "
+                         "solver='fixed' records no convergence trace")
     B = hp.problem.c.shape[0]
     H = hp.problem.d.shape[1]
     x_current = jnp.asarray(x_current, jnp.float32)
@@ -446,6 +511,7 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
         x_init = jnp.tile(x_current[:, None, :], (1, H, 1))
     active = (jnp.ones(B, bool) if active is None
               else jnp.asarray(np.asarray(active, bool)))
-    return _horizon_fleet_step_impl(hp, x_current, delta_max,
-                                    jnp.asarray(x_init, jnp.float32), active,
-                                    cfg, respect_plan=(H > 1))
+    impl = (_horizon_fleet_step_traced_impl if capture_trace
+            else _horizon_fleet_step_impl)
+    return impl(hp, x_current, delta_max, jnp.asarray(x_init, jnp.float32),
+                active, cfg, respect_plan=(H > 1))

@@ -1,0 +1,38 @@
+"""repro.obs — JIT-aware observability: spans, solver traces, reports.
+
+The layer every perf claim in this repo must be able to back up:
+
+* :mod:`repro.obs.telemetry` — contextvar-scoped nested timing spans,
+  counters and gauges; zero-overhead no-op when disabled; compile-vs-
+  execute tagging and ``block_until_ready`` fencing for jitted calls.
+* :mod:`repro.obs.solver_trace` — per-iteration PGD convergence capture
+  (vmap-safe fixed-size arrays) and host-side analysis helpers.
+* :mod:`repro.obs.export` — JSONL and Perfetto-loadable Chrome trace
+  export, plus the schema validator ``make trace-demo`` gates on.
+* :mod:`repro.obs.report` — ``ReplayReport``: per-phase compile/execute
+  split, p50/p95/p99 tick latency, padding waste, solver-iters stats.
+* :mod:`repro.obs.provenance` — the provenance block stamped into every
+  BENCH JSON.
+
+Design rule (test-enforced): telemetry may measure the system but never
+participate in it — allocations are bit-identical with telemetry on/off.
+"""
+from .telemetry import (Recorder, Span, SpanEvent, counter, current_recorder,
+                        gauge, span, telemetry)
+from .solver_trace import (SolverTrace, lane_trace, trace_length,
+                           trace_summary, traces_to_dict, trim_trace)
+from .export import (events_to_dicts, to_chrome_trace, validate_chrome_trace,
+                     write_chrome_trace, write_jsonl)
+from .report import PhaseStats, ReplayReport, percentiles
+from .provenance import git_sha, provenance_block
+
+__all__ = [
+    "Recorder", "Span", "SpanEvent", "telemetry", "current_recorder",
+    "span", "counter", "gauge",
+    "SolverTrace", "trace_length", "lane_trace", "trim_trace",
+    "trace_summary", "traces_to_dict",
+    "events_to_dicts", "write_jsonl", "to_chrome_trace",
+    "write_chrome_trace", "validate_chrome_trace",
+    "PhaseStats", "ReplayReport", "percentiles",
+    "git_sha", "provenance_block",
+]

@@ -1,0 +1,65 @@
+"""Provenance stamping for benchmark artifacts.
+
+Every ``BENCH_*.json`` the repo emits embeds :func:`provenance_block` so a
+number can always be traced back to the code and machine that produced it
+— git SHA (+dirty flag), jax/jaxlib versions, the active JAX backend,
+platform string, CPU count, UTC timestamp and the CLI args the run was
+invoked with. Bench trajectories across PRs and machines are only
+comparable when this block says they are.
+
+Everything degrades to ``None`` rather than raising (e.g. git absent, or
+running from an sdist without a work tree): provenance must never be the
+reason a benchmark fails.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import subprocess
+import sys
+from datetime import datetime, timezone
+from typing import Any, Dict, List, Optional
+
+__all__ = ["git_sha", "provenance_block"]
+
+
+def git_sha(repo_dir: Optional[str] = None) -> Optional[str]:
+    """Current commit SHA, suffixed ``+dirty`` when the tree has
+    uncommitted changes; None when git/worktree is unavailable."""
+    try:
+        kw: Dict[str, Any] = {"stderr": subprocess.DEVNULL, "text": True}
+        if repo_dir is not None:
+            kw["cwd"] = repo_dir
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], **kw).strip()
+        dirty = subprocess.check_output(
+            ["git", "status", "--porcelain"], **kw).strip()
+        return sha + ("+dirty" if dirty else "")
+    except (OSError, subprocess.CalledProcessError):
+        return None
+
+
+def provenance_block(argv: Optional[List[str]] = None) -> Dict[str, Any]:
+    """The provenance dict embedded in every emitted BENCH JSON.
+
+    ``argv`` should be the CLI args the bench was invoked with (defaults
+    to ``sys.argv[1:]``)."""
+    try:
+        import jax
+        import jaxlib
+        jax_version = jax.__version__
+        jaxlib_version = jaxlib.__version__
+        backend = jax.default_backend()
+    except Exception:  # jax import/init failure — stamp what we can
+        jax_version = jaxlib_version = backend = None
+    return {
+        "git_sha": git_sha(),
+        "jax": jax_version,
+        "jaxlib": jaxlib_version,
+        "backend": backend,
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "cpu_count": os.cpu_count(),
+        "timestamp_utc": datetime.now(timezone.utc).isoformat(),
+        "argv": list(sys.argv[1:] if argv is None else argv),
+    }

@@ -1,0 +1,117 @@
+"""Convergence traces from the shared PGD engine, and helpers to read them.
+
+The capture itself lives in the engine (``repro.core.pgd``): an opt-in,
+fixed-size per-iteration log carried through the ``lax.while_loop`` so it
+stays jit/vmap-safe — under ``vmap`` every fleet lane gets its own rows.
+This module re-exports that record as :data:`SolverTrace` and provides the
+host-side analysis helpers: trimming the fixed-size arrays to the
+iterations actually taken, slicing one lane out of a batched capture, and
+summarising a trajectory for reports.
+
+Schema (one row per PGD iteration, ``L = PGDConfig.max_iters`` rows total;
+rows at index >= iters hold sentinels — NaN / False / -1):
+
+========  =======  ====================================================
+field     dtype    meaning
+========  =======  ====================================================
+merit     float32  objective value after the iteration's accepted point
+step      float32  Barzilai-Borwein base step proposed this iteration
+accepted  bool     True if any Armijo ladder rung passed
+rung      int32    index of the accepted backtracking rung (-1 = none)
+move      float32  max|dx| of the accepted move (0 when rejected)
+========  =======  ====================================================
+
+Capture is opt-in end to end: ``pgd_minimize_traced`` at the engine,
+``capture_trace=True`` on ``solve_incremental_info`` / ``solve_fleet_step``
+/ ``solve_horizon_fleet_step``, ``capture_solver_trace=True`` on the
+controllers and ``replay_fleet``. The untraced paths run the exact
+pre-existing compiled graph, so traced and untraced solves agree on
+``(x, fx, iters)`` — test-enforced in ``tests/obs/test_solver_trace.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pgd import PGDTrace
+
+# The engine's trace record IS the public solver-trace schema.
+SolverTrace = PGDTrace
+
+__all__ = ["SolverTrace", "trace_length", "lane_trace", "trim_trace",
+           "trace_summary", "traces_to_dict"]
+
+
+def trace_length(trace: PGDTrace) -> int:
+    """Number of rows (the engine's ``max_iters`` budget, not iters taken)."""
+    return int(trace.merit.shape[-1])
+
+
+def lane_trace(trace: PGDTrace, lane: int) -> PGDTrace:
+    """Slice one lane out of a batched ``(B, L)`` capture (from a vmapped
+    fleet solve) as a plain ``(L,)`` :data:`SolverTrace`."""
+    if np.asarray(trace.merit).ndim < 2:
+        raise ValueError("lane_trace expects a batched (B, L) trace; "
+                         "this capture is already single-lane")
+    return PGDTrace(*(np.asarray(f)[lane] for f in trace))
+
+
+def trim_trace(trace: PGDTrace, iters: Optional[int] = None) -> PGDTrace:
+    """Drop the sentinel tail: return the first ``iters`` rows as numpy.
+
+    When ``iters`` is None it is inferred as the number of non-NaN merit
+    rows (the engine writes merit every executed iteration)."""
+    merit = np.asarray(trace.merit)
+    if merit.ndim != 1:
+        raise ValueError("trim_trace expects a single-lane (L,) trace; "
+                         "use lane_trace first")
+    if iters is None:
+        iters = int(np.sum(~np.isnan(merit)))
+    iters = int(iters)
+    return PGDTrace(*(np.asarray(f)[:iters] for f in trace))
+
+
+def trace_summary(trace: PGDTrace, iters: Optional[int] = None) -> Dict:
+    """Summarise one lane's convergence trajectory as plain floats/ints.
+
+    Keys: ``iters`` (rows executed), ``merit_first``/``merit_final``
+    (objective at iteration 1 / at stop), ``merit_drop`` (first - final),
+    ``accept_rate`` (share of iterations whose Armijo ladder accepted),
+    ``mean_rung`` (mean accepted rung index — 0 means the BB step passes
+    untouched; higher means heavy backtracking), ``max_move`` (largest
+    accepted coordinate move)."""
+    t = trim_trace(trace, iters)
+    n = int(t.merit.shape[0])
+    if n == 0:
+        return {"iters": 0, "merit_first": None, "merit_final": None,
+                "merit_drop": None, "accept_rate": None, "mean_rung": None,
+                "max_move": None}
+    acc = np.asarray(t.accepted, bool)
+    rungs = np.asarray(t.rung)[acc]
+    return {
+        "iters": n,
+        "merit_first": float(t.merit[0]),
+        "merit_final": float(t.merit[-1]),
+        "merit_drop": float(t.merit[0] - t.merit[-1]),
+        "accept_rate": float(acc.mean()),
+        "mean_rung": float(rungs.mean()) if rungs.size else None,
+        "max_move": float(np.asarray(t.move).max()),
+    }
+
+
+def traces_to_dict(traces: List[PGDTrace]) -> List[Dict]:
+    """JSON-ready dump of a list of single-lane traces (trimmed rows as
+    lists) — the shape ``ReplayReport.to_dict`` and the bench JSONs embed."""
+    out = []
+    for tr in traces:
+        t = trim_trace(tr)
+        out.append({
+            "iters": int(t.merit.shape[0]),
+            "merit": [float(v) for v in np.asarray(t.merit)],
+            "step": [float(v) for v in np.asarray(t.step)],
+            "accepted": [bool(v) for v in np.asarray(t.accepted)],
+            "rung": [int(v) for v in np.asarray(t.rung)],
+            "move": [float(v) for v in np.asarray(t.move)],
+        })
+    return out

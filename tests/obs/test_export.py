@@ -1,0 +1,85 @@
+"""Export round-trips: JSONL and Chrome trace-event (Perfetto) formats,
+and the schema gate ``make trace-demo`` relies on."""
+import json
+
+import pytest
+
+from repro.obs import (telemetry, events_to_dicts, validate_chrome_trace,
+                       write_chrome_trace, write_jsonl)
+from repro.obs.export import to_chrome_trace
+
+
+@pytest.fixture()
+def recorder():
+    with telemetry() as rec:
+        with rec.span("replay/tick", cat="replay", tick=0,
+                      compile_key=("tick", 0)):
+            with rec.span("replay/solve", cat="replay",
+                          compile_key=("solve", 32)):
+                pass
+        with rec.span("replay/tick", cat="replay", tick=1,
+                      compile_key=("tick", 0)):
+            pass
+        rec.counter("n_solves")
+        rec.gauge("stack/padding_waste", 0.3)
+        rec.gauge("stack/padding_waste", 0.1)
+    return rec
+
+
+def test_chrome_trace_round_trips_with_valid_fields(recorder, tmp_path):
+    """ISSUE satellite: the emitted file must re-load through plain
+    json.load with valid ph/ts/dur on every event."""
+    path = write_chrome_trace(recorder, tmp_path / "trace.json")
+    doc = json.load(open(path))
+    evs = doc["traceEvents"]
+    assert len(evs) == 5                        # 3 spans + 2 gauge samples
+    spans = [e for e in evs if e["ph"] == "X"]
+    gauges = [e for e in evs if e["ph"] == "C"]
+    assert len(spans) == 3 and len(gauges) == 2
+    for e in evs:
+        assert isinstance(e["name"], str) and e["name"]
+        assert e["ph"] in ("X", "C")
+        assert isinstance(e["ts"], (int, float)) and e["ts"] >= 0
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+    for e in spans:
+        assert isinstance(e["dur"], (int, float)) and e["dur"] >= 0
+    assert evs == sorted(evs, key=lambda d: d["ts"])   # stable diffs
+    # compile/execute tags survive into args (what Perfetto shows on click)
+    phases = sorted(e["args"]["phase"] for e in spans)
+    assert phases == ["compile", "compile", "execute"]
+    assert validate_chrome_trace(path) == []
+
+
+def test_jsonl_round_trip(recorder, tmp_path):
+    path = write_jsonl(recorder, tmp_path / "events.jsonl")
+    lines = [json.loads(line) for line in open(path)]
+    assert lines == events_to_dicts(recorder)
+    kinds = {d["type"] for d in lines}
+    assert kinds == {"span", "counter", "gauge"}
+    tick0 = next(d for d in lines
+                 if d["type"] == "span" and d["tags"].get("tick") == 0)
+    assert tick0["phase"] == "compile" and tick0["dur_us"] >= 0
+
+
+def test_validator_flags_schema_violations(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [
+        {"name": "ok", "ph": "X", "ts": 1.0, "dur": 2.0, "pid": 1, "tid": 1},
+        {"name": "", "ph": "Z", "ts": -1.0, "pid": "x"},
+    ]}))
+    problems = validate_chrome_trace(bad)
+    assert any("bad ph" in p for p in problems)
+    assert any("bad ts" in p for p in problems)
+    assert any("missing name" in p for p in problems)
+    assert any("missing pid" in p for p in problems)
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"traceEvents": []}))
+    assert validate_chrome_trace(empty) == ["trace has zero events"]
+    notjson = tmp_path / "nope.json"
+    notjson.write_text("{")
+    assert "unreadable" in validate_chrome_trace(notjson)[0]
+    assert validate_chrome_trace(tmp_path / "missing.json")  # unreadable too
+
+
+def test_to_chrome_trace_is_json_serializable(recorder):
+    json.dumps(to_chrome_trace(recorder))       # no numpy/tuple leakage

@@ -1,0 +1,121 @@
+"""Solver convergence capture: the traced engine must agree with the
+untraced one on ``(x, fx, iters)``, stay vmap-safe (fixed-size per-lane
+rows), and raise for the fixed-step engine (no ladder to trace)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.incremental import solve_incremental_info
+from repro.core.pgd import PGDConfig, pgd_minimize, pgd_minimize_traced
+from repro.fleet import solve_fleet, solve_fleet_step, stack_problems
+from repro.horizon import HorizonSolverConfig
+from repro.horizon.problem import expand_problems
+from repro.horizon.solver import solve_horizon_info
+from repro.obs import lane_trace, trace_length, trace_summary, trim_trace
+from repro.obs.solver_trace import traces_to_dict
+from repro.testing import make_toy_problem
+
+CFG = PGDConfig(max_iters=80)
+
+
+def _quadratic(center):
+    """A box-constrained quadratic: the simplest exercise of the ladder."""
+    center = jnp.asarray(center, jnp.float32)
+    value = lambda x: jnp.sum((x - center) ** 2)
+    grad = jax.grad(value)
+    project = lambda x: jnp.clip(x, 0.0, 10.0)
+    return value, grad, project
+
+
+def test_traced_matches_untraced_bit_exact():
+    """Same compiled math, extra logging: (x, fx, iters) must agree
+    EXACTLY, and the trace's last valid merit row IS the reported fx."""
+    value, grad, project = _quadratic([3.0, 7.0, 1.5])
+    x0 = jnp.zeros(3, jnp.float32)
+    x, fx, iters = pgd_minimize(value, grad, project, x0, CFG)
+    xt, fxt, itt, tr = pgd_minimize_traced(value, grad, project, x0, CFG)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(xt))
+    assert float(fx) == float(fxt)
+    assert int(iters) == int(itt)
+    assert trace_length(tr) == CFG.max_iters          # fixed-size rows
+    t = trim_trace(tr)
+    assert t.merit.shape[0] == int(iters)             # NaN sentinel tail
+    assert float(t.merit[-1]) == float(fx)
+    s = trace_summary(tr)
+    assert s["iters"] == int(iters)
+    assert s["merit_drop"] >= 0
+    assert 0.0 < s["accept_rate"] <= 1.0
+    (d,) = traces_to_dict([t])
+    assert d["iters"] == int(iters) and len(d["merit"]) == int(iters)
+
+
+def test_traced_engine_is_vmap_safe():
+    """vmapping the traced engine yields (B, max_iters) rows per leaf, and
+    every lane matches its own single-lane traced run exactly."""
+    centers = jnp.asarray([[3.0, 7.0, 1.5], [9.0, 0.5, 4.0]], jnp.float32)
+    x0 = jnp.zeros(3, jnp.float32)
+
+    def solve(center):
+        value = lambda x: jnp.sum((x - center) ** 2)
+        return pgd_minimize_traced(value, jax.grad(value),
+                                   lambda x: jnp.clip(x, 0.0, 10.0), x0, CFG)
+
+    xs, fxs, its, tr = jax.vmap(solve)(centers)
+    assert np.asarray(tr.merit).shape == (2, CFG.max_iters)
+    for b in range(2):
+        _, fx1, it1, tr1 = solve(centers[b])
+        assert float(fxs[b]) == float(fx1)
+        assert int(its[b]) == int(it1)
+        lane = lane_trace(tr, b)
+        np.testing.assert_array_equal(np.asarray(lane.merit),
+                                      np.asarray(tr1.merit))
+        assert trace_summary(lane)["iters"] == int(it1)
+    with pytest.raises(ValueError, match="single-lane"):
+        lane_trace(lane, 0)                           # (L,) is not batched
+    with pytest.raises(ValueError, match="lane_trace first"):
+        trim_trace(tr)                                # (B, L) needs a lane
+
+
+def test_incremental_capture_matches_untraced():
+    prob = make_toy_problem(seed=0, n=24)
+    x_cur = jnp.zeros(24, jnp.float32)
+    x, iters = solve_incremental_info(prob, x_cur, jnp.float32(8.0))
+    xt, itt, tr = solve_incremental_info(prob, x_cur, jnp.float32(8.0),
+                                         capture_trace=True)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(xt))
+    assert int(iters) == int(itt)
+    assert trace_summary(tr)["iters"] == int(iters)
+
+
+def test_fleet_step_capture_per_lane(tmp_path):
+    """solve_fleet_step(capture_trace=True): identical integer allocations
+    to the untraced step, plus one (max_iters,) trace row set per lane
+    whose executed-iteration count matches the lane's reported iters."""
+    probs = [make_toy_problem(seed=s, n=16 + 4 * (s % 2), m=3)
+             for s in range(3)]
+    batch = stack_problems(probs)
+    cold = solve_fleet(batch, n_starts=2)
+    x_cur = jnp.asarray(cold.x_int)
+    plain = solve_fleet_step(batch, x_cur, 8.0)
+    traced = solve_fleet_step(batch, x_cur, 8.0, capture_trace=True)
+    np.testing.assert_array_equal(np.asarray(plain.x_int),
+                                  np.asarray(traced.x_int))
+    np.testing.assert_array_equal(np.asarray(plain.iters),
+                                  np.asarray(traced.iters))
+    assert plain.trace is None
+    assert np.asarray(traced.trace.merit).shape[0] == len(probs)
+    for b in range(len(probs)):
+        s = trace_summary(lane_trace(traced.trace, b))
+        assert s["iters"] == int(np.asarray(traced.iters)[b])
+
+
+def test_fixed_engine_rejects_capture():
+    """The fixed-step engine has no BB/Armijo ladder to trace — asking for
+    a capture must fail loudly, not return garbage rows."""
+    probs = [make_toy_problem(seed=0, n=16, m=3)] * 2
+    hp = expand_problems(probs)
+    with pytest.raises(ValueError, match="fixed"):
+        solve_horizon_info(hp, jnp.zeros(16, jnp.float32), jnp.float32(8.0),
+                           cfg=HorizonSolverConfig(solver="fixed"),
+                           capture_trace=True)
