@@ -7,7 +7,7 @@ PY ?= python
 test:            ## tier-1 verify: the full test suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-test-fast:       ## skip the multi-minute subprocess tests
+test-fast:       ## the ~3-minute CI tier: skips tests marked `slow`
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
 
 docs-check:      ## fail if public repro.fleet / repro.core modules lack docstrings or README doc links dangle

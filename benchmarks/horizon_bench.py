@@ -34,8 +34,18 @@ or beat the fixed engine's J while spending fewer iterations at H>=8.
 ``--solver adaptive`` / ``--solver fixed`` restrict the sweep to one
 engine to reproduce either side of that claim in isolation.
 
+The JSON also carries a ``solver_scaling`` section (admm vs adaptive vs
+fixed on batched H ∈ {8, 16, 32, 64} windows): each engine's steady-state
+wall time and mean window merit at the default 600-iteration-equivalent
+budget, plus a time-to-quality escalation — how many steps (and how much
+wall time) the adaptive engine needs to MATCH the ADMM merit. At H=32/64
+the adaptive engine's flat-stop plateaus above ADMM's merit at every
+budget; only ``ftol=0`` at 16–32x the step count reaches it, at an order
+of magnitude more wall time (the measured form of the ISSUE's "handles
+H=32/64 only at materially higher wall time").
+
 Run:  PYTHONPATH=src python benchmarks/horizon_bench.py
-          [--quick] [--json PATH] [--solver {adaptive,fixed,both}]
+          [--quick] [--json PATH] [--solver {adaptive,fixed,admm,both}]
 
 Always writes machine-readable results (default benchmarks/BENCH_horizon.json)
 like fleet_bench does, so the MPC-vs-myopic trajectory is tracked across PRs.
@@ -56,10 +66,17 @@ import time
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 from repro.core import Catalog, make_cloud_catalog
 from repro.fleet import TenantSpec, make_trace, replay_fleet
-from repro.horizon import FORECASTER_KINDS, HorizonSolverConfig
+from repro.horizon import (FORECASTER_KINDS, HorizonProblem,
+                           HorizonSolverConfig, expand_problems,
+                           solve_horizon_fleet_step)
+from repro.horizon.solver import _horizon_merit_fns
 from repro.obs import ReplayReport, percentiles, provenance_block, telemetry
+from repro.testing import make_toy_problem
 
 DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "BENCH_horizon.json")
@@ -136,6 +153,12 @@ def _instrumented_replay(**kw):
 # same 600-step budget both engines get per warm tick
 FIXED_CFG = HorizonSolverConfig(solver="fixed")
 
+# the consensus-ADMM engine at the SAME per-tick compute as the 600-step
+# monolithic engines: 30 outer sweeps x 20 inner prox iterations per tick
+ADMM_CFG = HorizonSolverConfig(solver="admm", admm_iters=30, inner_steps=20)
+
+MPC_CFGS = {"adaptive": None, "fixed": FIXED_CFG, "admm": ADMM_CFG}
+
 # "matching" tolerance for the adaptive-vs-fixed J comparison: replay J is
 # rounding-quantized (whole nodes move or don't), so sub-half-percent gaps
 # are below the metric's own granularity on these fleets
@@ -167,6 +190,96 @@ def adaptive_fixed_summary(cells):
     )
 
 
+def _scaling_fleet(B: int, H: int):
+    """B lanes of H-tick demand-ramped windows (one shape bucket), plus the
+    stacked ``HorizonProblem`` the batched fleet step consumes."""
+    lanes = [expand_problems([make_toy_problem(seed=31 * b + 3 * h,
+                                               demand_scale=1.0 + 0.04 * h)
+                              for h in range(H)]) for b in range(B)]
+    stacked = HorizonProblem(
+        jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                               *(l.problem for l in lanes)),
+        lanes[0].coupling_w, lanes[0].coupling_eps)
+    return lanes, stacked
+
+
+def _timed_fleet_solve(hp, xc, delta_max, cfg, repeats: int):
+    """Compile, then time ``repeats`` steady-state batched solves; returns
+    ``(result, compile_s, steady_ms)`` with steady_ms the per-solve mean."""
+    t0 = time.time()
+    res = solve_horizon_fleet_step(hp, xc, delta_max, cfg=cfg)
+    jax.block_until_ready(res.plan)
+    compile_s = time.time() - t0
+    t0 = time.time()
+    for _ in range(repeats):
+        res = solve_horizon_fleet_step(hp, xc, delta_max, cfg=cfg)
+        jax.block_until_ready(res.plan)
+    return res, compile_s, (time.time() - t0) / repeats * 1e3
+
+
+def _mean_window_merit(lanes, plans, xc, delta_max, cfg) -> float:
+    """Mean full-window merit over lanes — the SAME objective every engine
+    minimizes, so cross-engine J values are directly comparable."""
+    dm = jnp.asarray(delta_max, jnp.float32)
+    return float(np.mean([
+        float(_horizon_merit_fns(l, xc[i], dm, cfg.penalty_w,
+                                 cfg.delta_penalty_w)[0](plans[i]))
+        for i, l in enumerate(lanes)]))
+
+
+def solver_scaling(B: int = 4, horizons=(8, 16, 32, 64), repeats: int = 3,
+                   delta_max: float = 8.0):
+    """admm vs adaptive vs fixed on batched H-tick windows: equal-budget
+    merit + wall time per engine, then the time-to-quality escalation — the
+    adaptive steps (ftol=0, doubling from 2400) needed to MATCH the ADMM
+    merit. The ISSUE's speedup claim, measured: at H=32/64 the default
+    adaptive budget plateaus above ADMM's merit, and matching it costs an
+    order of magnitude more wall time."""
+    out = []
+    print("\n" + "=" * 100)
+    print(f"Solver scaling: B={B} lanes, H in {tuple(horizons)}, "
+          f"equal budget {ADMM_CFG.admm_iters * ADMM_CFG.inner_steps} "
+          f"iters/tick, then adaptive escalation to ADMM merit")
+    print("=" * 100)
+    print(f"  {'H':>3s} {'engine':>16s} {'J (window)':>11s} {'ms':>8s} "
+          f"{'vs admm t':>9s}")
+    for H in horizons:
+        lanes, hp = _scaling_fleet(B, H)
+        n = hp.problem.c.shape[2]
+        xc = jnp.full((B, n), 1.0, jnp.float32)
+        row = dict(H=H, B=B, engines={})
+        engines = [("admm", ADMM_CFG),
+                   ("adaptive", HorizonSolverConfig(steps=600)),
+                   ("fixed", FIXED_CFG)]
+        for name, cfg in engines:
+            res, comp, ms = _timed_fleet_solve(hp, xc, delta_max, cfg,
+                                               repeats)
+            J = _mean_window_merit(lanes, res.plan, xc, delta_max, cfg)
+            row["engines"][name] = dict(J=J, steady_ms=ms, compile_s=comp)
+            ratio = ms / row["engines"]["admm"]["steady_ms"]
+            print(f"  {H:3d} {name:>16s} {J:11.4f} {ms:8.0f} {ratio:8.1f}x")
+        J_admm = row["engines"]["admm"]["J"]
+        t_admm = row["engines"]["admm"]["steady_ms"]
+        # time-to-quality: flat-stopping plateaus above ADMM's merit, so the
+        # escalation must run with ftol=0 and raw step count
+        match = None
+        for steps in (2400, 9600, 19200):
+            cfg = HorizonSolverConfig(steps=steps, ftol=0.0)
+            res, comp, ms = _timed_fleet_solve(hp, xc, delta_max, cfg, 1)
+            J = _mean_window_merit(lanes, res.plan, xc, delta_max, cfg)
+            match = dict(steps=steps, J=J, steady_ms=ms,
+                         matched=bool(J <= J_admm),
+                         wall_vs_admm=ms / t_admm)
+            tag = "MATCHED" if match["matched"] else "still above admm J"
+            print(f"  {H:3d} {'adaptive ftol=0':>16s} {J:11.4f} {ms:8.0f} "
+                  f"{ms / t_admm:8.1f}x  steps={steps} {tag}")
+            if match["matched"]:
+                break
+        row["adaptive_to_match"] = match
+        out.append(row)
+    return out
+
+
 def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
         forecasters=None, trace_kinds=("diurnal", "flash_crowd"),
         solvers=("adaptive", "fixed")):
@@ -175,7 +288,7 @@ def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
     the PRIMARY whose metrics fill the cell; when both run, the cell also
     carries the fixed-vs-adaptive comparison fields."""
     forecasters = forecasters or sorted(FORECASTER_KINDS)
-    assert all(s in ("adaptive", "fixed") for s in solvers), solvers
+    assert all(s in MPC_CFGS for s in solvers), solvers
     catalog = Catalog(make_cloud_catalog().instances[::40])
     churn_cost = float(np.median([it.hourly_price
                                   for it in catalog.instances]))
@@ -223,7 +336,7 @@ def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
             for fc in forecasters:
                 per_solver = {}
                 for solver in solvers:
-                    cfg = FIXED_CFG if solver == "fixed" else None
+                    cfg = MPC_CFGS[solver]
                     res, timing, steady, rep = _instrumented_replay(
                         catalog=catalog, tenants=specs,
                         run_ca_baseline=False, replay_mode="batched",
@@ -311,9 +424,12 @@ def run(B: int = 4, T: int = 48, horizons=(1, 4, 8, 16),
 
 
 def main(argv):
-    """CLI: --quick trims the grid; --json PATH overrides the output file;
-    --solver {adaptive,fixed,both} picks the horizon engine(s) each cell
-    runs under (default both — the adaptive-vs-fixed speedup evidence)."""
+    """CLI: --quick trims the MPC grid (the solver_scaling section always
+    covers H up to 64 — it times single batched solves, not replays);
+    --json PATH overrides the output file; --solver
+    {adaptive,fixed,admm,both} picks the horizon engine(s) each MPC cell
+    runs under (default both monolithic engines — the adaptive-vs-fixed
+    speedup evidence; the admm comparison lives in solver_scaling)."""
     quick = "--quick" in argv
     json_path = DEFAULT_JSON
     if "--json" in argv:
@@ -325,8 +441,9 @@ def main(argv):
     if "--solver" in argv:
         i = argv.index("--solver")
         if i + 1 >= len(argv) or argv[i + 1] not in ("adaptive", "fixed",
-                                                     "both"):
-            raise SystemExit("--solver requires adaptive, fixed or both")
+                                                     "admm", "both"):
+            raise SystemExit("--solver requires adaptive, fixed, admm or "
+                             "both")
         if argv[i + 1] != "both":
             solvers = (argv[i + 1],)
     if quick:
@@ -335,6 +452,7 @@ def main(argv):
                   solvers=solvers)
     else:
         out = run(solvers=solvers)
+    out["solver_scaling"] = solver_scaling()
     out["config"]["quick"] = quick
     out["provenance"] = provenance_block(argv)
     with open(json_path, "w") as fh:

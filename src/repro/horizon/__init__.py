@@ -15,6 +15,11 @@ reacts late to flash crowds. This package looks ahead instead:
                  ``project_incremental`` chaining; ``vmap``-able across
                  fleet lanes (``solve_horizon_fleet_step``) like
                  ``solve_fleet``.
+  * admm       — consensus ADMM over the same program
+                 (``solver="admm"``): H independent per-tick prox blocks
+                 vmapped per outer iteration, consensus variables carrying
+                 the inter-tick churn coupling, primal/dual residual
+                 certificates in ``ADMMDiag``/``ADMMTrace``.
   * controller — ``ModelPredictiveController``: forecast H ticks, solve,
                  commit tick 0, roll forward. H=1 reproduces the myopic
                  controller exactly (test-enforced); the fleet replay
@@ -32,6 +37,8 @@ from .problem import (DEFAULT_COUPLING_EPS, DEFAULT_COUPLING_W,
                       coupling_grad, coupling_penalty, expand_problems,
                       horizon_objective, horizon_objective_terms,
                       smoothed_churn, tick_problem)
+from .admm import (ADMMDiag, ADMMTrace, admm_residual_history,
+                   admm_solve_plan)
 from .solver import (DEFAULT_DELTA_PENALTY_W, DEFAULT_PENALTY_W,
                      HorizonFleetStepResult, HorizonSolveResult,
                      HorizonSolverConfig, round_committed, solve_horizon,
@@ -53,6 +60,7 @@ __all__ = [
     "solve_horizon", "solve_horizon_info", "solve_horizon_fleet_step",
     "HorizonFleetStepResult", "HorizonSolveResult", "HorizonSolverConfig",
     "round_committed",
+    "ADMMDiag", "ADMMTrace", "admm_solve_plan", "admm_residual_history",
     "ModelPredictiveController", "window_candidate_scores",
     "select_window_candidate",
 ]

@@ -1,0 +1,299 @@
+"""Consensus ADMM (operator splitting) for the time-expanded horizon program.
+
+The horizon merit (see ``repro.horizon.solver``) is block-separable across
+ticks except for the churn coupling — exactly the structure the CvxCluster
+line of work exploits for orders-of-magnitude speedups on granular
+allocation. This module splits the program accordingly:
+
+    min_X  F(X) + g(Z)   s.t.  X = Z                    (consensus)
+
+    F(X) = Σ_h [ f_h(X_h) + band_h(X_h) ] + Ind_C(X)    per-tick blocks
+    g(Z)  = coupling(Z) + commit_coupling(Z_0, x_cur) + churn_bound(Z)
+
+where ``f_h`` is tick h's eq.(1) objective, ``band_h`` the planned-tick
+band penalty (h >= 1 only), and ``C`` the per-tick feasible sets — the box
+on planned rows, box ∩ L1 churn ball (exact ``project_incremental``
+chaining from ``x_current``) on the COMMITTED row, so tick 0 obeys exactly
+the bound the myopic controller enforces, same as the monolithic solver.
+All inter-tick terms live in ``g``: the smoothed-|·| churn coupling, the
+priced committed transition, and the soft churn bound.
+
+Scaled-dual ADMM iteration (Boyd et al. 2011, §3):
+
+    X^{k+1}_h = argmin_{x∈C_h} f_h(x) + band_h(x) + ρ/2 ||x − (Z_h − U_h)||²
+    Z^{k+1}   = argmin_Z g(Z) + ρ/2 ||X^{k+1} + U^k − Z||²
+    U^{k+1}   = U^k + X^{k+1} − Z^{k+1}
+
+The X-update is H INDEPENDENT single-tick prox subproblems — each one a
+strongly-convex (+ρ/2‖·‖²) version of the myopic tick, solved by the SAME
+shared BB/Armijo engine (``core.pgd``) with a small ``inner_steps`` budget
+and warm-started from the previous sweep. The planned-tick prox sweep is
+``vmap``-ed over ticks, so one ADMM iteration costs O(H) PARALLEL small
+solves instead of one coupled H×n PGD trajectory — and it composes with the
+fleet lane-vmap in ``solve_horizon_fleet_step`` (a batched MPC tick vmaps
+this whole loop over (B,) lanes on top of the internal tick-vmap). The
+Z-update is a cheap smooth unconstrained solve (the coupling terms involve
+no K matmuls): a fixed count of branch-free gradient steps with an analytic
+curvature-bound step size — deliberately NOT the line-searched engine,
+whose ulp-sensitive accept/reject decisions would break the bit-exact
+batched ≡ sequential lane-trajectory contract on this matmul-free graph
+(see ``z_update``).
+
+Convergence is certified by the standard scaled residual pair,
+
+    r^k = ||X^k − Z^k||_F                 (primal: consensus violation)
+    s^k = ρ ||Z^k − Z^{k-1}||_F           (dual: consensus-variable motion)
+
+both returned in :class:`ADMMDiag` (and per-iteration in :class:`ADMMTrace`
+with ``capture_trace``), surfaced as ``horizon/admm_*`` gauges through
+``repro.obs``; the loop early-stops when both fall under ``admm_tol``
+relative to the iterate scale. The returned plan is the FEASIBLE copy ``X``
+(each row lies in its tick's constraint set; the committed row satisfies
+the hard churn ball exactly), so rounding/commit machinery downstream is
+identical to the other engines.
+
+At H = 1 every term of ``g`` vanishes structurally and the program IS the
+myopic warm tick; ``repro.horizon.solver`` dispatches that case to the
+exact ``solve_incremental`` merit triple instead of running a degenerate
+one-block ADMM, so ``solver="admm"`` at H=1 reduces op-for-op to the
+adaptive engine — and therefore to the myopic controller (test-enforced).
+
+Select the engine with ``HorizonSolverConfig(solver="admm", rho=...,
+admm_iters=..., inner_steps=...)`` anywhere a config is accepted
+(``solve_horizon``, ``solve_horizon_fleet_step``,
+``ModelPredictiveController``, ``replay_fleet(solver_config=...)`` — both
+replay engines, test-enforced reachability). See docs/math.md for the
+formulation and docs/horizon.md for the solver-selection table.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.objective as obj
+from repro.core.incremental import project_incremental
+from repro.core.pgd import PGDConfig, pgd_minimize
+
+from .problem import (HorizonProblem, churn_bound_grad, commit_coupling_grad,
+                      coupling_grad, smoothed_churn, tick_problem)
+
+
+class ADMMDiag(NamedTuple):
+    """Convergence certificate of one ADMM solve (scalars; (B,) under the
+    fleet lane-vmap): the final scaled residual pair and the outer-iteration
+    count. ``primal_res`` is the consensus violation ``||X − Z||_F`` — how
+    far the per-tick blocks and the coupling copy still disagree — and
+    ``dual_res`` the dual residual ``ρ·||Z − Z_prev||_F``; both must shrink
+    toward 0 for the split program to agree with the monolithic one
+    (property-tested in tests/horizon/test_admm_parity.py)."""
+
+    primal_res: jnp.ndarray    # ||X - Z||_F at the final iterate
+    dual_res: jnp.ndarray      # rho * ||Z - Z_prev||_F at the final iterate
+    admm_iters: jnp.ndarray    # outer (consensus) iterations actually taken
+
+
+class ADMMTrace(NamedTuple):
+    """Per-outer-iteration residual capture of one traced ADMM solve —
+    fixed-size ``(admm_iters,)`` arrays (static shape), jit/vmap-safe like
+    ``core.pgd.PGDTrace``: a vmapped traced solve returns ``(B, L)`` leaves.
+    Rows at indices ``>= admm_iters_taken`` were never written and hold the
+    sentinels NaN / NaN / -1 (consumers slice by validity —
+    ``repro.obs.solver_trace.trim_admm_trace``).
+
+    * ``primal`` — primal residual ``||X − Z||_F`` after the iteration.
+    * ``dual``   — dual residual ``ρ·||Z − Z_prev||_F`` after the iteration.
+    * ``inner``  — inner PGD iterations the sweep spent (committed prox +
+      planned prox blocks + Z-update) this outer iteration (-1 sentinel).
+    """
+
+    primal: jnp.ndarray     # (L,) float32
+    dual: jnp.ndarray       # (L,) float32
+    inner: jnp.ndarray      # (L,) int32
+
+
+def _empty_admm_trace(L: int) -> ADMMTrace:
+    return ADMMTrace(primal=jnp.full((L,), jnp.nan, jnp.float32),
+                     dual=jnp.full((L,), jnp.nan, jnp.float32),
+                     inner=jnp.full((L,), -1, jnp.int32))
+
+
+#: Over-relaxation factor (Boyd et al. 2011, §3.4.3 recommend 1.5–1.8):
+#: the z- and u-updates mix ``alpha·X + (1-alpha)·Z_prev``, which
+#: measurably tightens both residuals at equal iteration count here.
+ADMM_ALPHA = 1.6
+
+
+def _sqnorm(a: jnp.ndarray) -> jnp.ndarray:
+    """<a, a> over every axis — elementwise multiply + reduce (not vdot) so
+    a vmapped call reduces per lane in the same order as a sequential one
+    (the bit-exactness convention of ``core.pgd._flat_dot``)."""
+    return jnp.sum(a * a)
+
+
+def admm_solve_plan(hp: HorizonProblem, x_current: jnp.ndarray,
+                    delta_max: jnp.ndarray, x_init: jnp.ndarray, *,
+                    rho: float, admm_iters: int, inner_steps: int,
+                    admm_tol: float, penalty_w: float, delta_penalty_w: float,
+                    inner_cfg: PGDConfig, trace: bool = False):
+    """One consensus-ADMM solve of the time-expanded program (H >= 2).
+
+    Returns ``(X, total_inner_iters, ADMMDiag)`` — or with ``trace=True``
+    ``(X, total_inner_iters, ADMMDiag, ADMMTrace)`` — where ``X`` (H, n) is
+    the feasible per-tick-block plan (row 0 exactly inside the hard churn
+    ball via ``project_incremental``) and ``total_inner_iters`` sums every
+    inner PGD iteration across all prox blocks and Z-updates (the effort
+    number ``ControllerStep.solver_iters`` aggregates — comparable to the
+    monolithic engines' iteration counts only through the benchmark's wall
+    clock, since an inner iteration here touches one tick, not the window).
+
+    Un-jitted on purpose: callers (``repro.horizon.solver``) jit it inside
+    their own entry points, and the fleet step vmaps it across lanes —
+    ``trace`` is a Python-level flag so the untraced compiled program
+    carries no trace state. All shapes are static (fixed ``admm_iters``
+    budget, ``lax.while_loop`` early stop), so the loop is jit/vmap-safe.
+    """
+    prob = hp.problem
+    H = hp.H
+    assert H >= 2, "admm_solve_plan needs a real window; H=1 dispatches to " \
+                   "the solve_incremental triple in repro.horizon.solver"
+    p0 = tick_problem(hp, 0)
+    rest = jax.tree_util.tree_map(lambda a: a[1:], prob)
+    pw = jnp.asarray(penalty_w, jnp.float32)
+    dpw = jnp.asarray(delta_penalty_w, jnp.float32)
+    rho_ = jnp.asarray(rho, jnp.float32)
+    tol = jnp.asarray(admm_tol, jnp.float32)
+
+    def prox_committed(v, x0):
+        # tick-0 block: eq.(1) objective + rho/2||x - v||^2 over
+        # box ∩ L1 churn ball — the committed chain stays EXACT
+        def val(x):
+            return obj.objective(p0, x) + 0.5 * rho_ * _sqnorm(x - v)
+
+        def grd(x):
+            return obj.grad_objective(p0, x) + rho_ * (x - v)
+
+        def prj(x):
+            return project_incremental(p0, x, x_current, delta_max)
+
+        return pgd_minimize(val, grd, prj, x0, inner_cfg)
+
+    def prox_planned(pb, v, x0):
+        # planned block: eq.(1) + band penalty + rho/2||x - v||^2 over box
+        def val(x):
+            return (obj.objective(pb, x) + obj.penalty(pb, x, pw)
+                    + 0.5 * rho_ * _sqnorm(x - v))
+
+        def grd(x):
+            return (obj.grad_objective(pb, x) + obj.penalty_grad(pb, x, pw)
+                    + rho_ * (x - v))
+
+        def prj(x):
+            return obj.project(pb, x)
+
+        return pgd_minimize(val, grd, prj, x0, inner_cfg)
+
+    def z_grad(Z, W):
+        return (coupling_grad(Z, hp.coupling_w, hp.coupling_eps)
+                + commit_coupling_grad(Z, x_current, hp.coupling_w,
+                                       hp.coupling_eps)
+                + churn_bound_grad(Z, delta_max, dpw, hp.coupling_eps)
+                + rho_ * (Z - W))
+
+    n = prob.c.shape[1]
+
+    inv_seps = 1.0 / jnp.sqrt(jnp.asarray(hp.coupling_eps, jnp.float32))
+
+    def z_update(W, z0):
+        # consensus block: every inter-tick term + rho/2||Z - W||^2, smooth
+        # and unconstrained — solved by ``inner_steps`` FIXED gradient steps
+        # (inexact ADMM), NOT the BB/Armijo engine. Deliberate: the adaptive
+        # ladder's accept/reject decisions bifurcate on the last ulps, and
+        # this matmul-free graph is the one spot where XLA's batched
+        # lowering differs from the unbatched one in those ulps — a line-
+        # searched z-step therefore breaks the bit-exact batched ≡
+        # sequential lane-trajectory contract the fleet engines promise
+        # (branch-free gradient steps keep it, test-enforced). Each step is
+        # 1/(rho + L̂(z)) with L̂ an analytic curvature bound re-evaluated at
+        # the current iterate (data-dependent but branch-free): each element
+        # sits in <= 2 smoothed-|·| arcs of curvature <= w/sqrt(eps), and
+        # the squared-hinge churn bound — whose one-sided Hessian vanishes
+        # on the slack side — contributes its gradient-outer-product +
+        # hinge·curvature terms 2·dpw·(2n·[ê>0] + ê/sqrt(eps)) only while
+        # its excess ê is active.
+        def step(z, _):
+            e = jnp.max(jnp.maximum(
+                smoothed_churn(z, hp.coupling_eps) - delta_max, 0.0))
+            act = (e > 0.0).astype(jnp.float32)
+            L_hat = (2.0 * hp.coupling_w * inv_seps
+                     + 2.0 * dpw * (2.0 * n * act + e * inv_seps))
+            return z - (1.0 / (rho_ + L_hat)) * z_grad(z, W), None
+
+        z, _ = jax.lax.scan(step, z0, None, length=inner_steps)
+        return z, None, jnp.asarray(inner_steps)
+
+    def cond(state):
+        it, done = state[3], state[6]
+        return (~done) & (it < admm_iters)
+
+    def body(state):
+        X, Z, U, it, inner = state[:5]
+        V = Z - U
+        x0_new, _, it0 = prox_committed(V[0], X[0])
+        Xr, _, itr = jax.vmap(prox_planned)(rest, V[1:], X[1:])
+        X_new = jnp.concatenate([x0_new[None], Xr], axis=0)
+        # over-relaxation (Boyd §3.4.3): the z- and u-updates see the mix
+        # alpha·X + (1-alpha)·Z_prev instead of X; residuals stay on X
+        X_hat = ADMM_ALPHA * X_new + (1.0 - ADMM_ALPHA) * Z
+        Z_new, _, itz = z_update(X_hat + U, Z)
+        U_new = U + X_hat - Z_new
+        r = jnp.sqrt(_sqnorm(X_new - Z_new))
+        s = rho_ * jnp.sqrt(_sqnorm(Z_new - Z))
+        # Boyd §3.3 stopping: residuals relative to the iterate scale
+        scale_p = 1.0 + jnp.maximum(jnp.sqrt(_sqnorm(X_new)),
+                                    jnp.sqrt(_sqnorm(Z_new)))
+        scale_d = 1.0 + rho_ * jnp.sqrt(_sqnorm(U_new))
+        done = (r <= tol * scale_p) & (s <= tol * scale_d)
+        step_inner = it0 + jnp.sum(itr) + itz
+        out = (X_new, Z_new, U_new, it + 1,
+               inner + step_inner, (r, s), done)
+        if trace:
+            tr: ADMMTrace = state[7]
+            tr = ADMMTrace(
+                primal=tr.primal.at[it].set(r.astype(jnp.float32)),
+                dual=tr.dual.at[it].set(s.astype(jnp.float32)),
+                inner=tr.inner.at[it].set(step_inner.astype(jnp.int32)))
+            return out + (tr,)
+        return out
+
+    # init: project the warm start into the per-tick feasible sets; the
+    # consensus copy starts in agreement (r_0 = 0) and the dual at rest
+    x0 = project_incremental(p0, x_init[0], x_current, delta_max)
+    Xr0 = jax.vmap(obj.project)(rest, x_init[1:])
+    X0 = jnp.concatenate([x0[None], Xr0], axis=0)
+    state = (X0, X0, jnp.zeros_like(X0), jnp.asarray(0), jnp.asarray(0),
+             (jnp.asarray(jnp.inf, jnp.float32),
+              jnp.asarray(jnp.inf, jnp.float32)),
+             jnp.asarray(False))
+    if trace:
+        state = state + (_empty_admm_trace(admm_iters),)
+    final = jax.lax.while_loop(cond, body, state)
+    X, it, inner = final[0], final[3], final[4]
+    r, s = final[5]
+    diag = ADMMDiag(primal_res=r, dual_res=s, admm_iters=it)
+    if trace:
+        return X, inner, diag, final[7]
+    return X, inner, diag
+
+
+def admm_residual_history(tr: ADMMTrace) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The valid (written) rows of a single-lane trace's residual pair —
+    ``(primal, dual)`` trimmed of the NaN sentinel tail. Host-side helper
+    for tests/reports; see also ``repro.obs.solver_trace.trim_admm_trace``.
+    """
+    import numpy as np
+
+    primal = np.asarray(tr.primal)
+    valid = ~np.isnan(primal)
+    return primal[valid], np.asarray(tr.dual)[valid]

@@ -149,7 +149,7 @@ class ModelPredictiveController(InfrastructureOptimizationController):
         if self.solver_config is None:
             self.solver_config = HorizonSolverConfig(
                 steps=int(self.solver_steps), penalty_w=float(self.penalty_w))
-        assert self.solver_config.solver in ("adaptive", "fixed"), \
+        assert self.solver_config.solver in ("adaptive", "fixed", "admm"), \
             self.solver_config.solver
 
     # -- window construction -------------------------------------------------

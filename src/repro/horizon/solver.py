@@ -84,7 +84,9 @@ from repro.core.objective import is_feasible, objective
 from repro.core.pgd import (PGDConfig, PGDTrace, pgd_minimize,
                             pgd_minimize_traced)
 from repro.core.rounding import round_and_polish
+from repro.obs.telemetry import current_recorder, gauge
 
+from .admm import ADMMDiag, ADMMTrace, admm_solve_plan
 from .problem import (HorizonProblem, churn_bound_grad, churn_bound_penalty,
                       commit_coupling_grad, commit_coupling_penalty,
                       coupling_grad, coupling_penalty, tick_problem)
@@ -109,17 +111,29 @@ class HorizonSolverConfig(NamedTuple):
     plumbs through to every tick's solve.
 
     ``solver`` picks the engine: ``"adaptive"`` (default) is the shared
-    BB/Armijo ladder (``core.pgd``); ``"fixed"`` the original fixed-step
-    scheme. ``steps`` is the per-tick iteration budget (the adaptive engine
-    early-stops at ``tol``; fixed always runs the full count — 600 matches
-    the myopic ``solve_incremental`` budget). ``step0`` / ``n_backtracks``
-    / ``backtrack`` / ``armijo_c`` are the adaptive ladder's parameters
-    (``core.pgd.PGDConfig``); ``step_scale`` scales the fixed engine's
+    BB/Armijo ladder (``core.pgd``) on the monolithic (H, n) program;
+    ``"fixed"`` the original fixed-step scheme; ``"admm"`` the consensus
+    operator-splitting solver (``repro.horizon.admm``) whose per-tick prox
+    blocks vmap over ticks. ``steps`` is the per-tick iteration budget (the
+    adaptive engine early-stops at ``tol``; fixed always runs the full
+    count — 600 matches the myopic ``solve_incremental`` budget). ``step0``
+    / ``n_backtracks`` / ``backtrack`` / ``armijo_c`` are the adaptive
+    ladder's parameters (``core.pgd.PGDConfig``), shared by the ADMM
+    engine's inner prox solves; ``step_scale`` scales the fixed engine's
     Lipschitz step only. ``penalty_w`` weights the planned-tick band
     penalty and ``delta_penalty_w`` the soft churn bound on planned
-    transitions (both inert at H=1)."""
+    transitions (both inert at H=1).
 
-    solver: str = "adaptive"       # "adaptive" (BB/Armijo) | "fixed"
+    The ``rho`` / ``admm_iters`` / ``inner_steps`` / ``admm_tol`` block
+    parameterizes the ADMM engine only: the consensus penalty weight, the
+    outer (consensus) iteration budget, the per-block inner PGD budget of
+    each prox sweep, and the relative residual tolerance the outer loop
+    early-stops at (see ``repro.horizon.admm``). An ADMM solve's total
+    compute is roughly ``admm_iters * inner_steps`` single-tick prox
+    iterations per tick — the defaults match the adaptive engine's 600
+    full-window budget."""
+
+    solver: str = "adaptive"       # "adaptive" (BB/Armijo) | "fixed" | "admm"
     steps: int = 600               # per-tick iteration budget
     tol: float = 1e-6              # adaptive: stop when the move is tiny
     ftol: float = 1e-4             # adaptive: ... or merit progress is flat
@@ -131,6 +145,10 @@ class HorizonSolverConfig(NamedTuple):
     step_scale: float = 1.0        # fixed: Lipschitz-step scale
     penalty_w: float = DEFAULT_PENALTY_W
     delta_penalty_w: float = DEFAULT_DELTA_PENALTY_W
+    rho: float = 4.0               # admm: consensus penalty weight
+    admm_iters: int = 30           # admm: outer (consensus) iteration budget
+    inner_steps: int = 20          # admm: per-block inner PGD budget
+    admm_tol: float = 1e-4         # admm: relative residual stop tolerance
 
     def pgd(self) -> PGDConfig:
         """The ``core.pgd.PGDConfig`` this config's adaptive fields map to."""
@@ -140,17 +158,30 @@ class HorizonSolverConfig(NamedTuple):
                          tol=self.tol, ftol=self.ftol,
                          max_flat=self.max_flat)
 
+    def inner_pgd(self) -> PGDConfig:
+        """The inner-prox ``PGDConfig`` of the ADMM engine: the same ladder
+        as :meth:`pgd` at the small per-block ``inner_steps`` budget, with
+        flat-merit early stopping disabled — each prox sweep is already
+        budget-capped, and ``ftol`` stopping inside a ~20-step segment
+        stalls the warm-started blocks well short of the tick optima."""
+        return self.pgd()._replace(max_iters=self.inner_steps, ftol=0.0)
+
 
 class HorizonSolveResult(NamedTuple):
     """One relaxed horizon solve: the plan plus the iterations it took.
 
-    ``trace`` is None unless the solve ran with ``capture_trace=True``
-    (adaptive engine only): the engine's per-iteration ``core.pgd.PGDTrace``
-    with ``cfg.steps`` fixed-size rows (see ``repro.obs.solver_trace``)."""
+    ``trace`` is None unless the solve ran with ``capture_trace=True``: the
+    adaptive engine's per-iteration ``core.pgd.PGDTrace`` with ``cfg.steps``
+    fixed-size rows, or — for ``solver="admm"`` at H>1 — the per-outer-
+    iteration residual ``repro.horizon.admm.ADMMTrace`` (see
+    ``repro.obs.solver_trace``). ``diag`` is the ADMM engine's convergence
+    certificate (final primal/dual residuals + outer iterations), None for
+    the monolithic engines and for the H=1 dispatch."""
 
     plan: jnp.ndarray       # (H, n) relaxed time-expanded solution
     iters: jnp.ndarray      # PGD iterations actually taken (== steps, fixed)
-    trace: Optional[PGDTrace] = None  # (steps,) convergence rows (opt-in)
+    trace: Optional[Union[PGDTrace, ADMMTrace]] = None  # opt-in capture
+    diag: Optional[ADMMDiag] = None   # admm-only residual certificate
 
 
 def _tick_lipschitz(prob) -> jnp.ndarray:
@@ -275,15 +306,28 @@ def _solve_horizon_body(hp: HorizonProblem, x_current: jnp.ndarray,
                         cfg: HorizonSolverConfig, trace: bool = False):
     """The (un-jitted) solve of one plan X (H, n), dispatching on the
     configured engine — shared by the single-tenant and the vmapped fleet
-    entry points. Returns ``(X, iters)``, or ``(X, iters, PGDTrace)`` with
-    ``trace=True`` (adaptive engine only — the fixed loop has no ladder to
-    record; callers reject that combination before tracing)."""
+    entry points. Returns ``(X, iters)``; ``solver="admm"`` at H>1 returns
+    ``(X, iters, ADMMDiag)``. With ``trace=True`` the engine's capture is
+    appended (``PGDTrace`` for adaptive, ``ADMMTrace`` for admm at H>1; the
+    fixed loop has no ladder to record — callers reject that combination
+    before tracing)."""
     if cfg.solver == "fixed":
         assert not trace, "solver='fixed' has no convergence trace"
         X = _solve_horizon_fixed(hp, x_current, delta_max, x_init, cfg.steps,
                                  cfg.step_scale, cfg.penalty_w,
                                  cfg.delta_penalty_w)
         return X, jnp.asarray(cfg.steps)
+    if cfg.solver == "admm" and hp.H > 1:
+        return admm_solve_plan(hp, x_current, delta_max, x_init,
+                               rho=cfg.rho, admm_iters=cfg.admm_iters,
+                               inner_steps=cfg.inner_steps,
+                               admm_tol=cfg.admm_tol,
+                               penalty_w=cfg.penalty_w,
+                               delta_penalty_w=cfg.delta_penalty_w,
+                               inner_cfg=cfg.inner_pgd(), trace=trace)
+    # adaptive — and the admm H=1 dispatch: a one-tick window has no
+    # coupling to split on, so ADMM reduces to its single prox block, which
+    # IS the solve_incremental merit triple the adaptive engine runs
     value, grad, proj = _horizon_merit_fns(hp, x_current, delta_max,
                                            cfg.penalty_w, cfg.delta_penalty_w)
     if trace:
@@ -314,7 +358,7 @@ def _resolve_cfg(cfg: Optional[HorizonSolverConfig], steps: Optional[int],
     """Merge the legacy per-argument knobs into a HorizonSolverConfig; an
     explicit ``cfg`` wins wholesale (the per-replay plumbing path)."""
     if cfg is not None:
-        assert cfg.solver in ("adaptive", "fixed"), cfg.solver
+        assert cfg.solver in ("adaptive", "fixed", "admm"), cfg.solver
         return cfg
     out = HorizonSolverConfig()
     if steps is not None:
@@ -345,19 +389,22 @@ def solve_horizon_info(hp: HorizonProblem, x_current, delta_max,
     combination raises ``ValueError``."""
     cfg = _resolve_cfg(cfg, steps, step_scale, penalty_w, delta_penalty_w)
     if capture_trace and cfg.solver == "fixed":
-        raise ValueError("capture_trace requires the adaptive engine; "
-                         "solver='fixed' records no convergence trace")
+        raise ValueError("capture_trace requires the adaptive or admm "
+                         "engine; solver='fixed' records no convergence "
+                         "trace")
     x_current = jnp.asarray(x_current, jnp.float32)
     delta_max = jnp.asarray(delta_max, jnp.float32)
     if x_init is None:
         x_init = jnp.tile(x_current[None, :], (hp.H, 1))
     x_init = jnp.asarray(x_init, jnp.float32)
-    if capture_trace:
-        X, iters, tr = _solve_horizon_traced_impl(hp, x_current, delta_max,
-                                                  x_init, cfg)
-        return HorizonSolveResult(plan=X, iters=iters, trace=tr)
-    X, iters = _solve_horizon_impl(hp, x_current, delta_max, x_init, cfg)
-    return HorizonSolveResult(plan=X, iters=iters)
+    has_diag = cfg.solver == "admm" and hp.H > 1
+    impl = (_solve_horizon_traced_impl if capture_trace
+            else _solve_horizon_impl)
+    out = impl(hp, x_current, delta_max, x_init, cfg)
+    diag = out[2] if has_diag else None
+    tr = out[-1] if capture_trace else None
+    _gauge_admm(diag)
+    return HorizonSolveResult(plan=out[0], iters=out[1], trace=tr, diag=diag)
 
 
 def solve_horizon(hp: HorizonProblem, x_current, delta_max,
@@ -388,6 +435,19 @@ def solve_horizon(hp: HorizonProblem, x_current, delta_max,
                               delta_penalty_w=delta_penalty_w, cfg=cfg).plan
 
 
+def _gauge_admm(diag: Optional[ADMMDiag]) -> None:
+    """Surface an ADMM solve's convergence certificate as ``repro.obs``
+    gauges. Batched solves gauge the worst lane — the residual that gates
+    the whole bucket's quality. Without a recorder installed the whole call
+    is skipped BEFORE touching device values (the ``float()`` casts would
+    otherwise force a sync the telemetry-off contract forbids)."""
+    if diag is None or current_recorder() is None:
+        return
+    gauge("horizon/admm_primal_res", float(jnp.max(diag.primal_res)))
+    gauge("horizon/admm_dual_res", float(jnp.max(diag.dual_res)))
+    gauge("horizon/admm_iters", float(jnp.max(diag.admm_iters)))
+
+
 def round_committed(p0, x_rel0: jnp.ndarray,
                     respect_plan: bool) -> jnp.ndarray:
     """Round the committed tick. With ``respect_plan`` (H>1) the rounding
@@ -412,14 +472,19 @@ class HorizonFleetStepResult(NamedTuple):
     """One batched receding-horizon tick over a fleet of lookahead windows.
 
     ``trace`` is None unless the tick ran with ``capture_trace=True``:
-    per-lane ``core.pgd.PGDTrace`` rows with a leading (B,) axis."""
+    per-lane ``core.pgd.PGDTrace`` rows with a leading (B,) axis (per-lane
+    ``ADMMTrace`` residual rows for ``solver="admm"`` at H>1). ``diag`` is
+    the ADMM engine's per-lane residual certificate ((B,) leaves; frozen
+    lanes carry the values of the discarded masked solve), None for the
+    monolithic engines."""
 
     plan: jnp.ndarray       # (B, H, n) relaxed plans (frozen: x_current tiled)
     x_int: jnp.ndarray      # (B, n) committed (rounded) tick-0 allocation
     fun_int: jnp.ndarray    # (B,) tick-0 objective at x_int
     feasible: jnp.ndarray   # (B,) tick-0 integer feasibility
     iters: jnp.ndarray      # (B,) PGD iterations per lane (frozen lanes: 0)
-    trace: Optional[PGDTrace] = None  # (B, steps) convergence rows (opt-in)
+    trace: Optional[Union[PGDTrace, ADMMTrace]] = None  # (B, L) rows (opt-in)
+    diag: Optional[ADMMDiag] = None   # admm-only per-lane residuals
 
 
 def _horizon_fleet_step_body(hp: HorizonProblem, x_current: jnp.ndarray,
@@ -435,7 +500,9 @@ def _horizon_fleet_step_body(hp: HorizonProblem, x_current: jnp.ndarray,
             cfg, trace=trace)
     )(hp.problem, x_current, delta_max, x_init)
     plan, iters = solved[0], solved[1]
-    tr = solved[2] if trace else None
+    has_diag = cfg.solver == "admm" and hp.problem.d.shape[1] > 1
+    diag = solved[2] if has_diag else None
+    tr = solved[-1] if trace else None
     p0 = jax.tree_util.tree_map(lambda a: a[:, 0], hp.problem)   # (B, ...)
     x_int = jax.vmap(lambda pb, xr: round_committed(pb, xr, respect_plan)
                      )(p0, plan[:, 0])
@@ -448,7 +515,7 @@ def _horizon_fleet_step_body(hp: HorizonProblem, x_current: jnp.ndarray,
     return HorizonFleetStepResult(plan=plan, x_int=x_int, fun_int=f_int,
                                   feasible=feas,
                                   iters=jnp.where(active, iters, 0),
-                                  trace=tr)
+                                  trace=tr, diag=diag)
 
 
 @partial(jax.jit, static_argnames=("cfg", "respect_plan"))
@@ -496,13 +563,17 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
     lanes match sequential :func:`solve_horizon` + ``round_and_polish``
     calls exactly (CPU, test-enforced).
 
-    ``capture_trace=True`` additionally returns per-lane PGD convergence
-    rows in ``HorizonFleetStepResult.trace`` (adaptive engine only —
-    ``solver='fixed'`` raises ``ValueError``)."""
+    ``capture_trace=True`` additionally returns per-lane convergence rows
+    in ``HorizonFleetStepResult.trace`` (``PGDTrace`` for the adaptive
+    engine, ``ADMMTrace`` for admm at H>1; ``solver='fixed'`` raises
+    ``ValueError``). ADMM solves also fill the per-lane residual
+    certificate ``HorizonFleetStepResult.diag`` and gauge the worst lane's
+    residuals (``horizon/admm_*``) when a telemetry recorder is active."""
     cfg = _resolve_cfg(cfg, steps, None, penalty_w, delta_penalty_w)
     if capture_trace and cfg.solver == "fixed":
-        raise ValueError("capture_trace requires the adaptive engine; "
-                         "solver='fixed' records no convergence trace")
+        raise ValueError("capture_trace requires the adaptive or admm "
+                         "engine; solver='fixed' records no convergence "
+                         "trace")
     B = hp.problem.c.shape[0]
     H = hp.problem.d.shape[1]
     x_current = jnp.asarray(x_current, jnp.float32)
@@ -513,5 +584,7 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
               else jnp.asarray(np.asarray(active, bool)))
     impl = (_horizon_fleet_step_traced_impl if capture_trace
             else _horizon_fleet_step_impl)
-    return impl(hp, x_current, delta_max, jnp.asarray(x_init, jnp.float32),
-                active, cfg, respect_plan=(H > 1))
+    res = impl(hp, x_current, delta_max, jnp.asarray(x_init, jnp.float32),
+               active, cfg, respect_plan=(H > 1))
+    _gauge_admm(res.diag)
+    return res

@@ -19,18 +19,30 @@ participate in it — allocations are bit-identical with telemetry on/off.
 """
 from .telemetry import (Recorder, Span, SpanEvent, counter, current_recorder,
                         gauge, span, telemetry)
-from .solver_trace import (SolverTrace, lane_trace, trace_length,
-                           trace_summary, traces_to_dict, trim_trace)
+from .solver_trace import (SolverTrace, admm_trace_summary, lane_trace,
+                           trace_length, trace_summary, traces_to_dict,
+                           trim_admm_trace, trim_trace)
 from .export import (events_to_dicts, to_chrome_trace, validate_chrome_trace,
                      write_chrome_trace, write_jsonl)
 from .report import PhaseStats, ReplayReport, percentiles
 from .provenance import git_sha, provenance_block
+
+
+def __getattr__(name: str):
+    # ADMMTrace is re-exported lazily (see solver_trace.__getattr__): the
+    # record lives in repro.horizon.admm, which transitively imports this
+    # package — an eager import here would be circular.
+    if name == "ADMMTrace":
+        from .solver_trace import ADMMTrace
+        return ADMMTrace
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "Recorder", "Span", "SpanEvent", "telemetry", "current_recorder",
     "span", "counter", "gauge",
     "SolverTrace", "trace_length", "lane_trace", "trim_trace",
     "trace_summary", "traces_to_dict",
+    "ADMMTrace", "trim_admm_trace", "admm_trace_summary",
     "events_to_dicts", "write_jsonl", "to_chrome_trace",
     "write_chrome_trace", "validate_chrome_trace",
     "PhaseStats", "ReplayReport", "percentiles",

@@ -21,6 +21,12 @@ rung      int32    index of the accepted backtracking rung (-1 = none)
 move      float32  max|dx| of the accepted move (0 when rejected)
 ========  =======  ====================================================
 
+The ADMM horizon engine (``repro.horizon.admm``) records a second schema,
+:data:`ADMMTrace` (one row per OUTER consensus iteration: primal/dual
+residual pair + inner PGD iterations spent), re-exported here with its own
+``trim_admm_trace`` / ``admm_trace_summary`` helpers; ``lane_trace`` slices
+both schemas.
+
 Capture is opt-in end to end: ``pgd_minimize_traced`` at the engine,
 ``capture_trace=True`` on ``solve_incremental_info`` / ``solve_fleet_step``
 / ``solve_horizon_fleet_step``, ``capture_solver_trace=True`` on the
@@ -30,17 +36,32 @@ pre-existing compiled graph, so traced and untraced solves agree on
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.pgd import PGDTrace
 
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.horizon.admm import ADMMTrace
+
 # The engine's trace record IS the public solver-trace schema.
 SolverTrace = PGDTrace
 
-__all__ = ["SolverTrace", "trace_length", "lane_trace", "trim_trace",
-           "trace_summary", "traces_to_dict"]
+__all__ = ["SolverTrace", "ADMMTrace", "trace_length", "lane_trace",
+           "trim_trace", "trace_summary", "traces_to_dict",
+           "trim_admm_trace", "admm_trace_summary"]
+
+
+def __getattr__(name: str):
+    # Lazy re-export: repro.horizon.problem imports repro.fleet which
+    # imports this package, so an eager `from repro.horizon.admm import
+    # ADMMTrace` here would close an import cycle. The record still lives
+    # with its engine (like PGDTrace in core.pgd); we only defer the lookup.
+    if name == "ADMMTrace":
+        from repro.horizon.admm import ADMMTrace
+        return ADMMTrace
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def trace_length(trace: PGDTrace) -> int:
@@ -48,13 +69,15 @@ def trace_length(trace: PGDTrace) -> int:
     return int(trace.merit.shape[-1])
 
 
-def lane_trace(trace: PGDTrace, lane: int) -> PGDTrace:
+def lane_trace(trace, lane: int):
     """Slice one lane out of a batched ``(B, L)`` capture (from a vmapped
-    fleet solve) as a plain ``(L,)`` :data:`SolverTrace`."""
-    if np.asarray(trace.merit).ndim < 2:
+    fleet solve) as a plain ``(L,)`` record. Works for both trace schemas
+    (:data:`SolverTrace` and :data:`ADMMTrace`) — the record type is
+    preserved."""
+    if np.asarray(trace[0]).ndim < 2:
         raise ValueError("lane_trace expects a batched (B, L) trace; "
                          "this capture is already single-lane")
-    return PGDTrace(*(np.asarray(f)[lane] for f in trace))
+    return type(trace)(*(np.asarray(f)[lane] for f in trace))
 
 
 def trim_trace(trace: PGDTrace, iters: Optional[int] = None) -> PGDTrace:
@@ -97,6 +120,45 @@ def trace_summary(trace: PGDTrace, iters: Optional[int] = None) -> Dict:
         "accept_rate": float(acc.mean()),
         "mean_rung": float(rungs.mean()) if rungs.size else None,
         "max_move": float(np.asarray(t.move).max()),
+    }
+
+
+def trim_admm_trace(trace: "ADMMTrace",
+                    iters: Optional[int] = None) -> "ADMMTrace":
+    """Drop the sentinel tail of a single-lane ADMM capture: return the
+    first ``iters`` outer-iteration rows as numpy. When ``iters`` is None it
+    is inferred as the number of non-NaN primal-residual rows (the loop
+    writes the residual pair every executed outer iteration)."""
+    primal = np.asarray(trace.primal)
+    if primal.ndim != 1:
+        raise ValueError("trim_admm_trace expects a single-lane (L,) trace; "
+                         "use lane_trace first")
+    if iters is None:
+        iters = int(np.sum(~np.isnan(primal)))
+    iters = int(iters)
+    return type(trace)(*(np.asarray(f)[:iters] for f in trace))
+
+
+def admm_trace_summary(trace: "ADMMTrace",
+                       iters: Optional[int] = None) -> Dict:
+    """Summarise one lane's ADMM residual trajectory as plain floats/ints.
+
+    Keys: ``admm_iters`` (outer iterations executed), ``primal_first`` /
+    ``primal_final`` and ``dual_first`` / ``dual_final`` (residuals after
+    the first / last outer iteration), ``inner_total`` (inner PGD
+    iterations summed over the run)."""
+    t = trim_admm_trace(trace, iters)
+    n = int(t.primal.shape[0])
+    if n == 0:
+        return {"admm_iters": 0, "primal_first": None, "primal_final": None,
+                "dual_first": None, "dual_final": None, "inner_total": 0}
+    return {
+        "admm_iters": n,
+        "primal_first": float(t.primal[0]),
+        "primal_final": float(t.primal[-1]),
+        "dual_first": float(t.dual[0]),
+        "dual_final": float(t.dual[-1]),
+        "inner_total": int(np.asarray(t.inner).sum()),
     }
 
 

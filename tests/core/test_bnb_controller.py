@@ -30,6 +30,7 @@ def test_bnb_explores_and_reports(toy_problem):
     assert bnb.gap >= 0.0
 
 
+@pytest.mark.slow
 def test_controller_churn_bounded():
     from repro.core import Catalog, make_cloud_catalog
     cat = Catalog(make_cloud_catalog().instances[::40])
@@ -45,6 +46,7 @@ def test_controller_churn_bounded():
     assert second.churn <= 5.0 + 8.0  # delta + rounding slack
 
 
+@pytest.mark.slow
 def test_controller_failure_replan():
     from repro.core import Catalog, make_cloud_catalog
     cat = Catalog(make_cloud_catalog().instances[::40])

@@ -1,5 +1,6 @@
 """Incremental adoption (paper III.E): L1-ball projection properties and the
 bounded-churn solve."""
+import pytest
 import jax.numpy as jnp
 import numpy as np
 try:
@@ -11,6 +12,7 @@ from repro.core import project_l1_ball, project_incremental, solve_incremental
 from repro.testing import make_toy_problem
 
 
+@pytest.mark.slow
 @settings(max_examples=50, deadline=None)
 @given(seed=st.integers(0, 10_000), radius=st.floats(0.1, 20.0), dim=st.integers(2, 40))
 def test_l1_projection_properties(seed, radius, dim):

@@ -10,6 +10,7 @@ try:
 except ImportError:  # container image has no hypothesis — deterministic shim
     from repro.testing import given, settings, strategies as st
 
+import pytest
 import numpy as np
 
 from repro.core import SolverConfig
@@ -114,6 +115,7 @@ def test_bucketing_cuts_padding_on_skewed_fleet():
 # solve equivalence: bucketed == unbucketed
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_bucketed_solve_matches_unbucketed():
     """Bucketed stacking must not change WHAT is solved: per-tenant integer
     solutions/objectives identical to the single globally-padded batch
@@ -137,6 +139,7 @@ def test_bucketed_solve_matches_unbucketed():
     assert bool(np.all(np.asarray(buck.feasible)))
 
 
+@pytest.mark.slow
 @settings(max_examples=3)
 @given(seed0=st.integers(0, 30))
 def test_bucketed_solve_property_sweep(seed0):

@@ -143,6 +143,7 @@ def test_replay_with_ca_baseline_and_aggregates(tiny_catalog):
 # batched replay engine
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_batched_replay_matches_sequential_exactly(tiny_catalog):
     """Tentpole acceptance: the batched engine (one solve_fleet /
     solve_fleet_step call per shape bucket per tick) must produce per-tenant
@@ -176,6 +177,7 @@ def test_batched_replay_matches_sequential_exactly(tiny_catalog):
             == bat.metrics.total_cost_integral)
 
 
+@pytest.mark.slow
 def test_batched_cold_start_reproduces_single_shot(tiny_catalog):
     """Satellite regression: the batched engine's cold-start path must also
     reproduce the one-shot api.optimize result on a constant-demand trace
@@ -199,6 +201,7 @@ def test_batched_cold_start_reproduces_single_shot(tiny_catalog):
     assert out.tenants[0].metrics.slo_violation_ticks == 0
 
 
+@pytest.mark.slow
 def test_batched_replay_relaxed_warm_start_stays_feasible(tiny_catalog):
     """warm_start="relaxed" (previous tick's relaxed batched solution) is an
     optimization knob, not an equivalence mode — but it must stay feasible
@@ -220,6 +223,7 @@ def test_replay_mode_validation(tiny_catalog):
         replay_fleet(tiny_catalog, [spec], ca_engine="nope")
 
 
+@pytest.mark.slow
 def test_batched_ragged_horizons_match_sequential(tiny_catalog):
     """Tentpole acceptance: tenants with trace lengths {T, T/2, 1} replayed
     batched vs sequential must yield identical per-tenant integer
@@ -301,6 +305,7 @@ def _specialist_catalog():
     return Catalog(types)
 
 
+@pytest.mark.slow
 def test_ca_pools_sized_from_peak_demand():
     """Bugfix regression (headline): `default_ca_pools` must size the
     baseline's node pools from the trace's per-resource PEAK demand

@@ -59,6 +59,7 @@ def _sequential_reference(probs, starts, cfg=None):
     return np.asarray(best_rel), np.asarray(best_int)
 
 
+@pytest.mark.slow
 def test_vmap_path_matches_sequential_exactly_uniform():
     """Uniform-shape fleet: no padding is added, vmap preserves per-lane op
     structure, so the batched solve is BIT-IDENTICAL to the loop."""
@@ -74,6 +75,7 @@ def test_vmap_path_matches_sequential_exactly_uniform():
     assert bool(np.all(np.asarray(res.feasible)))
 
 
+@pytest.mark.slow
 def test_vmap_path_matches_sequential_ragged():
     """Tentpole acceptance: ragged fleet (padded reductions shift the last
     ulps, so trajectories can part ways) still agrees within 1e-3 rel."""
@@ -87,6 +89,7 @@ def test_vmap_path_matches_sequential_ragged():
     assert bool(np.all(np.asarray(res.feasible)))
 
 
+@pytest.mark.slow
 def test_integer_solutions_are_integral_and_feasible():
     probs = _ragged_fleet(6)
     batch = stack_problems(probs)
@@ -97,6 +100,7 @@ def test_integer_solutions_are_integral_and_feasible():
         assert bool(obj.is_feasible(p, jnp.asarray(X[b, : p.n]), 1e-3)), b
 
 
+@pytest.mark.slow
 def test_ref_path_agrees_to_solver_tolerance():
     """The hand-batched PGD (einsum oracle) must stay within the stall
     band of the sequential solver and end feasible everywhere."""
@@ -141,6 +145,7 @@ def test_heterogeneous_params_per_tenant():
     assert bool(np.all(np.asarray(res.feasible)))
 
 
+@pytest.mark.slow
 def test_step_frozen_lanes_keep_warm_start():
     """Ragged-horizon contract: lanes with active=False are returned with
     x == x_int == x_current (the frozen tenant's last allocation), while

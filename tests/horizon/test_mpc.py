@@ -52,6 +52,7 @@ def test_h1_last_value_mpc_reproduces_myopic(tiny_catalog):
         assert rm.metrics.cost_integral == rp.metrics.cost_integral
 
 
+@pytest.mark.slow
 @settings(max_examples=3)
 @given(cat_pick=st.integers(0, 2), trace_seed=st.integers(0, 50))
 def test_h1_equivalence_across_random_catalogs(cat_pick, trace_seed):
@@ -70,6 +71,7 @@ def test_h1_equivalence_across_random_catalogs(cat_pick, trace_seed):
         np.testing.assert_array_equal(myo.step(d).counts, mpc.step(d).counts)
 
 
+@pytest.mark.slow
 def test_batched_mpc_matches_sequential(tiny_catalog):
     """Tentpole acceptance: the batched MPC engine (one vmapped
     solve_horizon_fleet_step per shape bucket per tick) must yield per-tenant
@@ -144,6 +146,7 @@ def test_mpc_plan_state(tiny_catalog):
     np.testing.assert_array_equal(shifted[0], ctl.x_current)
 
 
+@pytest.mark.slow
 def test_solver_config_plumbs_through_replay(tiny_catalog):
     """Satellite acceptance: ``replay_fleet(controller="mpc",
     solver_config=...)`` must reach every warm tick's solve in BOTH engines
@@ -171,6 +174,7 @@ def test_solver_config_plumbs_through_replay(tiny_catalog):
         assert all(s.solver_iters == 11 for s in fixed.tenants[0].steps[1:])
 
 
+@pytest.mark.slow
 def test_solver_iters_match_across_engines(tiny_catalog):
     """Iteration-count contract across engines: the FIRST warm tick's
     inputs (integer cold counts, tiled warm start) are bit-identical in
@@ -202,6 +206,7 @@ def test_solver_iters_match_across_engines(tiny_catalog):
             assert abs(a - b) <= max(10, 0.5 * max(a, b)), (it_s, it_b)
 
 
+@pytest.mark.slow
 def test_window_cold_start_batched_matches_sequential(tiny_catalog):
     """cold_start="window" must preserve the engine equivalence: the
     batched replay re-ranks the SAME multistart candidates by the same

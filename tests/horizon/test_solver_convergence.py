@@ -21,6 +21,7 @@ try:
 except ImportError:  # container image has no hypothesis — deterministic shim
     from repro.testing import given, settings, strategies as st
 
+import pytest
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,6 +52,7 @@ def _solve(hp, x_cur, **cfg_kw):
                               cfg=HorizonSolverConfig(**cfg_kw))
 
 
+@pytest.mark.slow
 @settings(max_examples=6)
 @given(seed=st.integers(0, 10_000), H=st.sampled_from((4, 8, 16)))
 def test_adaptive_no_worse_than_fixed_at_same_budget(seed, H):
@@ -66,6 +68,7 @@ def test_adaptive_no_worse_than_fixed_at_same_budget(seed, H):
     assert int(ra.iters) <= BUDGET
 
 
+@pytest.mark.slow
 def test_adaptive_half_budget_beats_fixed_final_on_median_draw():
     """ISSUE acceptance: the adaptive engine reaches the fixed-step
     engine's FINAL merit in <= half the iterations on at least the median

@@ -11,6 +11,11 @@ from repro.models import init_model, split, forward, loss_fn
 
 ARCHS = list_archs()
 
+# a forward+train smoke is 5-55s of CPU jit per arch and each param pays
+# its own compile, so the whole sweep lives in the full tier (`make test`);
+# the fast tier still covers model code via the cheap component tests
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow) for a in ARCHS]
+
 
 def _batch(cfg, rng, B=2, S=32):
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
@@ -26,7 +31,7 @@ def test_all_archs_registered():
     assert len(ARCHS) == 10
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_and_train_step(arch):
     rng = np.random.default_rng(0)
     cfg = get_config(arch).reduced()

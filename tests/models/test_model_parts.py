@@ -12,9 +12,13 @@ from repro.models.attention import _chunked_flash, _sdpa, causal_mask
 
 CONSISTENCY_ARCHS = ["qwen1.5-4b", "mixtral-8x22b", "jamba-1.5-large-398b",
                      "rwkv6-7b", "granite-34b"]
+# prefill+decode is 5-35s of CPU jit per reduced config (each pays its own
+# compile): the whole consistency sweep runs in the full tier
+CONSISTENCY_PARAMS = [pytest.param(a, marks=pytest.mark.slow)
+                      for a in CONSISTENCY_ARCHS]
 
 
-@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+@pytest.mark.parametrize("arch", CONSISTENCY_PARAMS)
 def test_prefill_then_decode_matches_teacher_forcing(arch):
     rng = np.random.default_rng(1)
     cfg = get_config(arch).reduced()
@@ -37,6 +41,7 @@ def test_prefill_then_decode_matches_teacher_forcing(arch):
         tok = jnp.argmax(dl, -1)[:, None].astype(jnp.int32)
 
 
+@pytest.mark.slow
 def test_sliding_window_decode_ring_buffer():
     """SWA decode with a window-sized ring buffer matches teacher forcing
     even past the window boundary."""
@@ -70,6 +75,7 @@ def test_chunked_flash_matches_sdpa(window):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_mamba_chunk_invariance():
     from repro.models.mamba import init_mamba, mamba_block
     from repro.models.param import split as psplit
@@ -143,6 +149,7 @@ def test_moe_no_drop_exact():
     assert np.isfinite(float(aux))
 
 
+@pytest.mark.slow
 def test_perf_levers_numerically_close():
     """attn_probs_bf16 / ssm_scan_bf16 are perf levers — outputs must stay
     close to the f32 baseline."""

@@ -88,6 +88,7 @@ def test_incremental_capture_matches_untraced():
     assert trace_summary(tr)["iters"] == int(iters)
 
 
+@pytest.mark.slow
 def test_fleet_step_capture_per_lane(tmp_path):
     """solve_fleet_step(capture_trace=True): identical integer allocations
     to the untraced step, plus one (max_iters,) trace row set per lane

@@ -87,7 +87,11 @@ def test_compile_execute_tagging_and_nesting():
 # the contract: telemetry never changes allocations (both engines)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("mode", ["sequential", "batched"])
+@pytest.mark.parametrize("mode", [
+    "sequential",
+    # the batched replay pays a multi-second vmap compile: full tier
+    pytest.param("batched", marks=pytest.mark.slow),
+])
 def test_replay_bit_identical_with_telemetry_on(tiny_catalog, specs, mode):
     """ISSUE acceptance: a fully instrumented replay (telemetry recorder
     installed AND per-lane solver-trace capture on) must produce per-tick

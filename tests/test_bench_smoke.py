@@ -1,0 +1,106 @@
+"""Benchmark-driver smoke tests.
+
+The bench scripts are the repo's evidence layer, but they are NOT imported
+by the library or the unit tests — a solver refactor can silently break
+them and nobody notices until the next `make bench-*` run fails mid-sweep.
+These tests import each driver by file path (benchmarks/ is not a package)
+and run its entry functions at the tiniest configuration that still
+exercises the real code path. They assert on structure, not numbers: the
+point is "still runs and emits the schema", not performance.
+
+All four driver smokes are marked `slow` (each runs a multi-second sweep
+even at its tiniest configuration) so `make test-fast` stays within its
+budget; `make test` — the tier-1 gate — always runs them.
+"""
+import importlib.util
+import os
+
+import pytest
+
+BENCH_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks")
+
+
+def _load(name: str):
+    spec = importlib.util.spec_from_file_location(
+        f"bench_smoke_{name}", os.path.join(BENCH_DIR, f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def horizon_bench():
+    return _load("horizon_bench")
+
+
+@pytest.fixture(scope="module")
+def fleet_bench():
+    return _load("fleet_bench")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solvers", [("adaptive",), ("admm",)])
+def test_horizon_bench_run_tiny(horizon_bench, solvers):
+    """The MPC sweep runs end to end at a tiny grid under both the
+    monolithic and the ADMM engine, and emits the cell schema downstream
+    tooling reads (beats_myopic, regret, solver_iters, timing split)."""
+    out = horizon_bench.run(B=2, T=6, horizons=(1, 2),
+                            forecasters=("last_value",),
+                            trace_kinds=("diurnal",), solvers=solvers)
+    assert out["cells"], out
+    for cell in out["cells"]:
+        assert cell["solver"] == solvers[0]
+        for key in ("objective", "beats_myopic", "regret_vs_oracle",
+                    "solver_iters", "t_compile", "t_execute"):
+            assert key in cell, (key, cell)
+    assert "diurnal" in out["myopic"]
+    assert out["telemetry"]["n_steady_ticks"] > 0
+
+
+@pytest.mark.slow
+def test_horizon_bench_solver_scaling_tiny(horizon_bench):
+    """The admm-vs-adaptive-vs-fixed scaling section emits per-engine merit
+    + wall time and the adaptive time-to-quality escalation record."""
+    rows = horizon_bench.solver_scaling(B=2, horizons=(4,), repeats=1)
+    assert len(rows) == 1
+    row = rows[0]
+    assert set(row["engines"]) == {"admm", "adaptive", "fixed"}
+    for eng in row["engines"].values():
+        assert eng["steady_ms"] > 0
+        assert "J" in eng
+    assert row["adaptive_to_match"] is not None
+    assert "matched" in row["adaptive_to_match"]
+
+
+@pytest.mark.slow
+def test_fleet_bench_entries_tiny(fleet_bench):
+    """Every fleet_bench entry function still runs: the batched-vs-naive
+    comparison, the bucketing sweep, and both replay benches."""
+    out = fleet_bench.run(B=4, n_starts=2)
+    assert out["ragged_cold"]["speedup"] > 0
+    assert out["ragged_warm"]["t_fleet"] > 0
+    assert out["scaling"]
+    out_b = fleet_bench.run_bucketing(B=4, n_starts=2)
+    assert out_b["n_buckets"] >= 1
+    out_r = fleet_bench.run_replay(B=4, T=2)
+    assert out_r["tenant_ticks"] > 0
+    assert out_r["cost_rel_drift"] <= 1e-6
+    out_ca = fleet_bench.run_ca_replay(B=4, T=3)
+    assert out_ca["tenant_ticks"] == 12
+    assert out_ca["counts_identical"]
+
+
+@pytest.mark.slow
+def test_solver_bench_runs(capsys):
+    """benchmarks/solver_bench.py (the paper §III table) survived the PGD
+    extraction: it still produces a row per scenario with a KKT report and
+    a rounding-vs-BnB comparison."""
+    sb = _load("solver_bench")
+    out = sb.run(n_starts=2)
+    assert out["approaches"], out
+    for row in out["approaches"]:
+        assert row["bnb_fun"] <= row["round_fun"] + 1e-6
+        assert "kkt_stationarity" in row
+    assert out["kernel"]["grad_err"] <= 1e-3
+    assert out["pareto_frontier_size"] >= 1

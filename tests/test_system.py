@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 
+@pytest.mark.slow
 def test_paper_pipeline_end_to_end(small_catalog):
     from repro.core import (InfrastructureOptimizationController, Scenario,
                             default_pools_for, evaluate, optimize,
