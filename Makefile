@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast docs-check bench bench-fleet bench-json bench-horizon example-fleet trace-demo
+.PHONY: test test-fast docs-check bench bench-fleet bench-json bench-horizon bench-scenarios example-fleet trace-demo
 
 test:            ## tier-1 verify: the full test suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -26,6 +26,10 @@ bench-json:      ## quick fleet benchmark -> benchmarks/BENCH_fleet.json
 bench-horizon:   ## quick MPC-vs-myopic sweep -> benchmarks/BENCH_horizon.json
 	PYTHONPATH=src $(PY) benchmarks/horizon_bench.py --quick \
 	    --json benchmarks/BENCH_horizon.json
+
+bench-scenarios: ## scenario frontiers (SLO/priority/spot vs CA) -> benchmarks/BENCH_scenarios.json
+	PYTHONPATH=src $(PY) benchmarks/scenario_bench.py \
+	    --json benchmarks/BENCH_scenarios.json
 
 example-fleet:   ## trace-driven fleet replay demo (batched engine)
 	PYTHONPATH=src $(PY) examples/fleet_replay.py

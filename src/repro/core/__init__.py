@@ -15,7 +15,11 @@ from .branch_bound import branch_and_bound, BnBResult
 from .incremental import (project_l1_ball, project_incremental,
                           solve_incremental, solve_incremental_info)
 from .kkt import kkt_report, KKTReport
-from .catalog import Catalog, InstanceType, make_cloud_catalog, make_tpu_catalog
+from .terms import (BASE_TERMS, SCENARIO_TERMS, TERM_DEFS, PricedTerm,
+                    TermDef, make_term, register_term, term_signature,
+                    with_terms)
+from .catalog import (Catalog, InstanceType, make_cloud_catalog,
+                      make_tpu_catalog, spot_catalog, spot_risk_prices)
 from .autoscaler import (NodePool, simulate_cluster_autoscaler,
                          simulate_cluster_autoscaler_batch, default_pools_for)
 from .metrics import AllocationMetrics, evaluate, per_dim_utilization
@@ -34,8 +38,12 @@ __all__ = [
     "greedy_round", "round_and_polish", "scale_down", "branch_and_bound",
     "BnBResult", "project_l1_ball", "project_incremental", "solve_incremental",
     "solve_incremental_info",
-    "kkt_report", "KKTReport", "Catalog", "InstanceType", "make_cloud_catalog",
-    "make_tpu_catalog", "NodePool", "simulate_cluster_autoscaler",
+    "kkt_report", "KKTReport",
+    "PricedTerm", "TermDef", "make_term", "register_term", "with_terms",
+    "term_signature", "BASE_TERMS", "SCENARIO_TERMS", "TERM_DEFS",
+    "Catalog", "InstanceType", "make_cloud_catalog",
+    "make_tpu_catalog", "spot_catalog", "spot_risk_prices",
+    "NodePool", "simulate_cluster_autoscaler",
     "simulate_cluster_autoscaler_batch", "default_pools_for", "AllocationMetrics", "evaluate", "per_dim_utilization",
     "Scenario", "build_scenarios", "scaled_scenario", "optimize",
     "problem_from_demand", "problem_from_scenario", "OptimizeResult",

@@ -44,6 +44,8 @@ def problem_from_demand(catalog: Catalog, demand: np.ndarray,
                         allowed_idx: Optional[np.ndarray] = None,
                         existing: Optional[np.ndarray] = None,
                         normalize: bool = True,
+                        terms=(),
+                        unavailable_idx: Optional[np.ndarray] = None,
                         ) -> AllocationProblem:
     """Build the problem for a raw demand vector; with ``normalize`` (default)
     each resource row of K is divided by the demand d_r (so d == 1 in solver
@@ -51,7 +53,14 @@ def problem_from_demand(catalog: Catalog, demand: np.ndarray,
     dominates both the shortage penalty and the greedy-rounding score over CPU
     cores (O(10)). Metrics are always computed in raw units against the
     catalog. Shared by the one-shot scenario pipeline and the controller /
-    fleet-replay tick loop, so both sides solve the SAME problem."""
+    fleet-replay tick loop, so both sides solve the SAME problem.
+
+    ``terms`` attaches scenario objective terms (``repro.core.terms`` specs:
+    PricedTerm instances or ``(kind, params)`` pairs); their prices live in
+    solver units like every other objective quantity. ``unavailable_idx``
+    zeroes the listed instance types for this tick — mask, ub AND lb go to 0
+    (an interrupted spot node is gone even if it was deployed) — the hook
+    the ``spot_interruption`` availability overlay drives."""
     K, E, c = catalog.matrices()
     d = np.asarray(demand, np.float32)
     if normalize:
@@ -68,6 +77,17 @@ def problem_from_demand(catalog: Catalog, demand: np.ndarray,
         prob = prob.restrict(allowed)
     if existing is not None and np.asarray(existing).any():
         prob = prob.with_existing(np.asarray(existing, np.float32))
+    if unavailable_idx is not None and len(np.asarray(unavailable_idx)):
+        keep = np.ones(prob.n, np.float32)
+        keep[np.asarray(unavailable_idx, np.int64)] = 0.0
+        keep_j = jnp.asarray(keep)
+        # lb too: availability overrides with_existing — interrupted
+        # capacity cannot be "kept"
+        prob = prob._replace(mask=prob.mask * keep_j, ub=prob.ub * keep_j,
+                             lb=prob.lb * keep_j)
+    if terms:
+        from . import terms as _terms
+        prob = _terms.with_terms(prob, terms)
     return prob
 
 

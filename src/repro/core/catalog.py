@@ -142,6 +142,47 @@ def make_cloud_catalog(seed: int = 0, n_per_provider: int = 940) -> Catalog:
     return Catalog(out)
 
 
+def spot_catalog(catalog: Catalog, discount: float = 0.7,
+                 suffix: str = "#spot"):
+    """Append a spot/preemptible twin of every instance type at
+    ``(1 - discount)`` times the on-demand price.
+
+    Returns ``(catalog, spot_idx)`` — the widened catalog and the (S,)
+    indices of the spot twins.  Unlike ``extensions.tiered_catalog`` (which
+    folds interruption risk into the price as a certainty equivalent), the
+    spot price here is the TRUE discounted price: interruption risk is
+    priced separately via the ``spot_risk`` objective term
+    (:func:`spot_risk_prices`), and availability is driven per tick by the
+    ``spot_interruption`` trace overlay (``repro.fleet.traces``) zeroing
+    interrupted twins' capacity (mask/bounds) — so risk stays visible in
+    the objective split instead of hiding in the catalog."""
+    from dataclasses import replace
+
+    assert 0.0 < discount < 1.0, discount
+    out = list(catalog.instances)
+    spot: List[int] = []
+    for it in catalog.instances:
+        spot.append(len(out))
+        out.append(replace(
+            it, name=it.name + suffix,
+            hourly_price=round(it.hourly_price * (1.0 - discount), 6)))
+    return Catalog(out), np.asarray(spot, np.int64)
+
+
+def spot_risk_prices(catalog: Catalog, spot_idx: np.ndarray,
+                     rate: float = 0.05,
+                     penalty_hours: float = 2.0) -> np.ndarray:
+    """Per-type ``spot_risk`` term prices: the certainty-equivalent
+    interruption surcharge ``rate * penalty_hours * hourly_price`` on each
+    spot twin, zero on on-demand types.  Attach with
+    ``make_term("spot_risk", risk=...)`` so the surcharge shows up as its
+    own objective term rather than a repriced catalog."""
+    risk = np.zeros(catalog.n, np.float32)
+    for j in np.asarray(spot_idx, np.int64):
+        risk[j] = rate * penalty_hours * catalog.instances[int(j)].hourly_price
+    return risk
+
+
 def make_tpu_catalog(seed: int = 0) -> Catalog:
     """Accelerator-slice catalog for the framework integration. Resources map
     to: cpu -> chips, mem_gb -> HBM GB, net_units -> ICI GB/s (aggregate),

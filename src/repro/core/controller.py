@@ -64,6 +64,14 @@ class InfrastructureOptimizationController:
     normalize: bool = True                       # demand-normalized solver units
     x_current: np.ndarray = None                 # set on first step
     history: List[ControllerStep] = field(default_factory=list)
+    # scenario surface (repro.core.terms / docs/scenarios.md): ``terms`` is a
+    # static tuple of scenario-term specs attached to EVERY tick's problem;
+    # ``spot_idx``/``spot_availability`` drive the per-tick spot overlay —
+    # availability row t (clamped to the last row) zeroes the interrupted
+    # spot types' capacity for the tick the controller is about to solve.
+    terms: tuple = ()
+    spot_idx: Optional[np.ndarray] = None        # (S,) catalog spot-twin idx
+    spot_availability: Optional[np.ndarray] = None   # (T', S) in {0, 1}
     # opt-in solver observability: when True, every warm solve also captures
     # the engine's per-iteration convergence rows (core.pgd.PGDTrace, one
     # entry per warm tick on ``solver_traces``). The traced program computes
@@ -79,10 +87,26 @@ class InfrastructureOptimizationController:
         """Build this tick's AllocationProblem — the same construction as the
         one-shot api.optimize pipeline, so a constant-demand replay reproduces
         the single-shot result. Also used by the batched fleet replay engine,
-        which stacks these per-tenant problems into one padded batch."""
+        which stacks these per-tenant problems into one padded batch.
+
+        The current tick index is ``len(self.history)`` (the step being
+        built has not been applied yet) — identical in the sequential and
+        batched engines, so the spot overlay stays bit-exact across them.
+        The MPC controller builds its whole lookahead window through this
+        method before advancing history, so a tick's availability applies
+        to all window rows: interruptions are observed, not forecast, and
+        an observed outage is assumed to persist over the horizon."""
+        unavailable = None
+        if self.spot_idx is not None and self.spot_availability is not None:
+            avail = np.asarray(self.spot_availability)
+            t = min(len(self.history), len(avail) - 1)
+            spot = np.asarray(self.spot_idx, np.int64)
+            unavailable = spot[avail[t] <= 0.0]
         return problem_from_demand(self.catalog, demand, params=self.params,
                                    allowed_idx=self.allowed_idx,
-                                   normalize=self.normalize)
+                                   normalize=self.normalize,
+                                   terms=self.terms,
+                                   unavailable_idx=unavailable)
 
     # back-compat alias (pre-docs name)
     _problem = make_problem

@@ -8,7 +8,9 @@ cluster churn — the paper's "bounded perturbation" methodology.
 ``solve_incremental`` (the warm tick of both the myopic controller and —
 under vmap — the batched fleet engine ``solve_fleet_step``) runs the shared
 Barzilai-Borwein + Armijo projected-gradient engine (``core.pgd``) on the
-eq.(1) objective over this feasible set: ``steps`` is an iteration BUDGET,
+objective over this feasible set — the ``repro.core.terms`` registry sum,
+so attached scenario terms (SLO pricing, priority eviction, spot risk)
+price the warm tick automatically: ``steps`` is an iteration BUDGET,
 not an exact count — the solve early-stops once an accepted step moves no
 coordinate by more than the tolerance. The H=1 time-expanded program in
 ``repro.horizon.solver`` reduces op-for-op to this function (same engine,

@@ -5,6 +5,11 @@ Given a primal candidate x, we recover (lambda, nu, omega) by non-negative
 least squares on the stationarity equation restricted to the active sets,
 then report the four KKT residual groups. The solver's output should drive
 all four to ~0 on convex instances; tests assert this.
+
+The stationarity gradient is ``core.objective.grad_objective`` — the
+``repro.core.terms`` registry sum — so every attached scenario term's
+gradient (SLO pricing, priority eviction, spot risk) enters the certificate
+automatically; no term math is duplicated here.
 """
 from __future__ import annotations
 

@@ -1,5 +1,11 @@
-"""The five-term objective of eq. (1), its analytic gradient (eq. 6), and the
-constraint machinery (log-barrier / quadratic penalty) used by the solver.
+"""The eq. (1) objective, its analytic gradient (eq. 6), and the constraint
+machinery (log-barrier / quadratic penalty) used by the solver.
+
+Term math lives in the ``repro.core.terms`` registry: the four paper terms
+plus any scenario terms attached on ``prob.terms`` (SLO pricing, priority
+eviction, spot risk).  The functions here are registry sums — base terms in
+the seed trace order, then attached terms — so a problem with ``terms=()``
+compiles to exactly the seed graph (jaxpr-identity is test-pinned).
 
 Pure jnp — every function here is jit- and vmap-safe. The fused Pallas kernel
 in ``repro.kernels.alloc_objective`` implements the batched (multi-start)
@@ -13,57 +19,48 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import terms as _terms
 from .problem import AllocationProblem
 
 # ---------------------------------------------------------------------------
-# Objective terms (paper eq. 1)
+# Objective terms (paper eq. 1 + attached scenario terms)
 # ---------------------------------------------------------------------------
 
 
 def objective_terms(prob: AllocationProblem, x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
-    """Return each named term of f(x). x: (n,)."""
-    P = prob.params
+    """Return each named term of f(x) — eq. (1) terms plus every attached
+    scenario term, one matvec pair shared across all of them. x: (n,)."""
     Kx = prob.K @ x                       # (m,)
     Ex = prob.E @ x                       # (p,)
-    base_cost = prob.c @ x
-    # alpha * p - alpha * 1^T e^{-b1 Ex}  ==  alpha * sum(1 - e^{-b1 Ex})
-    consolidation = P.alpha * jnp.sum(1.0 - jnp.exp(-P.beta1 * Ex))
-    volume_discount = -P.gamma * jnp.sum(jnp.log1p(P.beta2 * Ex))
-    shortage = jnp.maximum(prob.d - Kx, 0.0)
-    shortage_pen = P.beta3 * jnp.sum(shortage**2)
-    return {
-        "base_cost": base_cost,
-        "consolidation": consolidation,
-        "volume_discount": volume_discount,
-        "shortage": shortage_pen,
-    }
+    return _terms.term_values(prob, x, Kx, Ex)
 
 
 def objective(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
-    """f(x): the full eq. (1) objective (sum of objective_terms)."""
-    t = objective_terms(prob, x)
-    return t["base_cost"] + t["consolidation"] + t["volume_discount"] + t["shortage"]
+    """f(x): the full objective (registry sum of objective_terms)."""
+    return _terms.sum_terms(objective_terms(prob, x))
 
 
 def grad_objective(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
-    """Analytic gradient, mirroring the stationarity expression (eq. 6/8):
+    """Analytic gradient: registry sum of per-term gradients.  For the base
+    terms this is the stationarity expression (eq. 6/8):
 
       grad = c + a*b1*E^T e^{-b1 Ex} - g*b2*E^T 1/(1+b2 Ex)
                - 2*b3*K^T diag(s)(d - Kx)
     """
-    P = prob.params
     Kx = prob.K @ x
     Ex = prob.E @ x
-    g_consol = P.alpha * P.beta1 * (prob.E.T @ jnp.exp(-P.beta1 * Ex))
-    g_volume = -P.gamma * P.beta2 * (prob.E.T @ (1.0 / (1.0 + P.beta2 * Ex)))
-    shortage = jnp.maximum(prob.d - Kx, 0.0)
-    g_short = -2.0 * P.beta3 * (prob.K.T @ shortage)
-    return prob.c + g_consol + g_volume + g_short
+    return _terms.sum_terms(_terms.term_grads(prob, x, Kx, Ex))
 
 
 def value_and_grad(prob: AllocationProblem, x: jnp.ndarray):
-    """(f(x), ∇f(x)) — the oracle the Pallas kernel is validated against."""
-    return objective(prob, x), grad_objective(prob, x)
+    """(f(x), ∇f(x)) — the oracle the Pallas kernel is validated against.
+    Fused: ONE ``K@x``/``E@x`` pair feeds both the value and gradient
+    registry sums (the seed version recomputed the matvecs per side)."""
+    Kx = prob.K @ x
+    Ex = prob.E @ x
+    val = _terms.sum_terms(_terms.term_values(prob, x, Kx, Ex))
+    grad = _terms.sum_terms(_terms.term_grads(prob, x, Kx, Ex))
+    return val, grad
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,12 @@ class AllocationProblem(NamedTuple):
     ``lb``/``ub`` are per-variable box bounds — identity boxes for the root
     problem; branch-and-bound tightens them per node. ``mask`` zeroes out
     instance types that a scenario forbids (enterprise-approved lists etc.).
+
+    ``terms`` extends the objective with attached scenario terms
+    (``repro.core.terms.PricedTerm`` tuple — SLO pricing, priority
+    eviction, spot risk, ...).  The tuple structure is Python-time static:
+    the default ``()`` contributes zero pytree leaves, so problems without
+    scenario terms compile to exactly the seed graphs.
     """
 
     K: jnp.ndarray
@@ -49,6 +55,7 @@ class AllocationProblem(NamedTuple):
     lb: jnp.ndarray
     ub: jnp.ndarray
     mask: jnp.ndarray  # 1.0 = allowed, 0.0 = forbidden
+    terms: tuple = ()  # attached PricedTerm scenario terms (may be empty)
 
     @property
     def n(self) -> int:
@@ -76,6 +83,7 @@ class AllocationProblem(NamedTuple):
         ub=None,
         mask=None,
         ub_default: float = 1e4,
+        terms: tuple = (),
     ) -> "AllocationProblem":
         K = jnp.asarray(K, jnp.float32)
         E = jnp.asarray(E, jnp.float32)
@@ -95,7 +103,7 @@ class AllocationProblem(NamedTuple):
             else jnp.asarray(ub, jnp.float32)
         )
         mask = jnp.ones(n, jnp.float32) if mask is None else jnp.asarray(mask, jnp.float32)
-        return cls(K, E, c, d, mu, g, params, lb, ub, mask)
+        return cls(K, E, c, d, mu, g, params, lb, ub, mask, tuple(terms))
 
     def restrict(self, allowed_idx) -> "AllocationProblem":
         """Return a problem where only ``allowed_idx`` instance types may be

@@ -1,0 +1,348 @@
+"""Composable priced-term objective IR.
+
+Every term of the allocation objective — the four paper eq. (1) terms and
+every scenario term (SLO pricing, priority eviction, spot risk) — is one
+registered :class:`TermDef`: a ``(name, value_fn, grad_fn, param_axes)``
+record whose value/grad functions share precomputed ``K@x`` / ``E@x``
+matvecs, so ``value_and_grad`` does exactly one matvec pair no matter how
+many terms are active.  Consumers (``core.objective``, ``core.kkt``,
+``horizon``, ``fleet``) sum over the registry instead of hand-copying term
+math; one definition per term is the contract the autodiff property suite
+enforces.
+
+Scenario terms are *attached* to a problem as :class:`PricedTerm` instances
+in ``AllocationProblem.terms`` — a pytree extension alongside
+``PenaltyParams``.  The tuple's *structure* (which kinds, which param keys)
+is Python-time static: an empty ``terms=()`` contributes zero pytree leaves
+and zero traced ops, so the default compiled graphs are byte-for-byte the
+seed graphs (jaxpr-identity is test-pinned) and every bit-exactness
+contract from PRs 5-7 — batched ≡ sequential, H=1 ≡ myopic, the Pallas
+``alloc_objective`` oracle — survives unchanged.
+
+Padding-exactness discipline: every attachable term must evaluate to
+exactly ``0.0`` with exactly zero gradient when its params are zero, so
+ragged fleet stacking can zero-fill absent tenants (``fleet.batching``)
+without perturbing any trajectory bit.  All three scenario terms are linear
+in their price params, which gives this for free; new terms must keep the
+property (see docs/scenarios.md).
+
+Param axes declare how each param pads and slices under fleet stacking:
+``""`` = per-tenant scalar, ``"n"`` = per-instance-type vector, ``"m"`` =
+per-resource vector.
+"""
+from __future__ import annotations
+
+import operator
+from functools import reduce
+from typing import Callable, Dict, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .problem import AllocationProblem
+
+# ---------------------------------------------------------------------------
+# Term IR
+# ---------------------------------------------------------------------------
+
+# value/grad signature: (prob, params, x, Kx, Ex) -> scalar / (n,).
+# ``params`` is the attached PricedTerm.params dict (None for the implicit
+# base terms, which read ``prob.params`` / ``prob.c`` directly).
+TermFn = Callable[[AllocationProblem, Optional[Dict[str, jnp.ndarray]],
+                   jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+class TermDef(NamedTuple):
+    """One registered objective term.
+
+    ``param_axes`` maps each param name to its stacking axis ("" scalar,
+    "n" per-type, "m" per-resource).  Base eq. (1) terms have no params
+    (they read ``prob.params``) and are implicitly always active; only
+    terms WITH declared params can be attached via :func:`make_term`.
+    """
+
+    name: str
+    value: TermFn
+    grad: TermFn
+    param_axes: Mapping[str, str]
+
+
+@jax.tree_util.register_pytree_node_class
+class PricedTerm:
+    """A scenario term attached to a problem: a registry kind plus its
+    priced params.  Registered as a pytree whose leaves are the param
+    arrays (sorted by key) and whose aux data ``(kind, keys)`` is static —
+    jit caches key on the term *structure* while prices stay traced, and
+    ``tree_map`` slicing/stacking (horizon ticks, fleet lanes) works on
+    terms exactly as on every other problem field."""
+
+    __slots__ = ("kind", "params")
+
+    def __init__(self, kind: str, params: Dict[str, jnp.ndarray]):
+        self.kind = str(kind)
+        self.params = dict(params)
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.params))
+        return tuple(self.params[k] for k in keys), (self.kind, keys)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, keys = aux
+        return cls(kind, dict(zip(keys, children)))
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        inner = ", ".join(f"{k}={v!r}" for k, v in sorted(self.params.items()))
+        return f"PricedTerm({self.kind!r}, {inner})"
+
+
+# ---------------------------------------------------------------------------
+# Base terms (paper eq. 1) — implicit, always active
+# ---------------------------------------------------------------------------
+
+
+def _base_cost_value(prob, params, x, Kx, Ex):
+    return prob.c @ x
+
+
+def _base_cost_grad(prob, params, x, Kx, Ex):
+    return prob.c
+
+
+def _consolidation_value(prob, params, x, Kx, Ex):
+    P = prob.params
+    # alpha * p - alpha * 1^T e^{-b1 Ex}  ==  alpha * sum(1 - e^{-b1 Ex})
+    return P.alpha * jnp.sum(1.0 - jnp.exp(-P.beta1 * Ex))
+
+
+def _consolidation_grad(prob, params, x, Kx, Ex):
+    P = prob.params
+    return P.alpha * P.beta1 * (prob.E.T @ jnp.exp(-P.beta1 * Ex))
+
+
+def _volume_discount_value(prob, params, x, Kx, Ex):
+    P = prob.params
+    return -P.gamma * jnp.sum(jnp.log1p(P.beta2 * Ex))
+
+
+def _volume_discount_grad(prob, params, x, Kx, Ex):
+    P = prob.params
+    return -P.gamma * P.beta2 * (prob.E.T @ (1.0 / (1.0 + P.beta2 * Ex)))
+
+
+def _shortage_value(prob, params, x, Kx, Ex):
+    P = prob.params
+    shortage = jnp.maximum(prob.d - Kx, 0.0)
+    return P.beta3 * jnp.sum(shortage**2)
+
+
+def _shortage_grad(prob, params, x, Kx, Ex):
+    P = prob.params
+    shortage = jnp.maximum(prob.d - Kx, 0.0)
+    return -2.0 * P.beta3 * (prob.K.T @ shortage)
+
+
+# ---------------------------------------------------------------------------
+# Scenario terms — attachable, priced, zero-at-zero-params
+# ---------------------------------------------------------------------------
+
+
+def _slo_penalty_value(prob, params, x, Kx, Ex):
+    # price * sum max(d - Kx, 0): an L1 shortage price in $/unit-shortage —
+    # the *linear* SLO cost on top of the quadratic eq. (1) smoothing term,
+    # so slo_violation_ticks becomes an objective cost, not a metric.
+    return params["price"] * jnp.sum(jnp.maximum(prob.d - Kx, 0.0))
+
+
+def _slo_penalty_grad(prob, params, x, Kx, Ex):
+    # Subgradient with the 0 choice at the hinge — exact ties only occur on
+    # zero-padded rows where the K column is zero too, so this matches
+    # jax.grad everywhere it matters (property-tested).
+    live = (prob.d - Kx > 0.0).astype(x.dtype)
+    return -params["price"] * (prob.K.T @ live)
+
+
+def _priority_eviction_value(prob, params, x, Kx, Ex):
+    # price @ x: holding capacity costs eviction exposure. High-priority
+    # tenants carry price 0; lower classes pay per node held, scaled by
+    # fleet high-priority pressure (see fleet.scenarios).
+    return params["price"] @ x
+
+
+def _priority_eviction_grad(prob, params, x, Kx, Ex):
+    return params["price"]
+
+
+def _spot_risk_value(prob, params, x, Kx, Ex):
+    # risk @ x: certainty-equivalent interruption surcharge on spot twins
+    # (rate x penalty-hours x spot price), kept OUT of c so the catalog
+    # lists the true spot price and the risk stays a visible priced term.
+    return params["risk"] @ x
+
+
+def _spot_risk_grad(prob, params, x, Kx, Ex):
+    return params["risk"]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+# Order is contractual: base terms trace in this order so the default
+# objective/grad graphs are jaxpr-identical to the seed implementation.
+BASE_TERMS: Tuple[str, ...] = (
+    "base_cost", "consolidation", "volume_discount", "shortage")
+
+TERM_DEFS: Dict[str, TermDef] = {}
+
+
+def register_term(name: str, value: TermFn, grad: TermFn,
+                  param_axes: Optional[Mapping[str, str]] = None) -> TermDef:
+    """Register a term definition. Attachable terms must declare
+    ``param_axes``; axis values must be one of "", "n", "m"."""
+    axes = dict(param_axes or {})
+    bad = {k: ax for k, ax in axes.items() if ax not in ("", "n", "m")}
+    if bad:
+        raise ValueError(f"invalid param axes for term {name!r}: {bad}")
+    if name in TERM_DEFS:
+        raise ValueError(f"term {name!r} already registered")
+    td = TermDef(name, value, grad, axes)
+    TERM_DEFS[name] = td
+    return td
+
+
+register_term("base_cost", _base_cost_value, _base_cost_grad)
+register_term("consolidation", _consolidation_value, _consolidation_grad)
+register_term("volume_discount", _volume_discount_value, _volume_discount_grad)
+register_term("shortage", _shortage_value, _shortage_grad)
+
+register_term("slo_penalty", _slo_penalty_value, _slo_penalty_grad,
+              {"price": ""})
+register_term("priority_eviction", _priority_eviction_value,
+              _priority_eviction_grad, {"price": "n"})
+register_term("spot_risk", _spot_risk_value, _spot_risk_grad,
+              {"risk": "n"})
+
+#: Attachable (scenario) kinds, in registration order.
+SCENARIO_TERMS: Tuple[str, ...] = tuple(
+    k for k in TERM_DEFS if TERM_DEFS[k].param_axes)
+
+
+def make_term(kind: str, **params) -> PricedTerm:
+    """Build a :class:`PricedTerm` for a registered attachable kind.
+
+    Rejects unknown kinds, implicit (base) kinds, and unknown/missing
+    params — mirroring the strict-kwarg discipline of ``make_trace``.
+    """
+    td = TERM_DEFS.get(kind)
+    if td is None:
+        raise ValueError(
+            f"unknown term kind {kind!r}; known: {sorted(TERM_DEFS)}")
+    if not td.param_axes:
+        raise ValueError(
+            f"term {kind!r} is implicit (always active via prob.params) "
+            "and cannot be attached")
+    expected, got = set(td.param_axes), set(params)
+    if got != expected:
+        raise ValueError(
+            f"term {kind!r} expects params {sorted(expected)}, got "
+            f"{sorted(got)}")
+    return PricedTerm(
+        kind, {k: jnp.asarray(v, jnp.float32) for k, v in params.items()})
+
+
+def normalize_terms(terms) -> Tuple[PricedTerm, ...]:
+    """Coerce a terms spec — PricedTerm instances and/or ``(kind, params)``
+    pairs — into a validated tuple with unique kinds."""
+    out = []
+    for t in terms or ():
+        if isinstance(t, PricedTerm):
+            t = make_term(t.kind, **t.params)  # re-validate + cast
+        else:
+            kind, params = t
+            t = make_term(kind, **dict(params))
+        out.append(t)
+    kinds = [t.kind for t in out]
+    if len(set(kinds)) != len(kinds):
+        raise ValueError(f"duplicate term kinds: {kinds}")
+    return tuple(out)
+
+
+def _axis_size(prob: AllocationProblem, axis: str) -> Tuple[int, ...]:
+    return {"": (), "n": (prob.n,), "m": (prob.m,)}[axis]
+
+
+def with_terms(prob: AllocationProblem, terms) -> AllocationProblem:
+    """Attach a validated terms tuple to ``prob`` (shape-checked against
+    the problem's n/m extents)."""
+    tup = normalize_terms(terms)
+    for t in tup:
+        for k, ax in TERM_DEFS[t.kind].param_axes.items():
+            want = _axis_size(prob, ax)
+            got = tuple(t.params[k].shape)
+            if got != want:
+                raise ValueError(
+                    f"term {t.kind!r} param {k!r}: expected shape {want} "
+                    f"(axis {ax!r}), got {got}")
+    return prob._replace(terms=tup)
+
+
+def term_signature(prob: AllocationProblem) -> Tuple[str, ...]:
+    """The static kind tuple of a problem's attached terms."""
+    return tuple(t.kind for t in prob.terms)
+
+
+# ---------------------------------------------------------------------------
+# Registry sums — the one place term math is combined
+# ---------------------------------------------------------------------------
+
+
+def term_values(prob: AllocationProblem, x: jnp.ndarray,
+                Kx: jnp.ndarray, Ex: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Every active term's value: base terms first (seed trace order), then
+    attached scenario terms in attachment order."""
+    out = {}
+    for name in BASE_TERMS:
+        out[name] = TERM_DEFS[name].value(prob, None, x, Kx, Ex)
+    for t in prob.terms:
+        out[t.kind] = TERM_DEFS[t.kind].value(prob, t.params, x, Kx, Ex)
+    return out
+
+
+def term_grads(prob: AllocationProblem, x: jnp.ndarray,
+               Kx: jnp.ndarray, Ex: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Every active term's analytic gradient, same order as term_values."""
+    out = {}
+    for name in BASE_TERMS:
+        out[name] = TERM_DEFS[name].grad(prob, None, x, Kx, Ex)
+    for t in prob.terms:
+        out[t.kind] = TERM_DEFS[t.kind].grad(prob, t.params, x, Kx, Ex)
+    return out
+
+
+def sum_terms(terms: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Left-associated sum in dict order — preserves the seed float
+    association so default graphs stay jaxpr-identical."""
+    return reduce(operator.add, terms.values())
+
+
+def active_value(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
+    """Sum of the ATTACHED scenario terms only (excludes base terms) — the
+    additive hook for hand-batched paths (fleet kernel hot loop) that keep
+    their own base-term math.  Callers gate on ``if prob.terms:`` so the
+    default graph is untouched."""
+    Kx = prob.K @ x
+    Ex = prob.E @ x
+    vals = [TERM_DEFS[t.kind].value(prob, t.params, x, Kx, Ex)
+            for t in prob.terms]
+    return reduce(operator.add, vals) if vals else jnp.asarray(0.0, x.dtype)
+
+
+def active_grad(prob: AllocationProblem, x: jnp.ndarray) -> jnp.ndarray:
+    """Gradient counterpart of :func:`active_value`."""
+    Kx = prob.K @ x
+    Ex = prob.E @ x
+    grads = [TERM_DEFS[t.kind].grad(prob, t.params, x, Kx, Ex)
+             for t in prob.terms]
+    return (reduce(operator.add, grads) if grads
+            else jnp.zeros_like(x))

@@ -25,6 +25,10 @@ tenant clusters a first-class path:
                  drive the myopic controller or the forecast-driven
                  receding-horizon controller (``controller="mpc"``,
                  see ``repro.horizon``).
+  * scenarios  — fleet builders for the priced-term objective IR
+                 (``repro.core.terms``): SLO-credit pricing, priority
+                 classes, and the spot market (discounted catalog twins +
+                 interruption risk term + seeded availability overlay).
   * metrics    — fleet/time aggregation: cost integral, SLO-violation ticks,
                  churn, fragmentation.
 
@@ -34,23 +38,28 @@ Documentation: docs/fleet.md (subsystem guide), docs/architecture.md
 from .batching import (BucketedFleet, FleetBatch, bucket_dims,
                        bucket_problems, ceil_pow2, embed_solutions,
                        padding_stats, scatter_from_buckets, stack_problems,
-                       tenant_problem, unstack_solution)
+                       tenant_problem, union_term_kinds, unstack_solution)
 from .solver import (FleetSolveResult, FleetStepResult, make_fleet_starts,
                      solve_fleet, solve_fleet_bucketed, solve_fleet_step)
 from .traces import (TRACE_KINDS, constant_trace, diurnal_trace,
-                     flash_crowd_trace, make_trace, ramp_trace, weekly_trace)
+                     flash_crowd_trace, make_trace, ramp_trace,
+                     spot_interruption_trace, weekly_trace)
 from .metrics import FleetReplayMetrics, TenantReplayMetrics
 from .replay import FleetReplayResult, TenantSpec, replay_fleet
+from .scenarios import (PRIORITY_CLASSES, make_spot_fleet,
+                        with_priority_classes, with_slo_pricing)
 
 __all__ = [
     "FleetBatch", "stack_problems", "unstack_solution", "embed_solutions",
-    "tenant_problem",
+    "tenant_problem", "union_term_kinds",
     "BucketedFleet", "bucket_dims", "bucket_problems", "ceil_pow2",
     "scatter_from_buckets", "padding_stats",
     "FleetSolveResult", "solve_fleet", "solve_fleet_bucketed",
     "FleetStepResult", "solve_fleet_step", "make_fleet_starts",
     "diurnal_trace", "flash_crowd_trace", "ramp_trace", "weekly_trace",
-    "constant_trace", "make_trace", "TRACE_KINDS",
+    "constant_trace", "spot_interruption_trace", "make_trace", "TRACE_KINDS",
     "TenantSpec", "replay_fleet", "FleetReplayResult",
     "TenantReplayMetrics", "FleetReplayMetrics",
+    "PRIORITY_CLASSES", "with_slo_pricing", "with_priority_classes",
+    "make_spot_fleet",
 ]

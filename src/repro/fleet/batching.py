@@ -14,7 +14,13 @@ Padding is EXACT, not approximate:
     residual band is -1 <= 0 <= 1: strictly interior (log-barrier term
     log(1)=0) and never violated;
   * padded provider rows are all-zero in E, so 1 - exp(-b1*(Ex=0)) = 0 — the
-    consolidation and volume-discount sums are unchanged.
+    consolidation and volume-discount sums are unchanged;
+  * attached scenario terms (``prob.terms``) stack on the UNION of the
+    batch's term kinds: params pad along their declared axis ("" scalar /
+    "n" / "m" — see ``repro.core.terms``), and tenants missing a kind get
+    all-zero params. Every registered term is linear in its params and
+    hinges at zero on padded rows, so a zero-priced term contributes
+    exactly 0.0 value and zero gradient — stacking stays exact.
 
 Hence objective(padded, embed(x)) == objective(original, x) exactly, and a
 solve on the stacked batch is equivalent to B independent solves.
@@ -38,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.problem import AllocationProblem, PenaltyParams
+from repro.core.terms import TERM_DEFS, PricedTerm
 from repro.obs.telemetry import current_recorder
 
 
@@ -85,16 +92,65 @@ def _pad1(a: np.ndarray, size: int, fill: float = 0.0) -> np.ndarray:
     return out
 
 
+def union_term_kinds(problems: Sequence[AllocationProblem]) -> Tuple[str, ...]:
+    """The union of attached term kinds across ``problems``, in first-
+    appearance order — the batch-level term signature stacking uses."""
+    kinds: List[str] = []
+    for pb in problems:
+        for t in pb.terms:
+            if t.kind not in kinds:
+                kinds.append(t.kind)
+    return tuple(kinds)
+
+
+def _term_pad_shape(axis: str, n_max: int, m_max: int) -> Tuple[int, ...]:
+    return {"": (), "n": (n_max,), "m": (m_max,)}[axis]
+
+
+def _stack_terms(problems: Sequence[AllocationProblem],
+                 kinds: Tuple[str, ...], n_max: int,
+                 m_max: int) -> Tuple[PricedTerm, ...]:
+    """Stack each union kind's params with a leading (B,) axis: params pad
+    along their declared axis; tenants without the kind get zeros (an exact
+    no-op — every term is zero-valued with zero grad at zero params)."""
+    out = []
+    for kind in kinds:
+        axes = TERM_DEFS[kind].param_axes
+        per_param: Dict[str, List[np.ndarray]] = {k: [] for k in axes}
+        for pb in problems:
+            present = {t.kind: t for t in pb.terms}
+            for k, ax in axes.items():
+                if kind in present:
+                    a = np.asarray(present[kind].params[k], np.float32)
+                    if ax != "":
+                        a = _pad1(a, n_max if ax == "n" else m_max)
+                else:
+                    a = np.zeros(_term_pad_shape(ax, n_max, m_max),
+                                 np.float32)
+                per_param[k].append(a)
+        out.append(PricedTerm(kind, {k: jnp.asarray(np.stack(v))
+                                     for k, v in per_param.items()}))
+    return tuple(out)
+
+
 def stack_problems(problems: Sequence[AllocationProblem],
                    n_max: Optional[int] = None,
                    m_max: Optional[int] = None,
                    p_max: Optional[int] = None,
-                   active: Optional[np.ndarray] = None) -> FleetBatch:
+                   active: Optional[np.ndarray] = None,
+                   term_kinds: Optional[Tuple[str, ...]] = None) -> FleetBatch:
     """Stack ragged problems into one padded batch problem.
 
     ``active`` optionally attaches a (B,) per-tenant liveness mask (see
     :class:`FleetBatch`); stacking itself treats live and frozen tenants
     identically.
+
+    ``term_kinds`` forces the stacked term signature (default: the union of
+    the problems' attached kinds, first-appearance order). The batched MPC
+    replay uses it to stack every tenant's window with the BUCKET's union
+    signature so the per-tenant stacks share one treedef; kinds a tenant
+    lacks get zero params — an exact no-op by the registry's
+    zero-at-zero-params contract.
 
     When a telemetry recorder is installed (``repro.obs``), each stacking
     samples the ``stack/padding_waste`` gauge — the fraction of K-matrix
@@ -131,13 +187,16 @@ def stack_problems(problems: Sequence[AllocationProblem],
     params = PenaltyParams(*(jnp.stack([jnp.asarray(getattr(p, f), jnp.float32)
                                         for p in par])
                              for f in PenaltyParams._fields))
+    kinds = (union_term_kinds(problems) if term_kinds is None
+             else tuple(term_kinds))
     stacked = AllocationProblem(
         K=jnp.asarray(np.stack(K)), E=jnp.asarray(np.stack(E)),
         c=jnp.asarray(np.stack(c)), d=jnp.asarray(np.stack(d)),
         mu=jnp.asarray(np.stack(mu)), g=jnp.asarray(np.stack(g)),
         params=params,
         lb=jnp.asarray(np.stack(lb)), ub=jnp.asarray(np.stack(ub)),
-        mask=jnp.asarray(np.stack(mask)))
+        mask=jnp.asarray(np.stack(mask)),
+        terms=_stack_terms(problems, kinds, n_max, m_max))
     rec = current_recorder()
     if rec is not None:
         true_cells = sum(n * m for n, m in zip(ns, ms))
@@ -168,16 +227,30 @@ def tenant_problem(batch: FleetBatch, b: int) -> AllocationProblem:
     """Recover tenant ``b``'s ORIGINAL (unpadded) problem from the batch.
 
     Padding only appends rows/columns, so slicing the true leading extents
-    back out reproduces the pre-stacking problem exactly (bit-for-bit)."""
+    back out reproduces the pre-stacking problem exactly (bit-for-bit).
+    Terms carry the BATCH's union signature: a tenant that lacked one of
+    the batch's kinds comes back with that kind at zero params — an exact
+    objective/gradient no-op, not a numeric perturbation."""
     n = int(batch.n_true[b])
     m = int(batch.m_true[b])
     p = int(batch.p_true[b])
     pb = batch.problem
+
+    def _slice_param(a, axis):
+        if axis == "":
+            return a[b]
+        return a[b, :n] if axis == "n" else a[b, :m]
+
+    terms = tuple(
+        PricedTerm(t.kind,
+                   {k: _slice_param(t.params[k], ax)
+                    for k, ax in TERM_DEFS[t.kind].param_axes.items()})
+        for t in pb.terms)
     return AllocationProblem(
         K=pb.K[b, :m, :n], E=pb.E[b, :p, :n], c=pb.c[b, :n], d=pb.d[b, :m],
         mu=pb.mu[b, :m], g=pb.g[b, :m],
         params=jax.tree_util.tree_map(lambda a: a[b], pb.params),
-        lb=pb.lb[b, :n], ub=pb.ub[b, :n], mask=pb.mask[b, :n])
+        lb=pb.lb[b, :n], ub=pb.ub[b, :n], mask=pb.mask[b, :n], terms=terms)
 
 
 # ---------------------------------------------------------------------------

@@ -70,7 +70,8 @@ from repro.core.metrics import AllocationMetrics, evaluate
 from repro.core.problem import PenaltyParams
 from repro.obs.telemetry import gauge, span
 
-from .batching import bucket_dims, embed_solutions, stack_problems
+from .batching import (bucket_dims, embed_solutions, stack_problems,
+                       union_term_kinds)
 from .metrics import FleetReplayMetrics, TenantReplayMetrics, tenant_metrics
 from .solver import make_fleet_starts, solve_fleet, solve_fleet_step
 
@@ -93,6 +94,14 @@ class TenantSpec:
     catalog: Optional[Catalog] = None            # overrides the fleet catalog
     ca_pool_idx: Optional[np.ndarray] = None     # CA node pools (default: the
                                                  # cheapest covering types)
+    # scenario surface (repro.core.terms / docs/scenarios.md): ``terms`` is a
+    # static tuple of scenario-term specs (PricedTerm or (kind, params))
+    # attached to every tick's problem; the spot pair drives the per-tick
+    # availability overlay — ``spot_availability`` row t zeroes the
+    # interrupted ``spot_idx`` types' capacity (mask/ub/lb) for that tick.
+    terms: tuple = ()
+    spot_idx: Optional[np.ndarray] = None        # (S,) catalog spot-twin idx
+    spot_availability: Optional[np.ndarray] = None   # (T', S) in {0, 1}
 
     def __post_init__(self) -> None:
         """Fail fast on malformed traces (see class docstring)."""
@@ -116,6 +125,20 @@ class TenantSpec:
                 f"resource columns but the catalog's resource dim is {m} "
                 f"(demand rows must be ordered like "
                 f"repro.core.catalog.RESOURCES)")
+        if (self.spot_idx is None) != (self.spot_availability is None):
+            raise ValueError(
+                f"TenantSpec {self.name!r}: spot_idx and spot_availability "
+                f"must be given together (the availability overlay needs "
+                f"both the spot-twin indices and their on/off trace)")
+        if self.spot_availability is not None:
+            avail = np.asarray(self.spot_availability)
+            n_spot = len(np.asarray(self.spot_idx))
+            if avail.ndim != 2 or avail.shape[1] != n_spot:
+                raise ValueError(
+                    f"TenantSpec {self.name!r}: spot_availability must be a "
+                    f"2-D (T', S) array with S == len(spot_idx) == {n_spot}, "
+                    f"got shape {avail.shape} (make it with "
+                    f"make_trace('spot_interruption', ...))")
 
 
 @dataclass
@@ -256,7 +279,8 @@ def _make_controller(catalog: Catalog, spec: TenantSpec
     return InfrastructureOptimizationController(
         catalog=spec.catalog or catalog, delta_max=spec.delta_max,
         params=spec.params, n_starts=spec.n_starts,
-        allowed_idx=spec.allowed_idx)
+        allowed_idx=spec.allowed_idx, terms=spec.terms,
+        spot_idx=spec.spot_idx, spot_availability=spec.spot_availability)
 
 
 def _make_mpc_controller(catalog: Catalog, spec: TenantSpec, *, horizon: int,
@@ -279,7 +303,9 @@ def _make_mpc_controller(catalog: Catalog, spec: TenantSpec, *, horizon: int,
     return ModelPredictiveController(
         catalog=spec.catalog or catalog, delta_max=spec.delta_max,
         params=spec.params, n_starts=spec.n_starts,
-        allowed_idx=spec.allowed_idx, horizon=horizon, forecaster=fc,
+        allowed_idx=spec.allowed_idx, terms=spec.terms,
+        spot_idx=spec.spot_idx, spot_availability=spec.spot_availability,
+        horizon=horizon, forecaster=fc,
         coupling_w=coupling_w, coupling_eps=coupling_eps,
         solver_steps=solver_steps, solver_config=solver_config,
         cold_start=cold_start)
@@ -586,10 +612,15 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                         ctls[b].plan = np.tile(x, (horizon, 1))
                 continue
             # warm tick: stack each tenant's H-tick window at the bucket's
-            # pad dims, then one vmapped horizon solve for the whole bucket
+            # pad dims, then one vmapped horizon solve for the whole bucket.
+            # Every per-tenant stack is forced to the BUCKET's union term
+            # signature (absent tenants get exact-no-op zero params) so the
+            # window pytrees share one treedef and tree_map can batch them.
             with span("replay/stack", cat="replay", bucket=str(key)):
+                kinds = union_term_kinds([windows[b][0] for b in idx])
                 stacked = [stack_problems(windows[b], n_max=n_pad,
-                                          m_max=m_pad, p_max=p_pad).problem
+                                          m_max=m_pad, p_max=p_pad,
+                                          term_kinds=kinds).problem
                            for b in idx]
                 prob_bh = jax.tree_util.tree_map(
                     lambda *leaves: jnp.stack(leaves), *stacked)

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import terms as core_terms
 from repro.core.incremental import solve_incremental_info
 from repro.core.multistart import make_starts
 from repro.core.pgd import PGDTrace
@@ -83,14 +84,34 @@ def _residuals(prob: AllocationProblem, X: jnp.ndarray):
     return lo, hi
 
 
+def _terms_value(prob: AllocationProblem, X: jnp.ndarray) -> jnp.ndarray:
+    """(B, T) sum of attached scenario-term values — the registry's additive
+    hook for the hand-batched hot loop (the Pallas kernel computes only the
+    four base terms; its oracle contract is untouched)."""
+    return jax.vmap(lambda pb, Xt: jax.vmap(
+        lambda x: core_terms.active_value(pb, x))(Xt))(prob, X)
+
+
+def _terms_grad(prob: AllocationProblem, X: jnp.ndarray) -> jnp.ndarray:
+    """(B, T, n) gradient counterpart of :func:`_terms_value`."""
+    return jax.vmap(lambda pb, Xt: jax.vmap(
+        lambda x: core_terms.active_grad(pb, x))(Xt))(prob, X)
+
+
 def _objective_value(prob: AllocationProblem, X: jnp.ndarray) -> jnp.ndarray:
     """Objective values only for X (B, T, n) — the Armijo-ladder evaluation.
     The gradient (kernel path) is evaluated once per iteration at the
-    ACCEPTED point, exactly like core.solver._pgd."""
+    ACCEPTED point, exactly like core.solver._pgd.  Attached scenario terms
+    add on top of the kernel's base-term value; the ``if prob.terms:`` gate
+    is Python-static, so the default (no-terms) compiled graph is the seed
+    graph byte-for-byte."""
     P = prob.params
-    return alloc_objective_fleet_value(X, prob.K, prob.E, prob.c, prob.d,
-                                       P.alpha, P.beta1, P.beta2, P.beta3,
-                                       P.gamma)
+    val = alloc_objective_fleet_value(X, prob.K, prob.E, prob.c, prob.d,
+                                      P.alpha, P.beta1, P.beta2, P.beta3,
+                                      P.gamma)
+    if prob.terms:
+        val = val + _terms_value(prob, X)
+    return val
 
 
 def _constraint_values(prob: AllocationProblem, X: jnp.ndarray,
@@ -150,9 +171,13 @@ def _pgd_fleet(prob, X0, barrier_t, penalty_w, strict, cfg: SolverConfig,
 
     def G_at(Xc):
         """Composite gradient at the (B, S, n) iterate — the hot call routed
-        through the batched Pallas kernel (or its einsum oracle)."""
+        through the batched Pallas kernel (or its einsum oracle); attached
+        scenario terms add their registry gradients on top (statically
+        absent when ``prob.terms`` is empty)."""
         _, g = fleet_value_and_grad(prob, Xc, interpret=interpret,
                                     use_kernel=use_kernel)
+        if prob.terms:
+            g = g + _terms_grad(prob, Xc)
         bgrad, qgrad = _constraint_grads(prob, Xc, barrier_t, penalty_w)
         return g + jnp.where(strict[..., None], bgrad, qgrad)
 

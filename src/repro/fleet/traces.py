@@ -89,12 +89,46 @@ def constant_trace(base: np.ndarray, T: int) -> np.ndarray:
     return np.tile(base[None, :], (T, 1))
 
 
+def spot_interruption_trace(base: np.ndarray, T: int, *, rate: float = 0.08,
+                            mean_outage: float = 3.0,
+                            seed: int = 0) -> np.ndarray:
+    """Seeded spot AVAILABILITY overlay: (T, S) array in {0.0, 1.0}.
+
+    The one registry kind that is not a demand trace: ``base``'s LENGTH
+    sets the number of independent spot pools S (its values are unused) and
+    each column is an on/off Markov chain — an available pool is
+    interrupted with probability ``rate`` per tick and recovers with
+    probability ``1/mean_outage`` (geometric outage lengths, mean
+    ``mean_outage`` ticks). All pools start available. Consumers
+    (``repro.fleet.replay`` via ``TenantSpec.spot_availability``) zero an
+    interrupted pool's capacity for the tick: mask/ub/lb of its catalog
+    spot twins go to 0, so the controller must rebuy on-demand or eat the
+    shortage — the repricing the ``spot_risk`` term anticipates."""
+    base = np.asarray(base, np.float64)
+    assert base.ndim == 1 and len(base) >= 1, base.shape
+    assert 0.0 <= rate <= 1.0 and mean_outage >= 1.0, (rate, mean_outage)
+    S = len(base)
+    rng = np.random.default_rng(seed)
+    recover = 1.0 / mean_outage
+    avail = np.ones(S, np.float64)
+    out = np.empty((T, S), np.float64)
+    for t in range(T):
+        out[t] = avail
+        u = rng.random(S)
+        # up pools fail w.p. rate; down pools recover w.p. 1/mean_outage
+        avail = np.where(avail > 0.0,
+                         (u >= rate).astype(np.float64),
+                         (u < recover).astype(np.float64))
+    return out
+
+
 TRACE_KINDS: Dict[str, Callable] = {
     "diurnal": diurnal_trace,
     "flash_crowd": flash_crowd_trace,
     "ramp": ramp_trace,
     "weekly": weekly_trace,
     "constant": constant_trace,
+    "spot_interruption": spot_interruption_trace,
 }
 
 

@@ -32,9 +32,10 @@ from .forecast import (FORECASTER_KINDS, EWMAForecaster, Forecaster,
                        HoltWintersForecaster, LastValueForecaster,
                        OracleForecaster, make_forecaster)
 from .problem import (DEFAULT_COUPLING_EPS, DEFAULT_COUPLING_W,
-                      HorizonProblem, churn_bound_grad, churn_bound_penalty,
-                      commit_coupling_grad, commit_coupling_penalty,
-                      coupling_grad, coupling_penalty, expand_problems,
+                      HorizonProblem, HorizonTermDef, churn_bound_grad,
+                      churn_bound_penalty, commit_coupling_grad,
+                      commit_coupling_penalty, coupling_grad,
+                      coupling_penalty, coupling_term_defs, expand_problems,
                       horizon_objective, horizon_objective_terms,
                       smoothed_churn, tick_problem)
 from .admm import (ADMMDiag, ADMMTrace, admm_residual_history,
@@ -53,6 +54,7 @@ __all__ = [
     "HorizonProblem", "expand_problems", "tick_problem",
     "horizon_objective", "horizon_objective_terms",
     "coupling_penalty", "coupling_grad", "smoothed_churn",
+    "HorizonTermDef", "coupling_term_defs",
     "commit_coupling_penalty", "commit_coupling_grad",
     "churn_bound_penalty", "churn_bound_grad",
     "DEFAULT_COUPLING_W", "DEFAULT_COUPLING_EPS", "DEFAULT_PENALTY_W",

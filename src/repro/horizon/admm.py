@@ -76,8 +76,8 @@ import repro.core.objective as obj
 from repro.core.incremental import project_incremental
 from repro.core.pgd import PGDConfig, pgd_minimize
 
-from .problem import (HorizonProblem, churn_bound_grad, commit_coupling_grad,
-                      coupling_grad, smoothed_churn, tick_problem)
+from .problem import (HorizonProblem, coupling_term_defs, smoothed_churn,
+                      tick_problem)
 
 
 class ADMMDiag(NamedTuple):
@@ -194,12 +194,16 @@ def admm_solve_plan(hp: HorizonProblem, x_current: jnp.ndarray,
 
         return pgd_minimize(val, grd, prj, x0, inner_cfg)
 
+    # g(Z)'s gradient is the window-level registry list (coupling, commit,
+    # churn bound) accumulated in contractual order — the same definitions
+    # every other engine sums, no hand-copied grads
+    tdefs = coupling_term_defs(hp, x_current, delta_max, delta_penalty_w)
+
     def z_grad(Z, W):
-        return (coupling_grad(Z, hp.coupling_w, hp.coupling_eps)
-                + commit_coupling_grad(Z, x_current, hp.coupling_w,
-                                       hp.coupling_eps)
-                + churn_bound_grad(Z, delta_max, dpw, hp.coupling_eps)
-                + rho_ * (Z - W))
+        g = tdefs[0].grad(Z)
+        for td in tdefs[1:]:
+            g = g + td.grad(Z)
+        return g + rho_ * (Z - W)
 
     n = prob.c.shape[1]
 

@@ -201,7 +201,55 @@ def horizon_objective(hp: HorizonProblem, X: jnp.ndarray) -> jnp.ndarray:
 
 
 def horizon_objective_terms(hp: HorizonProblem, X: jnp.ndarray) -> dict:
-    """Diagnostic split: {"per_tick": (H,) objectives, "coupling": scalar}."""
+    """Diagnostic split: {"per_tick": (H,) objectives, "coupling": scalar}.
+
+    The per-tick objectives are full registry sums, so any scenario terms
+    attached to the window's problems (``prob.terms``) are included."""
     per_tick = jax.vmap(obj.objective)(hp.problem, X)
     return {"per_tick": per_tick,
             "coupling": coupling_penalty(X, hp.coupling_w, hp.coupling_eps)}
+
+
+# ---------------------------------------------------------------------------
+# Horizon-level term registry
+# ---------------------------------------------------------------------------
+
+
+class HorizonTermDef(NamedTuple):
+    """One window-level (inter-tick) objective term: a name plus matched
+    value/grad closures over the plan matrix X (H, n).  The horizon
+    counterpart of ``core.terms.TermDef`` — per-tick terms live in the core
+    registry and flow through ``obj.objective``; terms that couple ticks
+    (churn pricing, the committed transition, the soft churn bound) live
+    here, so every consumer (merit functions, fixed-step loop, ADMM
+    consensus block) sums ONE definition list instead of hand-copying the
+    three gradients."""
+
+    name: str
+    value: object   # Callable[[X], scalar]
+    grad: object    # Callable[[X], (H, n)]
+
+
+def coupling_term_defs(hp: HorizonProblem, x_current: jnp.ndarray,
+                       delta_max, delta_penalty_w):
+    """The window-level term list for an H>1 solve, in the contractual
+    accumulation order (coupling, commit_coupling, churn_bound).
+
+    Consumers MUST accumulate these onto their existing value/grad in list
+    order (``for td in defs: val = val + td.value(X)``) — that preserves
+    the seed float-addition association, hence bit-exact solver
+    trajectories (the ADMM parity and batched≡sequential suites pin it).
+    """
+    w, eps = hp.coupling_w, hp.coupling_eps
+    dpw = jnp.asarray(delta_penalty_w, jnp.float32)
+    return (
+        HorizonTermDef("coupling",
+                       lambda X: coupling_penalty(X, w, eps),
+                       lambda X: coupling_grad(X, w, eps)),
+        HorizonTermDef("commit_coupling",
+                       lambda X: commit_coupling_penalty(X, x_current, w, eps),
+                       lambda X: commit_coupling_grad(X, x_current, w, eps)),
+        HorizonTermDef("churn_bound",
+                       lambda X: churn_bound_penalty(X, delta_max, dpw, eps),
+                       lambda X: churn_bound_grad(X, delta_max, dpw, eps)),
+    )

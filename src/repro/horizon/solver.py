@@ -87,9 +87,7 @@ from repro.core.rounding import round_and_polish
 from repro.obs.telemetry import current_recorder, gauge
 
 from .admm import ADMMDiag, ADMMTrace, admm_solve_plan
-from .problem import (HorizonProblem, churn_bound_grad, churn_bound_penalty,
-                      commit_coupling_grad, commit_coupling_penalty,
-                      coupling_grad, coupling_penalty, tick_problem)
+from .problem import HorizonProblem, coupling_term_defs, tick_problem
 
 # planned-tick band-penalty weight; matches core.solver.SolverConfig's
 # penalty_w — the same quadratic fallback weight the barrier solver uses
@@ -222,24 +220,22 @@ def _horizon_merit_fns(hp: HorizonProblem, x_current: jnp.ndarray,
 
     rest = jax.tree_util.tree_map(lambda a: a[1:], prob)
     pw = jnp.asarray(penalty_w, jnp.float32)
-    dpw = jnp.asarray(delta_penalty_w, jnp.float32)
+    # the window-level registry: ONE definition list (coupling, commit,
+    # churn bound), accumulated in contractual order — no hand-copied grads
+    tdefs = coupling_term_defs(hp, x_current, delta_max, delta_penalty_w)
 
     def value(X):
         val = jnp.sum(jax.vmap(obj.objective)(prob, X))
-        val = val + coupling_penalty(X, hp.coupling_w, hp.coupling_eps)
-        val = val + commit_coupling_penalty(X, x_current, hp.coupling_w,
-                                            hp.coupling_eps)
-        val = val + churn_bound_penalty(X, delta_max, dpw, hp.coupling_eps)
+        for td in tdefs:
+            val = val + td.value(X)
         val = val + jnp.sum(jax.vmap(
             lambda pb, x: obj.penalty(pb, x, pw))(rest, X[1:]))
         return val
 
     def grad(X):
         G = jax.vmap(obj.grad_objective)(prob, X)
-        G = G + coupling_grad(X, hp.coupling_w, hp.coupling_eps)
-        G = G + commit_coupling_grad(X, x_current, hp.coupling_w,
-                                     hp.coupling_eps)
-        G = G + churn_bound_grad(X, delta_max, dpw, hp.coupling_eps)
+        for td in tdefs:
+            G = G + td.grad(X)
         Gp = jax.vmap(
             lambda pb, x: obj.penalty_grad(pb, x, pw))(rest, X[1:])
         return jnp.concatenate([G[:1], G[1:] + Gp])
@@ -264,6 +260,7 @@ def _solve_horizon_fixed(hp: HorizonProblem, x_current: jnp.ndarray,
     L = jax.vmap(_tick_lipschitz)(prob)                          # (H,)
     if H > 1:
         rest = jax.tree_util.tree_map(lambda a: a[1:], prob)
+        tdefs = coupling_term_defs(hp, x_current, delta_max, delta_penalty_w)
         # curvature of the smoothed |u|: s''(0) = 1/sqrt(eps), two coupling
         # terms touch each row (the committed row's second one is the
         # commit-churn price), plus ~2w per adjacent transition from the
@@ -286,12 +283,8 @@ def _solve_horizon_fixed(hp: HorizonProblem, x_current: jnp.ndarray,
     def body(i, X):
         G = jax.vmap(obj.grad_objective)(prob, X)
         if H > 1:
-            G = G + coupling_grad(X, hp.coupling_w, hp.coupling_eps)
-            G = G + commit_coupling_grad(X, x_current, hp.coupling_w,
-                                         hp.coupling_eps)
-            G = G + churn_bound_grad(X, delta_max,
-                                     jnp.asarray(delta_penalty_w, jnp.float32),
-                                     hp.coupling_eps)
+            for td in tdefs:
+                G = G + td.grad(X)
             Gp = jax.vmap(lambda pb, x: obj.penalty_grad(
                 pb, x, jnp.asarray(penalty_w, jnp.float32)))(rest, X[1:])
             G = jnp.concatenate([G[:1], G[1:] + Gp])

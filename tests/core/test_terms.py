@@ -1,0 +1,285 @@
+"""The priced-term objective IR (repro.core.terms).
+
+Three contracts, in rough order of importance:
+
+1. jaxpr identity — with ``terms=()`` (the default), ``objective`` and
+   ``grad_objective`` must trace to the BYTE-IDENTICAL jaxpr of the seed
+   (pre-IR) implementation, replicated verbatim here. This is the static-
+   omission guarantee every bit-exactness test in the repo leans on.
+2. per-term autodiff — every registered term's analytic gradient matches
+   ``jax.grad`` of its value function: unbatched, under vmap, and on
+   zero-padded problems (the fleet-stacking regime).
+3. attachment discipline — ``make_term`` / ``with_terms`` validation,
+   zero-params exact no-op (padding exactness), fused ``value_and_grad``
+   exact equality, and the fleet stack/slice round-trip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.objective as obj
+from repro.core.problem import AllocationProblem
+from repro.core.terms import (BASE_TERMS, SCENARIO_TERMS, TERM_DEFS,
+                              PricedTerm, active_grad, active_value,
+                              make_term, normalize_terms, register_term,
+                              term_signature, with_terms)
+from repro.fleet.batching import stack_problems, tenant_problem, union_term_kinds
+from repro.testing import make_toy_problem
+
+
+def _x(prob, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0.0, 3.0, size=prob.n), jnp.float32)
+
+
+def _scenario_params(prob, kind, seed=1, zero=False):
+    """Random (or zero) params for an attachable kind, at problem shape."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, ax in TERM_DEFS[kind].param_axes.items():
+        shape = {"": (), "n": (prob.n,), "m": (prob.m,)}[ax]
+        out[k] = (np.zeros(shape, np.float32) if zero
+                  else rng.uniform(0.05, 0.5, size=shape).astype(np.float32))
+    return out
+
+
+def _attach_all(prob, seed=1, zero=False):
+    return with_terms(prob, [make_term(k, **_scenario_params(prob, k, seed,
+                                                             zero=zero))
+                             for k in SCENARIO_TERMS])
+
+
+# ---------------------------------------------------------------------------
+# 1. jaxpr identity with terms=()
+# ---------------------------------------------------------------------------
+
+
+def _seed_objective(prob, x):
+    """The pre-IR eq. (1) objective, verbatim (git 73d97b2)."""
+    P = prob.params
+    Kx = prob.K @ x
+    Ex = prob.E @ x
+    base_cost = prob.c @ x
+    consolidation = P.alpha * jnp.sum(1.0 - jnp.exp(-P.beta1 * Ex))
+    volume_discount = -P.gamma * jnp.sum(jnp.log1p(P.beta2 * Ex))
+    shortage = jnp.maximum(prob.d - Kx, 0.0)
+    shortage_pen = P.beta3 * jnp.sum(shortage**2)
+    return base_cost + consolidation + volume_discount + shortage_pen
+
+
+def _seed_grad(prob, x):
+    """The pre-IR analytic gradient, verbatim (git 73d97b2)."""
+    P = prob.params
+    Kx = prob.K @ x
+    Ex = prob.E @ x
+    g_consol = P.alpha * P.beta1 * (prob.E.T @ jnp.exp(-P.beta1 * Ex))
+    g_volume = -P.gamma * P.beta2 * (prob.E.T @ (1.0 / (1.0 + P.beta2 * Ex)))
+    shortage = jnp.maximum(prob.d - Kx, 0.0)
+    g_short = -2.0 * P.beta3 * (prob.K.T @ shortage)
+    return prob.c + g_consol + g_volume + g_short
+
+
+def test_default_terms_jaxpr_identical_to_seed():
+    """terms=() must be STATICALLY omitted: the registry-sum objective and
+    gradient trace to the exact seed jaxpr — not numerically close, the
+    same program."""
+    prob = make_toy_problem(seed=0)
+    assert prob.terms == ()
+    x = _x(prob)
+    assert str(jax.make_jaxpr(obj.objective)(prob, x)) == \
+        str(jax.make_jaxpr(_seed_objective)(prob, x))
+    assert str(jax.make_jaxpr(obj.grad_objective)(prob, x)) == \
+        str(jax.make_jaxpr(_seed_grad)(prob, x))
+
+
+def test_attached_terms_change_value_not_structure():
+    prob = make_toy_problem(seed=0)
+    probT = _attach_all(prob)
+    x = _x(prob)
+    assert term_signature(probT) == SCENARIO_TERMS
+    assert float(obj.objective(probT, x)) > float(obj.objective(prob, x))
+    # static structure: jit caches key on the kind tuple, so the same kinds
+    # with different prices reuse one compiled program
+    f = jax.jit(obj.objective)
+    f(probT, x)
+    probT2 = _attach_all(prob, seed=9)
+    f(probT2, x)
+    assert f._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# 2. per-term analytic gradient == jax.grad (property, full registry)
+# ---------------------------------------------------------------------------
+
+
+def _term_value_fn(prob, kind, params):
+    td = TERM_DEFS[kind]
+
+    def value(x):
+        return td.value(prob, params, x, prob.K @ x, prob.E @ x)
+
+    return value
+
+
+@pytest.mark.parametrize("kind", sorted(TERM_DEFS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_term_grad_matches_autodiff(kind, seed):
+    """Each registered term's hand-written gradient IS the derivative of
+    its value function (away from hinge ties — the draw keeps d - Kx
+    bounded away from 0 with probability 1)."""
+    prob = make_toy_problem(seed=seed)
+    params = (None if not TERM_DEFS[kind].param_axes
+              else _scenario_params(prob, kind, seed + 10))
+    x = _x(prob, seed)
+    value = _term_value_fn(prob, kind, params)
+    g_auto = jax.grad(value)(x)
+    g_hand = TERM_DEFS[kind].grad(prob, params, x, prob.K @ x, prob.E @ x)
+    g_hand = jnp.broadcast_to(g_hand, g_auto.shape)  # constant-grad terms
+    np.testing.assert_allclose(np.asarray(g_hand), np.asarray(g_auto),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", sorted(TERM_DEFS))
+def test_term_grad_matches_autodiff_vmapped(kind):
+    """Same property under vmap over a batch of x — the fleet regime."""
+    prob = make_toy_problem(seed=3)
+    params = (None if not TERM_DEFS[kind].param_axes
+              else _scenario_params(prob, kind, 13))
+    X = jnp.stack([_x(prob, s) for s in range(4)])
+    value = _term_value_fn(prob, kind, params)
+    G_auto = jax.vmap(jax.grad(value))(X)
+    G_hand = jax.vmap(lambda x: jnp.broadcast_to(
+        TERM_DEFS[kind].grad(prob, params, x, prob.K @ x, prob.E @ x),
+        x.shape))(X)
+    np.testing.assert_allclose(np.asarray(G_hand), np.asarray(G_auto),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_full_objective_grad_matches_autodiff_with_terms():
+    """The summed registry gradient equals jax.grad of the summed value,
+    with every scenario term attached."""
+    for seed in range(3):
+        prob = _attach_all(make_toy_problem(seed=seed), seed=seed + 20)
+        x = _x(prob, seed)
+        g_auto = jax.grad(lambda x_: obj.objective(prob, x_))(x)
+        g_hand = obj.grad_objective(prob, x)
+        np.testing.assert_allclose(np.asarray(g_hand), np.asarray(g_auto),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_padded_problem_terms_exact():
+    """Padding exactness: a problem zero-padded to a larger bucket (extra
+    types AND an absent term at zero params) yields the bit-identical
+    objective/gradient on the true coordinates."""
+    a = make_toy_problem(seed=0, n=10)
+    b = make_toy_problem(seed=1, n=6)
+    a = with_terms(a, [make_term("slo_penalty", price=0.3)])
+    b = with_terms(b, [make_term("spot_risk",
+                                 risk=_scenario_params(b, "spot_risk",
+                                                       5)["risk"])])
+    batch = stack_problems([a, b])
+    xa = _x(a, 7)
+    for i, orig in enumerate((a, b)):
+        sub = tenant_problem(batch, i)
+        x = _x(orig, 7)
+        x_pad = jnp.zeros(batch.n_max).at[: orig.n].set(x)
+        pb = jax.tree_util.tree_map(lambda l: l[i], batch.problem)
+        # padded batch row vs the original unpadded problem: same bits
+        assert float(obj.objective(pb, x_pad)) == float(
+            obj.objective(orig, x))
+        np.testing.assert_array_equal(
+            np.asarray(obj.grad_objective(pb, x_pad))[: orig.n],
+            np.asarray(obj.grad_objective(orig, x)))
+        # and the round-trip slice reproduces the original terms exactly
+        assert term_signature(sub) == union_term_kinds([a, b])
+
+
+# ---------------------------------------------------------------------------
+# 3. attachment discipline
+# ---------------------------------------------------------------------------
+
+
+def test_fused_value_and_grad_exact():
+    """Satellite regression: the fused value_and_grad (one K@x/E@x pair)
+    returns EXACTLY objective() and grad_objective() — same bits, with and
+    without attached terms."""
+    for prob in (make_toy_problem(seed=4),
+                 _attach_all(make_toy_problem(seed=4))):
+        x = _x(prob, 11)
+        v, g = obj.value_and_grad(prob, x)
+        assert float(v) == float(obj.objective(prob, x))
+        np.testing.assert_array_equal(np.asarray(g),
+                                      np.asarray(obj.grad_objective(prob, x)))
+
+
+def test_zero_params_exact_noop():
+    """A term at zero params contributes exactly 0.0 value and exactly zero
+    gradient — the invariant zero-fill padding relies on."""
+    prob = make_toy_problem(seed=2)
+    probZ = _attach_all(prob, zero=True)
+    x = _x(prob, 3)
+    assert float(obj.objective(probZ, x)) == float(obj.objective(prob, x))
+    np.testing.assert_array_equal(np.asarray(obj.grad_objective(probZ, x)),
+                                  np.asarray(obj.grad_objective(prob, x)))
+    assert float(active_value(probZ, x)) == 0.0
+    np.testing.assert_array_equal(np.asarray(active_grad(probZ, x)),
+                                  np.zeros(prob.n, np.float32))
+
+
+def test_make_term_validation():
+    with pytest.raises(ValueError, match="unknown term kind"):
+        make_term("nope", price=1.0)
+    with pytest.raises(ValueError, match="implicit"):
+        make_term("base_cost")
+    with pytest.raises(ValueError, match="expects params"):
+        make_term("slo_penalty", prices=1.0)
+    with pytest.raises(ValueError, match="expects params"):
+        make_term("slo_penalty")
+    t = make_term("slo_penalty", price=2)
+    assert t.params["price"].dtype == jnp.float32
+
+
+def test_with_terms_validation():
+    prob = make_toy_problem(seed=0)
+    with pytest.raises(ValueError, match="expected shape"):
+        with_terms(prob, [make_term("spot_risk",
+                                    risk=np.ones(prob.n + 1, np.float32))])
+    with pytest.raises(ValueError, match="duplicate"):
+        with_terms(prob, [make_term("slo_penalty", price=1.0),
+                          ("slo_penalty", {"price": 2.0})])
+    # (kind, params) pairs are accepted and normalized
+    probT = with_terms(prob, [("slo_penalty", {"price": 1.5})])
+    assert term_signature(probT) == ("slo_penalty",)
+    assert normalize_terms(probT.terms) == probT.terms \
+        or [t.kind for t in normalize_terms(probT.terms)] == ["slo_penalty"]
+
+
+def test_register_term_validation():
+    with pytest.raises(ValueError, match="already registered"):
+        register_term("base_cost", _seed_objective, _seed_grad)
+    with pytest.raises(ValueError, match="invalid param axes"):
+        register_term("bad_axes", _seed_objective, _seed_grad,
+                      {"w": "q"})
+
+
+def test_priced_term_pytree_round_trip():
+    t = make_term("slo_penalty", price=0.7)
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    assert len(leaves) == 1
+    t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(t2, PricedTerm) and t2.kind == "slo_penalty"
+    # problems with terms flow through tree_map like any other field
+    prob = with_terms(make_toy_problem(seed=0), [t])
+    doubled = jax.tree_util.tree_map(lambda l: l * 2, prob)
+    assert float(doubled.terms[0].params["price"]) == pytest.approx(1.4)
+
+
+def test_base_terms_cover_seed_objective():
+    """The base registry entries reproduce the seed term split exactly."""
+    prob = make_toy_problem(seed=6)
+    x = _x(prob, 6)
+    terms = obj.objective_terms(prob, x)
+    assert tuple(terms) == BASE_TERMS
+    assert float(sum(terms.values())) == pytest.approx(
+        float(_seed_objective(prob, x)), rel=1e-6)

@@ -29,7 +29,15 @@ def test_trace_shapes_positive_deterministic(kind):
     a = make_trace(kind, BASE, 48, seed=3)
     b = make_trace(kind, BASE, 48, seed=3)
     assert a.shape == (48, 4)
-    assert np.all(a > 0)
+    if kind == "spot_interruption":
+        # the one non-demand kind: an on/off availability overlay — {0, 1}
+        # valued, all pools up at t=0, and some interruption must occur at
+        # the default rate over 48 ticks with this seed
+        assert set(np.unique(a)) <= {0.0, 1.0}
+        assert np.all(a[0] == 1.0)
+        assert np.any(a == 0.0)
+    else:
+        assert np.all(a > 0)
     np.testing.assert_array_equal(a, b)
     if kind != "constant":   # constant is seed-free by construction
         c = make_trace(kind, BASE, 48, seed=4)

@@ -1,0 +1,144 @@
+"""Scenario terms through the replay engines (docs/scenarios.md).
+
+The IR's whole-system contract: with scenario terms attached (and, for
+spot, the availability overlay zeroing interrupted capacity), the batched
+fleet engine must still produce per-tenant integer allocations identical
+to the sequential reference — myopic and MPC alike — and the scenario
+builders must validate their inputs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Catalog, make_cloud_catalog
+from repro.core.catalog import spot_catalog, spot_risk_prices
+from repro.fleet import (PRIORITY_CLASSES, TenantSpec, make_spot_fleet,
+                         make_trace, replay_fleet, with_priority_classes,
+                         with_slo_pricing)
+
+BASE = np.array([8.0, 16.0, 4.0, 100.0]) * 25
+
+
+@pytest.fixture(scope="module")
+def tiny_catalog():
+    return Catalog(make_cloud_catalog().instances[:24])
+
+
+@pytest.fixture(scope="module")
+def fleet_specs(tiny_catalog):
+    return [TenantSpec(name=f"t{i}",
+                       trace=make_trace("diurnal", BASE * (1 + 0.3 * i), 5,
+                                        seed=i),
+                       delta_max=6.0, n_starts=2)
+            for i in range(3)]
+
+
+def _assert_engines_agree(catalog, specs, **kw):
+    seq = replay_fleet(catalog, specs, replay_mode="sequential",
+                       run_ca_baseline=False, **kw)
+    bat = replay_fleet(catalog, specs, replay_mode="batched",
+                       run_ca_baseline=False, **kw)
+    for a, b in zip(seq.tenants, bat.tenants):
+        for sa, sb in zip(a.steps, b.steps):
+            np.testing.assert_array_equal(sa.counts, sb.counts)
+    return seq
+
+
+def test_slo_pricing_batched_equals_sequential(tiny_catalog, fleet_specs):
+    specs = with_slo_pricing(fleet_specs, price=0.8)
+    assert all(len(s.terms) == 1 for s in specs)
+    assert all(s.terms == () for s in fleet_specs)   # inputs untouched
+    _assert_engines_agree(tiny_catalog, specs)
+
+
+def test_priority_classes_batched_equals_sequential(tiny_catalog,
+                                                    fleet_specs):
+    """Mixed term signatures in ONE shape bucket: the critical tenant has
+    no term, the others do — union stacking must keep engines bit-equal."""
+    specs = with_priority_classes(fleet_specs,
+                                  ["critical", "standard", "batch"],
+                                  catalog=tiny_catalog)
+    assert specs[0].terms == ()
+    assert [t.kind for t in specs[1].terms] == ["priority_eviction"]
+    # batch outranks standard in eviction exposure
+    assert float(specs[2].terms[0].params["price"][0]) > \
+        float(specs[1].terms[0].params["price"][0])
+    _assert_engines_agree(tiny_catalog, specs)
+
+
+def test_priority_classes_validation(tiny_catalog, fleet_specs):
+    with pytest.raises(ValueError, match="unknown priority class"):
+        with_priority_classes(fleet_specs, ["critical", "standard", "nope"],
+                              catalog=tiny_catalog)
+    with pytest.raises(ValueError, match="priorities"):
+        with_priority_classes(fleet_specs, ["critical"],
+                              catalog=tiny_catalog)
+    assert set(PRIORITY_CLASSES) == {"critical", "standard", "batch"}
+
+
+def test_spot_fleet_batched_equals_sequential_and_overlay(tiny_catalog,
+                                                          fleet_specs):
+    spot_cat, specs = make_spot_fleet(tiny_catalog, fleet_specs, seed=3)
+    assert spot_cat.n == 2 * tiny_catalog.n
+    seq = _assert_engines_agree(spot_cat, specs)
+    # the overlay is enforced: interrupted pools hold zero allocation on
+    # exactly the tick their availability row says they are down
+    saw_interruption = False
+    for spec, rep in zip(specs, seq.tenants):
+        avail = spec.spot_availability
+        for t, step in enumerate(rep.steps):
+            down = spec.spot_idx[avail[min(t, len(avail) - 1)] <= 0.0]
+            saw_interruption |= len(down) > 0
+            assert np.all(step.counts[down] == 0.0)
+    assert saw_interruption, "seed produced no interruptions — test is vacuous"
+
+
+def test_spot_fleet_mpc_engines_agree(tiny_catalog, fleet_specs):
+    """Terms + overlay through the MPC path: batched H-window stacking
+    (bucket-union term signatures) matches the sequential controller."""
+    spot_cat, specs = make_spot_fleet(tiny_catalog, fleet_specs, seed=3)
+    _assert_engines_agree(spot_cat, specs, controller="mpc", horizon=3)
+
+
+def test_mpc_h1_equals_myopic_with_terms(tiny_catalog, fleet_specs):
+    """H=1 ≡ myopic survives attached terms (both flow through the same
+    make_problem / objective registry)."""
+    specs = with_slo_pricing(fleet_specs, price=1.2)
+    myo = replay_fleet(tiny_catalog, specs, run_ca_baseline=False)
+    mpc = replay_fleet(tiny_catalog, specs, run_ca_baseline=False,
+                       controller="mpc", horizon=1)
+    for a, b in zip(myo.tenants, mpc.tenants):
+        for sa, sb in zip(a.steps, b.steps):
+            np.testing.assert_array_equal(sa.counts, sb.counts)
+
+
+def test_spot_fleet_rejects_tenant_catalog(tiny_catalog, fleet_specs):
+    bad = [TenantSpec(name="own-cat", trace=fleet_specs[0].trace,
+                      catalog=tiny_catalog)]
+    with pytest.raises(ValueError, match="per-tenant catalog"):
+        make_spot_fleet(tiny_catalog, bad)
+
+
+def test_spot_catalog_and_risk_prices(tiny_catalog):
+    spot_cat, spot_idx = spot_catalog(tiny_catalog, discount=0.7)
+    assert len(spot_idx) == tiny_catalog.n
+    for j, sj in enumerate(spot_idx):
+        on, sp = tiny_catalog.instances[j], spot_cat.instances[int(sj)]
+        assert sp.name == on.name + "#spot"
+        assert sp.hourly_price == pytest.approx(0.3 * on.hourly_price,
+                                                rel=1e-3)
+        assert sp.cpu == on.cpu and sp.mem_gb == on.mem_gb
+    risk = spot_risk_prices(spot_cat, spot_idx, rate=0.05, penalty_hours=2.0)
+    assert risk.shape == (spot_cat.n,)
+    assert np.all(risk[: tiny_catalog.n] == 0.0)     # on-demand: no risk
+    j = int(spot_idx[0])
+    assert risk[j] == pytest.approx(
+        0.1 * spot_cat.instances[j].hourly_price, rel=1e-5)
+
+
+def test_tenant_spec_spot_validation(fleet_specs):
+    tr = fleet_specs[0].trace
+    with pytest.raises(ValueError, match="together"):
+        TenantSpec(name="half", trace=tr, spot_idx=np.arange(3))
+    with pytest.raises(ValueError, match=r"\(T', S\)"):
+        TenantSpec(name="shape", trace=tr, spot_idx=np.arange(3),
+                   spot_availability=np.ones((4, 2)))

@@ -92,6 +92,29 @@ def test_fleet_bench_entries_tiny(fleet_bench):
 
 
 @pytest.mark.slow
+def test_scenario_bench_run_tiny():
+    """The scenario sweep (priced-term IR consumers vs CA) runs end to end
+    at a tiny grid and emits the frontier schema: per-knob cells with
+    cost/SLO/churn + CA comparison for all three scenarios on every trace
+    kind, plus the acceptance checks block."""
+    sb = _load("scenario_bench")
+    out = sb.run(B=2, T=4, trace_kinds=("diurnal",), slo_prices=(0.0, 2.0),
+                 eviction_prices=(0.0, 0.6), spot_rates=(0.2,))
+    cells = out["scenarios"]["diurnal"]
+    assert [c["price"] for c in cells["slo"]] == [0.0, 2.0]
+    assert [c["eviction_price"] for c in cells["priority"]] == [0.0, 0.6]
+    assert [c["interruption_rate"] for c in cells["spot"]] == [0.2]
+    for scenario in ("slo", "priority", "spot"):
+        for cell in cells[scenario]:
+            for key in ("cost", "slo_ticks", "churn", "ca_cost",
+                        "ca_slo_ticks", "savings_vs_ca_pct", "t_replay"):
+                assert key in cell, (scenario, key, cell)
+    assert cells["spot_on_demand_ref"]["interruption_rate"] is None
+    assert out["checks"]["diurnal"].keys() == {
+        "all_scenarios_save_vs_ca", "slo_pricing_not_worse"}
+
+
+@pytest.mark.slow
 def test_solver_bench_runs(capsys):
     """benchmarks/solver_bench.py (the paper §III table) survived the PGD
     extraction: it still produces a row per scenario with a KKT report and

@@ -28,7 +28,8 @@ CHECKED_PACKAGES = ("src/repro/fleet", "src/repro/core", "src/repro/horizon",
 # the shared PGD engine, is already covered by the core package glob)
 CHECKED_MODULES = ("src/repro/testing.py",)
 REQUIRED_DOCS = ("docs/architecture.md", "docs/math.md", "docs/fleet.md",
-                 "docs/horizon.md", "docs/observability.md")
+                 "docs/horizon.md", "docs/observability.md",
+                 "docs/scenarios.md")
 
 
 def iter_public_modules():
