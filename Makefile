@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast docs-check bench bench-fleet bench-json bench-horizon bench-scenarios example-fleet trace-demo
+.PHONY: test test-fast docs-check bench bench-fleet bench-json bench-horizon bench-scenarios bench-check example-fleet trace-demo
 
 test:            ## tier-1 verify: the full test suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -30,6 +30,16 @@ bench-horizon:   ## quick MPC-vs-myopic sweep -> benchmarks/BENCH_horizon.json
 bench-scenarios: ## scenario frontiers (SLO/priority/spot vs CA) -> benchmarks/BENCH_scenarios.json
 	PYTHONPATH=src $(PY) benchmarks/scenario_bench.py \
 	    --json benchmarks/BENCH_scenarios.json
+
+bench-check:     ## regression sentinel: rerun the canary bench, compare vs committed golden, prove the comparator bites
+	PYTHONPATH=src $(PY) benchmarks/check_bench.py \
+	    --json benchmarks/artifacts/BENCH_check.json
+	PYTHONPATH=src $(PY) tools/bench_compare.py \
+	    benchmarks/golden/BENCH_check.json \
+	    benchmarks/artifacts/BENCH_check.json \
+	    --allow-cross-platform --timing-rtol 0.5
+	PYTHONPATH=src $(PY) tools/bench_compare.py \
+	    --selftest benchmarks/golden/BENCH_check.json
 
 example-fleet:   ## trace-driven fleet replay demo (batched engine)
 	PYTHONPATH=src $(PY) examples/fleet_replay.py

@@ -355,9 +355,13 @@ def main(argv):
         if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
             raise SystemExit("--json requires a path argument")
         json_path = argv[i + 1]
-    out = run(B=16 if quick else 64)
-    out["config"] = dict(quick=quick, B=16 if quick else 64)
-    out["provenance"] = provenance_block(argv)
+    B = 16 if quick else 64
+    out = run(B=B)
+    out["config"] = dict(quick=quick, B=B)
+    # trace seeds are the tenant indices (see run_*'s spec construction);
+    # config rides into the digest so bench_compare refuses quick-vs-full
+    out["provenance"] = provenance_block(argv, config=out["config"],
+                                         seeds=list(range(B)))
     with open(json_path, "w") as fh:
         json.dump(out, fh, indent=2, sort_keys=True)
         fh.write("\n")

@@ -454,7 +454,10 @@ def main(argv):
         out = run(solvers=solvers)
     out["solver_scaling"] = solver_scaling()
     out["config"]["quick"] = quick
-    out["provenance"] = provenance_block(argv)
+    # trace seeds are tenant indices (make_fleet's spec loop); the config
+    # digest makes bench_compare refuse quick-vs-full or cross-solver pairs
+    out["provenance"] = provenance_block(
+        argv, config=out["config"], seeds=list(range(out["config"]["B"])))
     with open(json_path, "w") as fh:
         json.dump(out, fh, indent=2, sort_keys=True)
         fh.write("\n")

@@ -206,7 +206,10 @@ def main(argv):
     else:
         out = run()
     out["config"]["quick"] = quick
-    out["provenance"] = provenance_block(argv)
+    # trace seeds are tenant indices (make_fleet's spec loop); the config
+    # digest makes bench_compare refuse quick-vs-full comparisons
+    out["provenance"] = provenance_block(
+        argv, config=out["config"], seeds=list(range(out["config"]["B"])))
     with open(json_path, "w") as fh:
         json.dump(out, fh, indent=2, sort_keys=True)
         fh.write("\n")

@@ -82,6 +82,11 @@ class InfrastructureOptimizationController:
     # not a dataclass field: last warm solve's PGD iteration count, consumed
     # by step() when recording the tick (0 until a warm solve has run)
     _last_solver_iters = 0
+    # not a dataclass field: the last solve's RELAXED solution (set by both
+    # cold and warm solves, and by the batched fleet engine). Health
+    # monitoring (repro.obs.health) certifies THIS point through kkt_report
+    # — integer counts are a rounding of it, not a stationary point.
+    last_x_rel: Optional[np.ndarray] = None
 
     def make_problem(self, demand: np.ndarray) -> AllocationProblem:
         """Build this tick's AllocationProblem — the same construction as the
@@ -115,6 +120,7 @@ class InfrastructureOptimizationController:
         """First-tick allocation: full multistart solve, no churn bound; take
         the best rounded start (matches api.optimize without BnB)."""
         ms = multistart_solve(prob, n_starts=self.n_starts)
+        self.last_x_rel = np.asarray(ms.best.x, np.float64)
         return np.asarray(ms.x_int, np.float64)
 
     def incremental_counts(self, prob: AllocationProblem,
@@ -139,6 +145,7 @@ class InfrastructureOptimizationController:
                 prob, jnp.asarray(self.x_current, jnp.float32),
                 jnp.asarray(self.delta_max, jnp.float32), x_init=x_init)
         self._last_solver_iters = int(iters)
+        self.last_x_rel = np.asarray(x_rel, np.float64)
         # rounding may exceed the churn bound slightly when demand jumps;
         # that's the feasibility-first tradeoff (shortage beats churn).
         return np.asarray(round_and_polish(prob, x_rel), np.float64)

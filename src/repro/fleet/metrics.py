@@ -21,6 +21,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core.metrics import AllocationMetrics
+from repro.obs.health import HealthReport
 
 
 @dataclass
@@ -94,13 +95,21 @@ class FleetReplayMetrics:
     controller under the ground-truth oracle forecaster
     (``replay_fleet(run_oracle_baseline=True)``) — the regret reference:
     any gap between ``tenants`` and ``oracle`` is what forecast error cost
-    (docs/horizon.md, regret definition)."""
+    (docs/horizon.md, regret definition). ``health`` is the rolled-up
+    ``repro.obs.HealthReport`` when the replay ran with a ``HealthMonitor``
+    attached (``replay_fleet(health=...)``) — breach/violation/deadline
+    counters and the worst committed-tick KKT residual, surfaced by
+    ``summary()`` so ``repro.fleet`` users see health without touching
+    ``repro.obs`` directly. compare=False: health carries wall-clock-
+    dependent observations (deadline misses), which the engine-equivalence
+    contract must not include."""
 
     tenants: List[TenantReplayMetrics]
     baseline: Optional[List[TenantReplayMetrics]] = None
     replay_mode: str = "sequential"
     controller: str = "myopic"
     oracle: Optional[List[TenantReplayMetrics]] = None
+    health: Optional[HealthReport] = field(default=None, compare=False)
 
     @property
     def total_cost_integral(self) -> float:
@@ -214,4 +223,6 @@ class FleetReplayMetrics:
                          f"${self.oracle_cost_integral:,.2f}")
             lines.append(f"  regret vs oracle   : "
                          f"${self.regret_vs_oracle:+,.2f}")
+        if self.health is not None:
+            lines.extend(self.health.summary_lines())
         return "\n".join(lines)

@@ -54,6 +54,7 @@ oracle loop, and the two agree tick-for-tick.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -68,6 +69,8 @@ from repro.core.controller import (ControllerStep,
                                    InfrastructureOptimizationController)
 from repro.core.metrics import AllocationMetrics, evaluate
 from repro.core.problem import PenaltyParams
+from repro.obs import metrics as obs_metrics
+from repro.obs.health import HealthMonitor
 from repro.obs.telemetry import gauge, span
 
 from .batching import (bucket_dims, embed_solutions, stack_problems,
@@ -338,17 +341,78 @@ def replay_tenant(catalog: Catalog, spec: TenantSpec, *,
     return _assemble_replay(spec, steps, ca)
 
 
+def _spot_unavailable(spec: TenantSpec, t: int) -> int:
+    """Number of this tenant's spot twins interrupted at tick ``t`` (the
+    same clamped-row convention the controller's spot overlay uses)."""
+    if spec.spot_idx is None or spec.spot_availability is None:
+        return 0
+    avail = np.asarray(spec.spot_availability)
+    return int((avail[min(t, len(avail) - 1)] <= 0.0).sum())
+
+
+class _TickObserver:
+    """Shared per-tick observation plumbing for the three replay loops:
+    decides once whether anything is watching (a :class:`HealthMonitor`
+    and/or an installed ``repro.obs.metrics`` registry), times ticks with
+    the monitor's injectable clock, and fans each tick's duration and
+    iteration count out to both sinks. When nothing is watching, every
+    method is a cheap no-op and NO clock is ever read — the engines'
+    production paths are unchanged (the bit-identical on/off contract)."""
+
+    __slots__ = ("health", "reg", "clock", "active", "_t0")
+
+    def __init__(self, health: Optional[HealthMonitor]):
+        self.health = health
+        self.reg = obs_metrics.current_metrics()
+        self.clock = health.clock if health is not None else time.perf_counter
+        self.active = health is not None or self.reg is not None
+        self._t0 = 0.0
+
+    def tick_start(self) -> None:
+        """Stamp the tick's start time (no-op when nothing watches)."""
+        if self.active:
+            self._t0 = self.clock()
+
+    def tick_end(self, t: int, solver_iters: int) -> None:
+        """Close the tick: duration to the latency histogram + deadline
+        budget, iteration count to the effort histogram."""
+        if not self.active:
+            return
+        dur_ms = (self.clock() - self._t0) * 1e3
+        if self.reg is not None:
+            self.reg.histogram("replay/tick_ms").observe(dur_ms)
+            self.reg.histogram("replay/solver_iters").observe(solver_iters)
+        if self.health is not None:
+            self.health.observe_tick(t, dur_ms)
+
+    def step(self, **kw) -> None:
+        """Forward one committed (tenant, tick) to the health monitor."""
+        if self.health is not None:
+            self.health.observe_step(**kw)
+
+
 def _replay_sequential(ctls, tenants: Sequence[TenantSpec], controller: str,
-                       capture_solver_trace: bool):
+                       capture_solver_trace: bool,
+                       health: Optional[HealthMonitor] = None):
     """The instrumented sequential loop shared by both controllers: one
     ``replay/tick`` span per (tenant, tick), warm ticks optionally tracing
     the solver through the controller's ``capture_solver_trace`` flag.
-    Returns ``(histories, solver_traces)`` like the batched engines."""
+    Returns ``(histories, solver_traces)`` like the batched engines.
+
+    With a :class:`HealthMonitor` attached, each (tenant, tick) is timed
+    (per-TENANT tick — the sequential engine has no fleet tick) and
+    observed: the tick's problem is built up front (``make_problem`` is
+    pure and history has not advanced yet, so it is THE problem ``step``
+    solves) and the controller's ``last_x_rel`` feeds the KKT gauge."""
     histories, solver_traces = [], []
+    obs = _TickObserver(health)
     for ctl, spec in zip(ctls, tenants):
         ctl.capture_solver_trace = capture_solver_trace
         steps = []
         for t, demand in enumerate(np.asarray(spec.trace, np.float64)):
+            prob = ctl.make_problem(demand) if health is not None else None
+            n_tr = len(ctl.solver_traces)
+            obs.tick_start()
             # compile key: the cold (t=0) and warm programs compile
             # separately, per problem shape and per traced/untraced variant
             with span("replay/tick", cat="replay", tick=t,
@@ -358,7 +422,16 @@ def _replay_sequential(ctls, tenants: Sequence[TenantSpec], controller: str,
                                    t > 0, capture_solver_trace)):
                 step = ctl.step(demand)
                 steps.append(step)
+            obs.tick_end(t, step.solver_iters)
             gauge("replay/solver_iters", step.solver_iters)
+            solver = ("multistart" if step.replanned
+                      else ctl.solver_config.solver if controller == "mpc"
+                      else "adaptive")
+            obs.step(tenant=spec.name, tick=t, step=step, solver=solver,
+                     prob=prob, x_rel=ctl.last_x_rel,
+                     trace=(ctl.solver_traces[-1]
+                            if len(ctl.solver_traces) > n_tr else None),
+                     spot_unavailable=_spot_unavailable(spec, t))
         histories.append(steps)
         solver_traces.append(list(ctl.solver_traces))
     return histories, solver_traces
@@ -391,7 +464,8 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                           warm_start: str = "counts",
                           solver_steps: int = 600,
                           hot_loop: Optional[str] = None,
-                          capture_solver_trace: bool = False):
+                          capture_solver_trace: bool = False,
+                          health: Optional[HealthMonitor] = None):
     """Step ALL tenants through their traces with one batched solve per shape
     bucket per tick. Returns ``(histories, solver_traces)``: per-tenant step
     histories (controller objects hold the same state the sequential engine
@@ -409,8 +483,12 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     Telemetry (``repro.obs``): each tick is a ``replay/tick`` span wrapping
     per-bucket ``replay/stack`` / ``replay/solve`` / ``replay/round`` spans;
     solve spans carry a compile key per (program, bucket shape) so first
-    calls are tagged as compile time. Spans only measure — allocations are
-    bit-identical with telemetry on or off (test-enforced)."""
+    calls are tagged as compile time. A :class:`HealthMonitor` additionally
+    observes every committed (tenant, tick) — counts, relaxed solution for
+    the KKT gauge, trace for stall detection — and the FLEET tick's
+    duration against the deadline budget. Spans, metrics and health only
+    measure — allocations are bit-identical with observability on or off
+    (test-enforced)."""
     assert warm_start in ("counts", "relaxed"), warm_start
     assert len(tenants) > 0, "empty fleet"
     traces = [np.asarray(spec.trace, np.float64) for spec in tenants]
@@ -425,8 +503,10 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     # one so stacked shapes stay put (its solve result is discarded)
     probs: List = [None] * len(tenants)
     solver_traces: List[List] = [[] for _ in tenants]
+    obs = _TickObserver(health)
 
     for t in range(int(T_len.max())):
+        obs.tick_start()
         # ticks 0 (cold program) and 1 (warm program) each trigger an XLA
         # compile; min(t, 1) makes exactly those two first-seen (tagged
         # phase="compile"), so tick percentiles reflect steady state
@@ -482,8 +562,11 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                     X_int = np.asarray(res.x_int, np.float64)
                     lane_iters = np.asarray(res.iters, np.int64)
                     tick_iters += int(lane_iters.sum())
-                # only pay the relaxed-solution transfer when it will be used
-                X_rel = np.asarray(res.x) if warm_start == "relaxed" else None
+                # only pay the relaxed-solution transfer when it will be
+                # used (warm start or the health monitor's KKT gauge)
+                X_rel = (np.asarray(res.x)
+                         if warm_start == "relaxed" or health is not None
+                         else None)
                 # cold-start FleetSolveResult has no trace field; warm ticks
                 # carry one only when capture_solver_trace asked for it
                 batch_tr = getattr(res, "trace", None)
@@ -494,15 +577,27 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                         if not active[i]:
                             continue  # frozen: no churn, no metrics, no state
                         n_true = int(batch.n_true[i])
-                        ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
-                                             replanned=(t == 0),
-                                             solver_iters=int(lane_iters[i]))
-                        if lane_tr is not None:
-                            solver_traces[b].append(
+                        step = ctls[b].apply_counts(
+                            traces[b][t], X_int[i, :n_true],
+                            replanned=(t == 0),
+                            solver_iters=int(lane_iters[i]))
+                        tr_b = (None if lane_tr is None else
                                 type(batch_tr)(*(f[i] for f in lane_tr)))
-                        if X_rel is not None:
+                        if tr_b is not None:
+                            solver_traces[b].append(tr_b)
+                        if X_rel is not None and warm_start == "relaxed":
                             x_rel_prev[b] = X_rel[i, :n_true]
+                        obs.step(tenant=tenants[b].name, tick=t, step=step,
+                                 solver=("multistart" if t == 0
+                                         else "adaptive"),
+                                 lane=i, prob=probs[b],
+                                 x_rel=(None if X_rel is None
+                                        else X_rel[i, :n_true]),
+                                 trace=tr_b,
+                                 spot_unavailable=_spot_unavailable(
+                                     tenants[b], t))
             gauge("replay/solver_iters", tick_iters)
+        obs.tick_end(t, tick_iters)
     return [ctl.history for ctl in ctls], solver_traces
 
 
@@ -513,7 +608,8 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                               solver_steps: int, solver_config=None,
                               cold_start: str = "myopic",
                               hot_loop: Optional[str] = None,
-                              capture_solver_trace: bool = False):
+                              capture_solver_trace: bool = False,
+                              health: Optional[HealthMonitor] = None):
     """Batched receding-horizon replay: one ``solve_horizon_fleet_step``
     call per shape bucket per warm tick, the fleet analogue of
     ``ModelPredictiveController.step``. Returns ``(histories,
@@ -560,8 +656,11 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
     # keep their last one so stacked shapes stay put (results discarded)
     windows: List = [None] * len(tenants)
     solver_traces: List[List] = [[] for _ in tenants]
+    obs = _TickObserver(health)
+    solver_name = ctls[0].solver_config.solver
 
     for t in range(int(T_len.max())):
+      obs.tick_start()
       # same compile-tick tagging rationale as the myopic engine above
       with span("replay/tick", cat="replay", tick=t, engine="batched",
                 controller="mpc",
@@ -595,6 +694,7 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                     sp.fence(res.x_int)
                 tick_iters += int(res.iters)
                 X_int = np.asarray(res.x_int, np.float64)
+                X_rel = np.asarray(res.x) if health is not None else None
                 cand_all = np.asarray(res.x_int_all, np.float64)
                 feas_all = np.asarray(res.feas_int_all, bool)
                 with span("replay/round", cat="replay", bucket=str(key)):
@@ -608,8 +708,16 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                                                               feas_all[i])]
                         else:
                             x = X_int[i, :n_true]
-                        ctls[b].apply_counts(traces[b][t], x, replanned=True)
+                        step = ctls[b].apply_counts(traces[b][t], x,
+                                                    replanned=True)
                         ctls[b].plan = np.tile(x, (horizon, 1))
+                        obs.step(tenant=tenants[b].name, tick=t, step=step,
+                                 solver="multistart", lane=i,
+                                 prob=windows[b][0],
+                                 x_rel=(None if X_rel is None
+                                        else X_rel[i, :n_true]),
+                                 spot_unavailable=_spot_unavailable(
+                                     tenants[b], t))
                 continue
             # warm tick: stack each tenant's H-tick window at the bucket's
             # pad dims, then one vmapped horizon solve for the whole bucket.
@@ -652,19 +760,32 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
             tick_iters += int(lane_iters.sum())
             lane_tr = (None if res.trace is None
                        else [np.asarray(f) for f in res.trace])
+            diag_np = (None if res.diag is None
+                       else [np.asarray(f) for f in res.diag])
             with span("replay/round", cat="replay", bucket=str(key)):
                 for i, b in enumerate(idx):
                     if not active[i]:
                         continue
                     n_true = ctls[b].catalog.n
-                    ctls[b].apply_counts(traces[b][t], X_int[i, :n_true],
-                                         replanned=False,
-                                         solver_iters=int(lane_iters[i]))
+                    step = ctls[b].apply_counts(
+                        traces[b][t], X_int[i, :n_true], replanned=False,
+                        solver_iters=int(lane_iters[i]))
                     ctls[b].plan = plans[i, :, :n_true]
-                    if lane_tr is not None:
-                        solver_traces[b].append(
+                    tr_b = (None if lane_tr is None else
                             type(res.trace)(*(f[i] for f in lane_tr)))
+                    if tr_b is not None:
+                        solver_traces[b].append(tr_b)
+                    obs.step(tenant=tenants[b].name, tick=t, step=step,
+                             solver=solver_name, lane=i,
+                             prob=windows[b][0],
+                             x_rel=plans[i, 0, :n_true], trace=tr_b,
+                             diag=(None if diag_np is None else
+                                   type(res.diag)(*(f[i]
+                                                    for f in diag_np))),
+                             spot_unavailable=_spot_unavailable(
+                                 tenants[b], t))
         gauge("replay/solver_iters", tick_iters)
+      obs.tick_end(t, tick_iters)
     return [ctl.history for ctl in ctls], solver_traces
 
 
@@ -686,7 +807,8 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                  warm_start: str = "counts",
                  solver_steps: int = 600,
                  hot_loop: Optional[str] = None,
-                 capture_solver_trace: bool = False) -> FleetReplayResult:
+                 capture_solver_trace: bool = False,
+                 health: Optional[HealthMonitor] = None) -> FleetReplayResult:
     """Replay every tenant; returns per-tenant histories + fleet aggregates.
 
     ``replay_mode`` selects the optimizer engine:
@@ -757,7 +879,22 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     per-tick/per-phase timing spans, then aggregate them with
     ``repro.obs.report.ReplayReport.from_recorder(rec)``. Without a
     recorder installed every instrumentation point is a no-op, and either
-    way allocations, churn and metrics are bit-identical (test-enforced)."""
+    way allocations, churn and metrics are bit-identical (test-enforced).
+
+    ``health`` (a ``repro.obs.HealthMonitor``) attaches per-tick health
+    monitoring to the optimizer replay: SLO-breach/churn-violation/spot-
+    interruption counters, committed-tick KKT-residual gauges on the
+    relaxed solutions, solver stall detection (from captured traces),
+    non-finite guards and the observe-only per-tick deadline budget. The
+    monitor's rolled-up ``HealthReport`` lands on
+    ``FleetReplayMetrics.health`` (and in ``summary()``). Baselines are
+    never monitored — the CA replay runs no solver and the oracle twin is
+    a reference, not the system under observation. Run inside ``with
+    repro.obs.collect_metrics() as reg:`` to additionally fill
+    ``replay/tick_ms`` and ``replay/solver_iters`` histograms on ``reg``
+    (Prometheus/JSON exportable). Health and metrics observe only:
+    per-tenant integer allocations are bit-identical with them on or off
+    (test-enforced)."""
     if len(tenants) == 0:
         raise ValueError("replay_fleet needs at least one TenantSpec; got an "
                          "empty tenant list")
@@ -786,20 +923,21 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
             ctls = [_make_mpc_controller(catalog, spec, **mpc_kwargs)
                     for spec in tenants]
             histories, traces_out = _replay_sequential(
-                ctls, tenants, "mpc", capture_solver_trace)
+                ctls, tenants, "mpc", capture_solver_trace, health=health)
         else:
             histories, traces_out = _replay_fleet_batched_mpc(
                 catalog, tenants, hot_loop=hot_loop,
-                capture_solver_trace=capture_solver_trace, **mpc_kwargs)
+                capture_solver_trace=capture_solver_trace, health=health,
+                **mpc_kwargs)
     elif replay_mode == "sequential":
         ctls = [_make_controller(catalog, spec) for spec in tenants]
         histories, traces_out = _replay_sequential(
-            ctls, tenants, "myopic", capture_solver_trace)
+            ctls, tenants, "myopic", capture_solver_trace, health=health)
     else:
         histories, traces_out = _replay_fleet_batched(
             catalog, tenants, warm_start=warm_start,
             solver_steps=solver_steps, hot_loop=hot_loop,
-            capture_solver_trace=capture_solver_trace)
+            capture_solver_trace=capture_solver_trace, health=health)
     if not run_ca_baseline:
         cas = [None] * len(tenants)
     elif ca_engine == "vectorized":
@@ -826,7 +964,8 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
             baseline=([r.ca_metrics for r in replays]
                       if run_ca_baseline else None),
             replay_mode=replay_mode, controller=controller,
-            oracle=oracle_metrics)
+            oracle=oracle_metrics,
+            health=health.report() if health is not None else None)
     return FleetReplayResult(
         tenants=replays, metrics=metrics,
         solver_traces=traces_out if capture_solver_trace else None)

@@ -195,6 +195,7 @@ class ModelPredictiveController(InfrastructureOptimizationController):
         score IS the tick-0 merit and the selection matches
         ``cold_start_counts`` exactly."""
         ms = multistart_solve(probs[0], n_starts=self.n_starts)
+        self.last_x_rel = np.asarray(ms.best.x, np.float64)
         cands = np.asarray(ms.x_int_all, np.float64)             # (S, n)
         scores = window_candidate_scores(probs, cands)
         j = select_window_candidate(scores, np.asarray(ms.feas_int_all))
@@ -227,6 +228,9 @@ class ModelPredictiveController(InfrastructureOptimizationController):
             self.solver_traces.append(
                 type(res.trace)(*(np.asarray(f) for f in res.trace)))
         self.plan = np.asarray(res.plan, np.float64)
+        # the committed tick's relaxed point — what health monitoring
+        # certifies through kkt_report (tick 0 of the relaxed plan)
+        self.last_x_rel = self.plan[0]
         self._last_solver_iters = int(res.iters)
         with span("mpc/commit", cat="mpc"):
             return np.asarray(round_committed(probs[0], res.plan[0],

@@ -430,15 +430,29 @@ def solve_horizon(hp: HorizonProblem, x_current, delta_max,
 
 def _gauge_admm(diag: Optional[ADMMDiag]) -> None:
     """Surface an ADMM solve's convergence certificate as ``repro.obs``
-    gauges. Batched solves gauge the worst lane — the residual that gates
-    the whole bucket's quality. Without a recorder installed the whole call
-    is skipped BEFORE touching device values (the ``float()`` casts would
-    otherwise force a sync the telemetry-off contract forbids)."""
-    if diag is None or current_recorder() is None:
+    telemetry gauges AND (when a ``repro.obs.metrics`` registry is
+    installed) as exportable metrics: worst-lane residual gauges plus a
+    residual histogram across solves. Batched solves gauge the worst lane —
+    the residual that gates the whole bucket's quality. With neither sink
+    installed the whole call is skipped BEFORE touching device values (the
+    ``float()`` casts would otherwise force a sync the observability-off
+    contract forbids)."""
+    from repro.obs.metrics import current_metrics
+
+    reg = current_metrics()
+    if diag is None or (current_recorder() is None and reg is None):
         return
-    gauge("horizon/admm_primal_res", float(jnp.max(diag.primal_res)))
-    gauge("horizon/admm_dual_res", float(jnp.max(diag.dual_res)))
-    gauge("horizon/admm_iters", float(jnp.max(diag.admm_iters)))
+    primal = float(jnp.max(diag.primal_res))
+    dual = float(jnp.max(diag.dual_res))
+    iters = float(jnp.max(diag.admm_iters))
+    gauge("horizon/admm_primal_res", primal)
+    gauge("horizon/admm_dual_res", dual)
+    gauge("horizon/admm_iters", iters)
+    if reg is not None:
+        reg.histogram("horizon/admm_primal_res",
+                      lo_exp=-30, hi_exp=10).observe(primal)
+        reg.gauge("horizon/admm_dual_res").set(dual)
+        reg.gauge("horizon/admm_iters").set(iters)
 
 
 def round_committed(p0, x_rel0: jnp.ndarray,

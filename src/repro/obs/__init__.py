@@ -1,31 +1,48 @@
-"""repro.obs — JIT-aware observability: spans, solver traces, reports.
+"""repro.obs — JIT-aware observability: spans, metrics, health, reports.
 
 The layer every perf claim in this repo must be able to back up:
 
 * :mod:`repro.obs.telemetry` — contextvar-scoped nested timing spans,
   counters and gauges; zero-overhead no-op when disabled; compile-vs-
   execute tagging and ``block_until_ready`` fencing for jitted calls.
+* :mod:`repro.obs.metrics` — typed metric registry (counters, gauges,
+  fixed-bucket log2 histograms with p50/p95/p99), jit/vmap-safe hot-path
+  accumulation (``bucket_counts`` + host-side merge per tick), Prometheus
+  textfile + JSON snapshot exporters; no-op when disabled.
+* :mod:`repro.obs.health` — per-tick fleet health monitoring for
+  ``replay_fleet``: committed-tick KKT gauges, SLO/churn/spot breach
+  counters, solver stall detection, non-finite guards, deadline budget.
 * :mod:`repro.obs.solver_trace` — per-iteration PGD convergence capture
   (vmap-safe fixed-size arrays) and host-side analysis helpers.
 * :mod:`repro.obs.export` — JSONL and Perfetto-loadable Chrome trace
-  export, plus the schema validator ``make trace-demo`` gates on.
+  export, plus the schema validators ``make trace-demo`` gates on.
 * :mod:`repro.obs.report` — ``ReplayReport``: per-phase compile/execute
   split, p50/p95/p99 tick latency, padding waste, solver-iters stats.
-* :mod:`repro.obs.provenance` — the provenance block stamped into every
-  BENCH JSON.
+* :mod:`repro.obs.provenance` — the provenance block (git SHA, versions,
+  config digest, seeds) stamped into every BENCH JSON.
+* :mod:`repro.obs.regress` — the bench regression sentinel behind
+  ``tools/bench_compare.py`` / ``make bench-check``: provenance-aware
+  BENCH-vs-BENCH comparison with per-class tolerances.
 
-Design rule (test-enforced): telemetry may measure the system but never
-participate in it — allocations are bit-identical with telemetry on/off.
+Design rule (test-enforced): observability may measure the system but
+never participate in it — allocations are bit-identical with telemetry,
+metrics and health monitoring on or off.
 """
 from .telemetry import (Recorder, Span, SpanEvent, counter, current_recorder,
                         gauge, span, telemetry)
+from .metrics import (Counter, Gauge, HistCounts, Histogram, MetricRegistry,
+                      bucket_counts, collect_metrics, current_metrics, inc,
+                      observe, observe_counts, set_gauge)
+from .health import HealthEvent, HealthMonitor, HealthReport
 from .solver_trace import (SolverTrace, admm_trace_summary, lane_trace,
                            trace_length, trace_summary, traces_to_dict,
                            trim_admm_trace, trim_trace)
 from .export import (events_to_dicts, to_chrome_trace, validate_chrome_trace,
-                     write_chrome_trace, write_jsonl)
+                     validate_jsonl, write_chrome_trace, write_jsonl)
 from .report import PhaseStats, ReplayReport, percentiles
-from .provenance import git_sha, provenance_block
+from .provenance import config_digest, git_sha, provenance_block
+from .regress import (BenchComparison, MetricDelta, classify_metric,
+                      compare_bench, numeric_leaves, validate_bench)
 
 
 def __getattr__(name: str):
@@ -40,11 +57,17 @@ def __getattr__(name: str):
 __all__ = [
     "Recorder", "Span", "SpanEvent", "telemetry", "current_recorder",
     "span", "counter", "gauge",
+    "Counter", "Gauge", "Histogram", "HistCounts", "MetricRegistry",
+    "bucket_counts", "collect_metrics", "current_metrics", "inc",
+    "set_gauge", "observe", "observe_counts",
+    "HealthEvent", "HealthMonitor", "HealthReport",
     "SolverTrace", "trace_length", "lane_trace", "trim_trace",
     "trace_summary", "traces_to_dict",
     "ADMMTrace", "trim_admm_trace", "admm_trace_summary",
     "events_to_dicts", "write_jsonl", "to_chrome_trace",
-    "write_chrome_trace", "validate_chrome_trace",
+    "write_chrome_trace", "validate_chrome_trace", "validate_jsonl",
     "PhaseStats", "ReplayReport", "percentiles",
-    "git_sha", "provenance_block",
+    "git_sha", "provenance_block", "config_digest",
+    "BenchComparison", "MetricDelta", "classify_metric", "compare_bench",
+    "numeric_leaves", "validate_bench",
 ]

@@ -14,10 +14,11 @@ Two formats:
   from interval containment on a single pid/tid, which matches how the
   recorder's span stack works (one single-threaded instrumented run).
 
-:func:`validate_chrome_trace` is the schema gate ``make trace-demo`` runs:
-it re-parses the emitted file and checks every event carries a valid
-``ph``, non-negative ``ts``/``dur`` and the pid/tid/name fields Perfetto
-needs — so the export path cannot rot silently.
+:func:`validate_chrome_trace` and :func:`validate_jsonl` are the schema
+gates ``make trace-demo`` runs: each re-parses its emitted file and checks
+the fields its consumer actually requires (Perfetto's ``ph``/``ts``/``dur``
+/pid/tid; the JSONL event-type schemas) — so neither export path can rot
+silently.
 """
 from __future__ import annotations
 
@@ -28,7 +29,7 @@ from typing import Any, Dict, List, Union
 from .telemetry import Recorder
 
 __all__ = ["events_to_dicts", "write_jsonl", "to_chrome_trace",
-           "write_chrome_trace", "validate_chrome_trace"]
+           "write_chrome_trace", "validate_chrome_trace", "validate_jsonl"]
 
 _PID = 1      # one instrumented process...
 _TID = 1      # ...single-threaded by Recorder design
@@ -130,4 +131,58 @@ def validate_chrome_trace(path: Union[str, Path]) -> List[str]:
         for k in ("pid", "tid"):
             if not isinstance(ev.get(k), int):
                 problems.append(f"{where}: missing {k}")
+    return problems
+
+
+# per-type required fields of the JSONL event stream (events_to_dicts):
+# field -> allowed types; None values are never emitted except span.phase
+_JSONL_SCHEMAS: Dict[str, Dict[str, tuple]] = {
+    "span": {"name": (str,), "cat": (str,), "ts_us": (int, float),
+             "dur_us": (int, float), "depth": (int,), "tags": (dict,)},
+    "counter": {"name": (str,), "total": (int, float)},
+    "gauge": {"name": (str,), "ts_us": (int, float), "value": (int, float)},
+}
+
+
+def validate_jsonl(path: Union[str, Path]) -> List[str]:
+    """Re-parse an emitted JSONL event log and return schema problems
+    (empty list = valid) — the JSONL counterpart of
+    :func:`validate_chrome_trace`. Every line must parse as a JSON object
+    with a known ``type`` and that type's required fields
+    (:func:`events_to_dicts` is the emitter being checked); span
+    durations/timestamps must be non-negative and ``phase`` one of
+    compile/execute/None."""
+    problems: List[str] = []
+    try:
+        lines = Path(path).read_text().splitlines()
+    except OSError as exc:
+        return [f"unreadable event log: {exc}"]
+    if not lines:
+        problems.append("event log has zero lines")
+    for i, line in enumerate(lines):
+        where = f"line[{i}]"
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as exc:
+            problems.append(f"{where}: not JSON ({exc})")
+            continue
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        schema = _JSONL_SCHEMAS.get(ev.get("type"))
+        if schema is None:
+            problems.append(f"{where}: unknown type {ev.get('type')!r}")
+            continue
+        for fld, types in schema.items():
+            val = ev.get(fld)
+            # bool is an int subclass; never a valid numeric field here
+            if not isinstance(val, types) or isinstance(val, bool):
+                problems.append(f"{where}: bad {fld} {val!r}")
+        for fld in ("ts_us", "dur_us"):
+            val = ev.get(fld)
+            if isinstance(val, (int, float)) and val < 0:
+                problems.append(f"{where}: negative {fld} {val!r}")
+        if ev.get("type") == "span" and ev.get("phase") not in (
+                None, "compile", "execute"):
+            problems.append(f"{where}: bad phase {ev.get('phase')!r}")
     return problems

@@ -5,7 +5,7 @@ import json
 import pytest
 
 from repro.obs import (telemetry, events_to_dicts, validate_chrome_trace,
-                       write_chrome_trace, write_jsonl)
+                       validate_jsonl, write_chrome_trace, write_jsonl)
 from repro.obs.export import to_chrome_trace
 
 
@@ -83,3 +83,36 @@ def test_validator_flags_schema_violations(tmp_path):
 
 def test_to_chrome_trace_is_json_serializable(recorder):
     json.dumps(to_chrome_trace(recorder))       # no numpy/tuple leakage
+
+
+def test_validate_jsonl_accepts_emitted_log(recorder, tmp_path):
+    path = write_jsonl(recorder, tmp_path / "events.jsonl")
+    assert validate_jsonl(path) == []
+
+
+def test_validate_jsonl_flags_corruption(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text("\n".join([
+        "{not json",
+        json.dumps([1, 2]),
+        json.dumps({"type": "mystery"}),
+        json.dumps({"type": "span", "name": 7, "cat": "c", "ts_us": -1.0,
+                    "dur_us": 2.0, "depth": 0, "tags": {},
+                    "phase": "weird"}),
+        json.dumps({"type": "counter", "name": "n", "total": True}),
+        json.dumps({"type": "gauge", "name": "g", "ts_us": 1.0,
+                    "value": "x"}),
+    ]) + "\n")
+    problems = validate_jsonl(bad)
+    assert any("not JSON" in p for p in problems)
+    assert any("not an object" in p for p in problems)
+    assert any("unknown type" in p for p in problems)
+    assert any("bad name 7" in p for p in problems)
+    assert any("negative ts_us" in p for p in problems)
+    assert any("bad phase" in p for p in problems)
+    assert any("bad total True" in p for p in problems)  # bool != numeric
+    assert any("bad value 'x'" in p for p in problems)
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert validate_jsonl(empty) == ["event log has zero lines"]
+    assert "unreadable" in validate_jsonl(tmp_path / "missing.jsonl")[0]

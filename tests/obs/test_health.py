@@ -1,0 +1,332 @@
+"""HealthMonitor: breach counters, NaN guards, stall detection, deadline
+budget, KKT gauges — and the tentpole acceptance: health + metrics on vs
+off leaves per-tenant integer allocations bit-identical in both replay
+engines under both controllers."""
+import json
+import math
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import Catalog, make_cloud_catalog
+from repro.fleet import TenantSpec, make_trace, replay_fleet
+from repro.obs import (HealthEvent, HealthMonitor, MetricRegistry,
+                       collect_metrics)
+from repro.obs.health import (_flat_merit_streak, _nondecreasing_tail)
+from repro.testing import make_toy_problem
+
+BASE = np.array([8.0, 16.0, 4.0, 100.0])
+
+
+@pytest.fixture(scope="module")
+def tiny_catalog():
+    return Catalog(make_cloud_catalog().instances[::40])
+
+
+def _step(satisfied=True, churn_violation=0.0, counts=None, iters=5):
+    """A minimal ControllerStep stand-in carrying the fields observe_step
+    reads (duck typing keeps these unit tests solver-free)."""
+    c = np.array([1.0, 0.0, 2.0]) if counts is None else np.asarray(counts)
+    return SimpleNamespace(metrics=SimpleNamespace(satisfied=satisfied),
+                           churn_violation=churn_violation, counts=c,
+                           solver_iters=iters)
+
+
+# ---------------------------------------------------------------------------
+# breach counters / non-finite guards (unit level)
+# ---------------------------------------------------------------------------
+
+def test_breach_counters_and_registry_mirror():
+    reg = MetricRegistry()
+    mon = HealthMonitor(registry=reg)
+    mon.observe_step(tenant="a", tick=0, step=_step(), solver="adaptive")
+    mon.observe_step(tenant="a", tick=1, step=_step(satisfied=False),
+                     solver="adaptive")
+    mon.observe_step(tenant="a", tick=2, step=_step(churn_violation=1.5),
+                     solver="adaptive", spot_unavailable=2)
+    rep = mon.report()
+    assert rep.slo_breach_ticks == 1
+    assert rep.churn_violation_ticks == 1
+    assert rep.spot_interruption_ticks == 1
+    assert rep.nonfinite_events == 0
+    assert reg.counter("health/slo_breach_ticks").value == 1
+    assert reg.counter("health/churn_violation_ticks").value == 1
+    assert reg.counter("health/spot_interruption_ticks").value == 1
+
+
+def test_nonfinite_counts_and_relaxed_guards():
+    mon = HealthMonitor()
+    mon.observe_step(tenant="a", tick=3, step=_step(counts=[1.0, np.nan]),
+                     solver="adaptive", lane=2)
+    mon.observe_step(tenant="a", tick=4, step=_step(),
+                     solver="adaptive", x_rel=np.array([np.inf, 0.0]))
+    rep = mon.report()
+    assert rep.nonfinite_events == 2
+    ev = rep.events[0]
+    assert (ev.kind, ev.severity, ev.tick, ev.lane) == ("non_finite",
+                                                        "error", 3, 2)
+    assert "counts" in ev.message
+    assert "relaxed" in rep.events[1].message
+
+
+def test_nonfinite_gradient_caught_via_kkt_residual():
+    """A NaN in the objective (here: a NaN cost vector) leaves the iterate
+    finite but poisons the gradient — the KKT stationarity residual is
+    where it surfaces (module docstring's non-finite guard contract)."""
+    prob = make_toy_problem(seed=0, n=8)
+    bad = prob._replace(c=prob.c.at[0].set(np.nan))
+    mon = HealthMonitor()
+    x = np.ones(8)
+    mon.observe_step(tenant="a", tick=0, step=_step(), solver="adaptive",
+                     prob=bad, x_rel=x)
+    rep = mon.report()
+    assert rep.nonfinite_events == 1
+    assert "gradient" in rep.events[0].message
+    assert rep.worst_kkt_stationarity is None   # NaN never becomes "worst"
+    # sanity: the same iterate on the healthy problem certifies finite
+    mon2 = HealthMonitor()
+    mon2.observe_step(tenant="a", tick=0, step=_step(), solver="adaptive",
+                      prob=prob, x_rel=x)
+    assert mon2.report().nonfinite_events == 0
+    assert math.isfinite(mon2.report().worst_kkt_stationarity)
+
+
+def test_kkt_worst_tracking_and_cadence():
+    prob = make_toy_problem(seed=1, n=8)
+    reg = MetricRegistry()
+    mon = HealthMonitor(kkt_every=2, registry=reg)
+    for t in range(4):   # ticks 0 and 2 certified, 1 and 3 skipped
+        mon.observe_step(tenant="a", tick=t, step=_step(), solver="adaptive",
+                         prob=prob, x_rel=np.full(8, 0.5 + t))
+    rep = mon.report()
+    assert rep.kkt_ticks_certified == 2
+    assert rep.worst_kkt["tenant"] == "a" and rep.worst_kkt["tick"] in (0, 2)
+    assert reg.histogram("health/kkt_stationarity").count == 2
+    assert (reg.gauge("health/worst_kkt_stationarity").value
+            == pytest.approx(rep.worst_kkt_stationarity))
+    none = HealthMonitor(kkt_every=0)
+    none.observe_step(tenant="a", tick=0, step=_step(), solver="adaptive",
+                      prob=prob, x_rel=np.ones(8))
+    assert none.report().kkt_ticks_certified == 0
+
+
+def test_kkt_warn_threshold_emits_event():
+    prob = make_toy_problem(seed=2, n=8)
+    mon = HealthMonitor(kkt_warn=1e-12)   # any real residual exceeds this
+    mon.observe_step(tenant="a", tick=0, step=_step(), solver="adaptive",
+                     prob=prob, x_rel=np.ones(8))
+    kinds = [e.kind for e in mon.report().events]
+    assert "kkt_residual" in kinds
+
+
+# ---------------------------------------------------------------------------
+# stall detection
+# ---------------------------------------------------------------------------
+
+def test_flat_merit_streak_math():
+    # improving run: no streak beyond the NaN sentinel tail
+    improving = np.concatenate([np.linspace(10, 1, 30), [np.nan] * 10])
+    assert _flat_merit_streak(improving) == 0
+    # converged-then-flat: trailing 25 rows buy nothing
+    flat = np.concatenate([np.linspace(10, 1, 10), np.full(25, 1.0)])
+    assert _flat_merit_streak(flat) == 25
+    assert _flat_merit_streak(np.array([5.0])) == 0
+
+
+def test_nondecreasing_tail_math():
+    contracting = np.array([8.0, 4.0, 2.0, 1.0, 0.5])
+    assert _nondecreasing_tail(contracting) == 0
+    stuck = np.array([8.0, 4.0, 4.0, 4.5, 5.0])
+    assert _nondecreasing_tail(stuck) == 3
+    assert _nondecreasing_tail(np.concatenate([stuck, [np.nan]])) == 3
+
+
+def test_stall_events_pgd_and_admm():
+    mon = HealthMonitor(stall_window=20)
+    pgd_stuck = SimpleNamespace(
+        merit=np.concatenate([np.linspace(10, 1, 5), np.full(30, 1.0)]))
+    mon.observe_step(tenant="a", tick=1, step=_step(), solver="adaptive",
+                     trace=pgd_stuck)
+    admm_stuck = SimpleNamespace(
+        primal=np.concatenate([[5.0], np.full(30, 2.0)]), dual=None)
+    mon.observe_step(tenant="b", tick=2, step=_step(), solver="admm", lane=1,
+                     trace=admm_stuck,
+                     diag=SimpleNamespace(primal_res=np.float32(2.0)))
+    rep = mon.report()
+    assert rep.stall_events == 2
+    by_solver = {e.solver: e for e in rep.events}
+    assert "merit flat" in by_solver["adaptive"].message
+    assert "ADMM" in by_solver["admm"].message
+    assert "2.000e+00" in by_solver["admm"].message   # certificate residual
+    # a healthy contracting solve emits nothing
+    ok = HealthMonitor(stall_window=20)
+    ok.observe_step(tenant="a", tick=1, step=_step(), solver="adaptive",
+                    trace=SimpleNamespace(merit=np.linspace(10, 1, 40)))
+    assert ok.report().stall_events == 0
+
+
+# ---------------------------------------------------------------------------
+# deadline budget (deterministic via the injectable clock)
+# ---------------------------------------------------------------------------
+
+def test_deadline_budget_observe_tick():
+    reg = MetricRegistry()
+    mon = HealthMonitor(deadline_ms=50.0, registry=reg)
+    mon.observe_tick(0, 10.0)
+    mon.observe_tick(1, 80.0)
+    mon.observe_tick(2, 50.0)   # at budget = not over
+    rep = mon.report()
+    assert rep.ticks_observed == 3 and rep.deadline_miss_ticks == 1
+    assert reg.counter("health/deadline_miss_ticks").value == 1
+    assert reg.histogram("health/tick_ms").count == 3
+
+
+@pytest.mark.slow
+def test_deadline_miss_under_fake_clock(tiny_catalog):
+    """ISSUE satellite: the engines time ticks through monitor.clock, so a
+    fake clock advancing 1s per reading makes every tick a deterministic
+    1000ms — over a 500ms budget, every observed tick must miss."""
+    fake = SimpleNamespace(t=0.0)
+
+    def clock():
+        fake.t += 1.0
+        return fake.t
+
+    mon = HealthMonitor(deadline_ms=500.0, kkt_every=0, clock=clock)
+    spec = TenantSpec(name="t0", n_starts=2,
+                      trace=make_trace("constant", BASE, 3))
+    replay_fleet(tiny_catalog, [spec], replay_mode="batched",
+                 run_ca_baseline=False, health=mon)
+    rep = mon.report()
+    assert rep.ticks_observed == 3
+    assert rep.deadline_miss_ticks == rep.ticks_observed
+
+
+# ---------------------------------------------------------------------------
+# event cap / serialization
+# ---------------------------------------------------------------------------
+
+def test_event_storage_cap_counters_keep_counting():
+    mon = HealthMonitor(max_events=3)
+    for t in range(10):
+        mon.observe_step(tenant="a", tick=t, solver="adaptive",
+                         step=_step(counts=[np.nan]))
+    rep = mon.report()
+    assert len(rep.events) == 3 and rep.nonfinite_events == 10
+
+
+def test_report_and_events_are_json_ready():
+    mon = HealthMonitor(deadline_ms=5.0)
+    mon.observe_step(tenant="a", tick=0, solver="adaptive",
+                     step=_step(counts=[np.nan]), lane=np.int64(3))
+    mon.observe_tick(0, 10.0)
+    doc = json.loads(json.dumps(mon.report().to_dict(), default=int))
+    assert doc["nonfinite_events"] == 1 and doc["deadline_miss_ticks"] == 1
+    assert doc["events"][0]["kind"] == "non_finite"
+    assert HealthEvent(kind="x", severity="warn", tenant="t", tick=0,
+                       solver="s").to_dict()["value"] is None
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="kkt_every"):
+        HealthMonitor(kkt_every=-1)
+    with pytest.raises(ValueError, match="stall_window"):
+        HealthMonitor(stall_window=1)
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: observe-only, both engines, both controllers
+# ---------------------------------------------------------------------------
+
+def _fleet(n_ticks=3):
+    return [
+        TenantSpec(name="a", n_starts=2,
+                   trace=make_trace("diurnal", BASE, n_ticks, seed=0,
+                                    amplitude=0.3)),
+        TenantSpec(name="b", n_starts=2, delta_max=4.0,
+                   trace=make_trace("ramp", BASE * 0.6, n_ticks, seed=1)),
+    ]
+
+
+def _counts(res):
+    return [[s.counts for s in t.steps] for t in res.tenants]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["sequential", "batched"])
+def test_myopic_allocations_bit_identical_with_obs_on_and_off(
+        tiny_catalog, mode):
+    """Acceptance criterion: metrics + health on vs off leaves per-tenant
+    integer allocations bit-identical, per engine."""
+    kw = dict(replay_mode=mode, run_ca_baseline=False,
+              capture_solver_trace=True)
+    off = replay_fleet(tiny_catalog, _fleet(), **kw)
+    reg = MetricRegistry()
+    mon = HealthMonitor(deadline_ms=1e9, registry=reg)
+    with collect_metrics(registry=reg):
+        on = replay_fleet(tiny_catalog, _fleet(), health=mon, **kw)
+    for c_off, c_on in zip(_counts(off), _counts(on)):
+        for a, b in zip(c_off, c_on):
+            np.testing.assert_array_equal(a, b)
+    # the monitored replay actually observed: every committed (tenant,
+    # tick) certified, every tick timed, engine histograms filled
+    rep = mon.report()
+    assert rep.kkt_ticks_certified == 6      # 2 tenants x 3 ticks
+    assert rep.ticks_observed == (6 if mode == "sequential" else 3)
+    assert rep.worst_kkt_stationarity is not None
+    assert reg.histogram("replay/tick_ms").count == rep.ticks_observed
+    assert on.metrics.health is rep
+    assert any("health:" in line for line in on.metrics.summary().split("\n"))
+    assert off.metrics.health is None
+
+
+@pytest.mark.slow
+def test_mpc_allocations_bit_identical_with_obs_on_and_off(tiny_catalog):
+    """Same acceptance for the MPC controller (batched engine — the
+    sequential MPC path shares observe_step plumbing via _replay_sequential,
+    covered by the cross-engine counter test below)."""
+    kw = dict(replay_mode="batched", controller="mpc", horizon=2,
+              run_ca_baseline=False)
+    off = replay_fleet(tiny_catalog, _fleet(), **kw)
+    mon = HealthMonitor()
+    on = replay_fleet(tiny_catalog, _fleet(), health=mon, **kw)
+    for c_off, c_on in zip(_counts(off), _counts(on)):
+        for a, b in zip(c_off, c_on):
+            np.testing.assert_array_equal(a, b)
+    assert mon.report().kkt_ticks_certified == 6
+
+
+@pytest.mark.slow
+def test_health_counters_agree_across_engines(tiny_catalog):
+    """The two engines feed the monitor through different code paths but
+    observe the SAME committed steps — deterministic counters and the worst
+    KKT residual must agree exactly."""
+    reports = {}
+    for mode in ("sequential", "batched"):
+        mon = HealthMonitor()
+        replay_fleet(tiny_catalog, _fleet(), replay_mode=mode,
+                     run_ca_baseline=False, health=mon)
+        reports[mode] = mon.report()
+    seq, bat = reports["sequential"], reports["batched"]
+    assert seq.slo_breach_ticks == bat.slo_breach_ticks
+    assert seq.churn_violation_ticks == bat.churn_violation_ticks
+    assert seq.kkt_ticks_certified == bat.kkt_ticks_certified
+    assert seq.nonfinite_events == bat.nonfinite_events == 0
+    assert seq.worst_kkt_stationarity == pytest.approx(
+        bat.worst_kkt_stationarity, rel=1e-4)
+
+
+@pytest.mark.slow
+def test_spot_interruption_ticks_counted(tiny_catalog):
+    """A tenant with an availability overlay that zeroes its spot twin on
+    some tick must bump the spot-interruption counter."""
+    avail = np.ones((3, 1))
+    avail[1, 0] = 0.0   # interrupted on tick 1
+    spec = TenantSpec(name="spot", n_starts=2,
+                      trace=make_trace("constant", BASE, 3),
+                      spot_idx=np.array([0]), spot_availability=avail)
+    mon = HealthMonitor(kkt_every=0)
+    replay_fleet(tiny_catalog, [spec], replay_mode="batched",
+                 run_ca_baseline=False, health=mon)
+    assert mon.report().spot_interruption_ticks == 1

@@ -1,0 +1,210 @@
+"""Metric registry: log2 histograms vs numpy, jit/vmap-safe device path vs
+host path, exporters, and the disabled no-op contract."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs import (Counter, Gauge, Histogram, MetricRegistry,
+                       bucket_counts, collect_metrics, current_metrics, inc,
+                       observe, observe_counts, set_gauge)
+from repro.obs.metrics import _n_buckets
+
+
+# ---------------------------------------------------------------------------
+# bucket_counts: the jit/vmap-safe device path
+# ---------------------------------------------------------------------------
+
+def test_bucket_counts_shapes_are_static():
+    """Output shapes depend only on (lo_exp, hi_exp), never on the data —
+    the property that makes the record a legal jit/vmap/scan carry."""
+    for vals in ([1.0], [0.5, 2.0, 7.0], np.zeros((3, 4))):
+        hc = bucket_counts(vals, lo_exp=-4, hi_exp=4)
+        assert hc.counts.shape == (_n_buckets(-4, 4),)
+        assert hc.total.shape == () and hc.n.shape == ()
+
+
+def test_bucket_counts_under_jit_and_vmap():
+    import jax
+    import jax.numpy as jnp
+
+    vals = jnp.asarray([0.3, 1.5, 6.0, 100.0], jnp.float32)
+    eager = bucket_counts(vals, lo_exp=-4, hi_exp=8)
+    jitted = jax.jit(lambda v: bucket_counts(v, lo_exp=-4, hi_exp=8))(vals)
+    np.testing.assert_array_equal(np.asarray(eager.counts),
+                                  np.asarray(jitted.counts))
+    assert float(eager.total) == pytest.approx(float(jitted.total))
+    batch = jnp.stack([vals, vals * 2])
+    vm = jax.vmap(lambda v: bucket_counts(v, lo_exp=-4, hi_exp=8))(batch)
+    assert np.asarray(vm.counts).shape == (2, _n_buckets(-4, 8))
+    np.testing.assert_array_equal(np.asarray(vm.counts)[0],
+                                  np.asarray(eager.counts))
+
+
+def test_device_merge_matches_host_observe_exactly():
+    """The ISSUE's two accumulation paths — jnp bucket_counts + merge vs
+    plain host observe — must agree bucket-for-bucket on the same stream."""
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([rng.lognormal(1.0, 2.0, 500),
+                           [0.0, -3.0, 1e9, 1e-9]]).astype(np.float32)
+    host = Histogram("h")
+    host.observe(vals)
+    dev = Histogram("d")
+    dev.merge(bucket_counts(vals))
+    np.testing.assert_array_equal(host.counts, dev.counts)
+    assert host.count == dev.count == vals.size
+    assert host.total == pytest.approx(dev.total, rel=1e-5)
+    assert host.vmin == pytest.approx(dev.vmin)
+    assert host.vmax == pytest.approx(dev.vmax)
+
+
+def test_nonfinite_samples_are_tallied_not_bucketed():
+    vals = np.array([1.0, np.nan, np.inf, -np.inf, 2.0], np.float32)
+    h = Histogram("h")
+    h.observe(vals)
+    assert h.nonfinite == 3 and h.count == 2
+    hc = bucket_counts(vals)
+    assert int(hc.nonfinite) == 3 and int(hc.n) == 2
+    assert float(hc.total) == pytest.approx(3.0)   # NaN excluded from sum
+
+
+def test_underflow_and_overflow_buckets():
+    h = Histogram("h", lo_exp=0, hi_exp=4)   # core covers [1, 16)
+    h.observe([0.0, -5.0, 0.5])              # all underflow
+    h.observe([1e6])                         # overflow
+    assert h.counts[0] == 3 and h.counts[-1] == 1
+    assert h.counts[1:-1].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# quantiles vs numpy (ISSUE satellite: histograms validated against numpy)
+# ---------------------------------------------------------------------------
+
+def test_quantiles_exact_on_constant_stream():
+    h = Histogram("h")
+    h.observe(np.full(100, 12.5))
+    assert h.quantile(50) == pytest.approx(12.5)
+    assert h.percentiles() == {"p50": pytest.approx(12.5),
+                               "p95": pytest.approx(12.5),
+                               "p99": pytest.approx(12.5)}
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_quantiles_within_one_log2_bucket_of_numpy(seed):
+    """Docstring contract: linear interpolation inside a log2 bucket keeps
+    every estimate within a factor of 2 of numpy's exact quantile."""
+    rng = np.random.default_rng(seed)
+    vals = rng.lognormal(mean=2.0, sigma=1.5, size=2000)
+    h = Histogram("h")
+    h.observe(vals)
+    for q in (50, 95, 99):
+        exact = float(np.percentile(vals, q))
+        est = h.quantile(q)
+        assert exact / 2 <= est <= exact * 2, (q, exact, est)
+    assert h.quantile(0) == pytest.approx(vals.min())
+    assert h.quantile(100) == pytest.approx(vals.max())
+
+
+def test_quantile_empty_histogram_is_none():
+    assert Histogram("h").quantile(50) is None
+
+
+# ---------------------------------------------------------------------------
+# counters / gauges / registry
+# ---------------------------------------------------------------------------
+
+def test_counter_rejects_negative_increment():
+    c = Counter("c")
+    c.inc(); c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="negative"):
+        c.inc(-1.0)
+
+
+def test_gauge_tracks_last_min_max():
+    g = Gauge("g")
+    g.set(3.0); g.set(-1.0); g.set(2.0)
+    assert g.value == 2.0 and g.vmin == -1.0 and g.vmax == 3.0 and g.n == 3
+
+
+def test_registry_get_or_create_and_type_clash():
+    reg = MetricRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("x")
+    with pytest.raises(ValueError, match="hi_exp"):
+        reg.histogram("bad", lo_exp=3, hi_exp=3)
+
+
+def test_histogram_merge_bucket_mismatch_raises():
+    h = Histogram("h", lo_exp=0, hi_exp=4)
+    with pytest.raises(ValueError, match="buckets"):
+        h.merge(bucket_counts([1.0]))   # default range, different layout
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def _populated_registry():
+    reg = MetricRegistry()
+    reg.counter("replay/slo_breach_ticks", help="breaches").inc(3)
+    reg.gauge("health/worst_kkt").set(0.25)
+    reg.histogram("replay/tick_ms").observe([1.0, 1.0, 3.0, 900.0])
+    return reg
+
+
+def test_prometheus_text_format():
+    text = _populated_registry().to_prometheus()
+    assert "# TYPE repro_replay_slo_breach_ticks_total counter" in text
+    assert "repro_replay_slo_breach_ticks_total 3" in text
+    assert "# HELP repro_replay_slo_breach_ticks_total breaches" in text
+    assert "repro_health_worst_kkt 0.25" in text
+    assert 'repro_replay_tick_ms_bucket{le="+Inf"} 4' in text
+    assert "repro_replay_tick_ms_count 4" in text
+    assert "repro_replay_tick_ms_sum 905" in text
+    # cumulative bucket rows must be non-decreasing and end at count
+    cums = [int(line.rsplit(" ", 1)[1]) for line in text.splitlines()
+            if "_bucket{" in line]
+    assert cums == sorted(cums) and cums[-1] == 4
+
+
+def test_snapshot_is_json_ready_and_write_exporters(tmp_path):
+    reg = _populated_registry()
+    snap = json.loads(json.dumps(reg.snapshot()))   # round-trips
+    assert snap["counters"]["replay/slo_breach_ticks"] == 3
+    assert snap["gauges"]["health/worst_kkt"]["value"] == 0.25
+    h = snap["histograms"]["replay/tick_ms"]
+    assert h["count"] == 4 and h["min"] == 1.0 and h["max"] == 900.0
+    assert sum(h["counts"]) == 4 and h["p50"] is not None
+    p1 = reg.write_snapshot(tmp_path / "m.json")
+    assert json.loads(p1.read_text())["counters"]
+    p2 = reg.write_prometheus(tmp_path / "m.prom")
+    assert p2.read_text().startswith("# ")
+
+
+# ---------------------------------------------------------------------------
+# contextvar scoping: the no-op disabled path
+# ---------------------------------------------------------------------------
+
+def test_module_helpers_noop_when_disabled():
+    assert current_metrics() is None
+    # none of these may raise or create state with no registry installed
+    inc("x"); set_gauge("g", 1.0); observe("h", [1.0])
+    observe_counts("h", bucket_counts([1.0]))
+    with collect_metrics(enabled=False) as reg:
+        assert reg is None and current_metrics() is None
+
+
+def test_collect_metrics_scoping_and_shared_registry():
+    outer = MetricRegistry()
+    with collect_metrics(registry=outer) as reg:
+        assert reg is outer and current_metrics() is outer
+        inc("n")
+        with collect_metrics() as inner:    # nested scope shadows
+            assert current_metrics() is inner is not outer
+            inc("n")
+        inc("n")
+    assert current_metrics() is None
+    assert outer.counter("n").value == 2.0

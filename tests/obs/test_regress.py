@@ -1,0 +1,179 @@
+"""Bench regression sentinel: metric classification, leaf flattening,
+schema validation, provenance-aware refusal, and the tolerance directions
+the ISSUE's acceptance criteria name (a >=20% timing or >=1% objective
+regression must fail)."""
+import copy
+
+import pytest
+
+from repro.obs import (classify_metric, compare_bench, numeric_leaves,
+                       validate_bench)
+
+
+def _bench(platform="Linux-x86_64", backend="cpu", digest="abc123", **over):
+    doc = {
+        "provenance": {"platform": platform, "backend": backend,
+                       "config_digest": digest},
+        "config": {"B": 3, "quick": True},
+        "steady_state": {"tick_ms": {"p50": 10.0, "p95": 20.0},
+                         "compile_ms": 900.0},
+        "objective": {"cost_integral": 100.0, "total_churn": 8.0,
+                      "slo_violation_ticks": 0,
+                      "savings_vs_ca_pct": 60.0},
+        "replay": {"speedup": 4.0},
+        "misc": {"distinct_shapes": 2},
+    }
+    for path, v in over.items():
+        node = doc
+        parts = path.split(".")
+        for p in parts[:-1]:
+            node = node[p]
+        node[parts[-1]] = v
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# classification / flattening / validation
+# ---------------------------------------------------------------------------
+
+def test_classify_metric_classes():
+    assert classify_metric("steady_state.tick_ms.p95") == "timing"
+    assert classify_metric("telemetry.compile_ms") == "timing"
+    assert classify_metric("replay.t_sequential") is None   # bare t_ prefix
+    assert classify_metric("replay.speedup") == "throughput"
+    assert classify_metric("ca.ticks_per_s_vectorized") == "throughput"
+    assert classify_metric("objective.cost_integral") == "objective"
+    assert classify_metric("objective.total_churn") == "objective"
+    assert classify_metric("health.slo_breach_ticks") == "objective"
+    assert classify_metric("health.nonfinite_events") == "objective"
+    assert classify_metric("health.stall_events") == "objective"
+    assert classify_metric("objective.savings_vs_ca_pct") == "quality"
+    assert classify_metric("misc.distinct_shapes") is None
+    # path-level fallback: an unclassifiable leaf under a timing section
+    assert classify_metric("tick_ms.p50") == "timing"
+
+
+def test_numeric_leaves_skips_meta_and_bools():
+    leaves = numeric_leaves(_bench())
+    assert "steady_state.tick_ms.p50" in leaves
+    assert "objective.slo_violation_ticks" in leaves
+    assert not any(p.startswith(("provenance", "config")) for p in leaves)
+    assert not any("quick" in p for p in leaves)   # bool excluded
+    nested = numeric_leaves({"a": [{"b": 1.0}, 2.0]})
+    assert nested == {"a.0.b": 1.0, "a.1": 2.0}
+
+
+def test_validate_bench_problems():
+    assert validate_bench(_bench()) == []
+    assert validate_bench([1, 2]) == ["BENCH doc is not a JSON object"]
+    assert "missing provenance block" in validate_bench({"x": 1.0})
+    missing = _bench()
+    del missing["provenance"]["backend"]
+    assert any("backend" in p for p in validate_bench(missing))
+    empty = {"provenance": {"platform": "p", "backend": "cpu"}}
+    assert any("no numeric" in p for p in validate_bench(empty))
+
+
+# ---------------------------------------------------------------------------
+# provenance-aware refusal
+# ---------------------------------------------------------------------------
+
+def test_refuses_config_digest_mismatch_even_cross_platform_allowed():
+    cmp = compare_bench(_bench(), _bench(digest="zzz999"),
+                        allow_cross_platform=True)
+    assert not cmp.ok and cmp.refusals
+    assert "config_digest" in cmp.refusals[0]
+    assert "REFUSED" in cmp.summary()
+
+
+def test_refuses_platform_mismatch_unless_allowed():
+    other = _bench(platform="Darwin-arm64")
+    refused = compare_bench(_bench(), other)
+    assert refused.refusals and "platform" in refused.refusals[0]
+    allowed = compare_bench(_bench(), other, allow_cross_platform=True)
+    assert allowed.ok and not allowed.refusals
+    # timing skipped, objective still compared
+    assert any("cross-platform" in s for s in allowed.skipped)
+    kinds = {d.kind for d in allowed.deltas}
+    assert "objective" in kinds and "timing" not in kinds
+
+
+def test_invalid_doc_refuses_with_side_label():
+    cmp = compare_bench({"nope": True}, _bench())
+    assert cmp.refusals and cmp.refusals[0].startswith("baseline:")
+
+
+# ---------------------------------------------------------------------------
+# tolerance directions (the acceptance-criteria numbers)
+# ---------------------------------------------------------------------------
+
+def test_timing_regression_20pct_caught_25pct_slowdown():
+    cand = _bench(**{"steady_state.tick_ms.p50": 12.5})   # +25%
+    cmp = compare_bench(_bench(), cand, timing_rtol=0.2)
+    assert not cmp.ok
+    (bad,) = cmp.regressions
+    assert bad.path == "steady_state.tick_ms.p50" and bad.kind == "timing"
+    assert bad.rel_change == pytest.approx(0.25)
+    assert "REGRESSION" in cmp.summary()
+
+
+def test_timing_improvement_and_within_tolerance_pass():
+    faster = _bench(**{"steady_state.tick_ms.p50": 5.0})   # -50%
+    assert compare_bench(_bench(), faster).ok
+    slight = _bench(**{"steady_state.tick_ms.p50": 11.0})  # +10% < 20%
+    assert compare_bench(_bench(), slight, timing_rtol=0.2).ok
+
+
+def test_throughput_drop_is_a_regression():
+    slower = _bench(**{"replay.speedup": 2.0})   # higher-better halved
+    cmp = compare_bench(_bench(), slower, timing_rtol=0.2)
+    assert any(d.path == "replay.speedup" and not d.ok for d in cmp.deltas)
+
+
+def test_objective_1pct_tolerance():
+    worse = _bench(**{"objective.cost_integral": 102.0})   # +2%
+    cmp = compare_bench(_bench(), worse, objective_rtol=0.01)
+    assert not cmp.ok
+    assert cmp.regressions[0].rel_change == pytest.approx(0.02)
+    tiny = _bench(**{"objective.cost_integral": 100.5})    # +0.5%
+    assert compare_bench(_bench(), tiny, objective_rtol=0.01).ok
+    better = _bench(**{"objective.cost_integral": 90.0})
+    assert compare_bench(_bench(), better).ok
+
+
+def test_quality_drop_is_a_regression():
+    worse = _bench(**{"objective.savings_vs_ca_pct": 58.0})  # higher-better
+    cmp = compare_bench(_bench(), worse, objective_rtol=0.01)
+    assert any(d.path.endswith("savings_vs_ca_pct") and not d.ok
+               for d in cmp.deltas)
+
+
+def test_zero_baseline_counter_regression_detected():
+    """slo ticks going 0 -> 1 must fail, not vanish in a 0-division."""
+    worse = _bench(**{"objective.slo_violation_ticks": 1})
+    cmp = compare_bench(_bench(), worse)
+    assert any(d.path.endswith("slo_violation_ticks") and not d.ok
+               for d in cmp.deltas)
+
+
+# ---------------------------------------------------------------------------
+# skipped reporting
+# ---------------------------------------------------------------------------
+
+def test_unclassified_and_one_sided_leaves_reported_as_skipped():
+    base = _bench()
+    cand = copy.deepcopy(base)
+    del cand["replay"]["speedup"]
+    cand["new_section"] = {"novel_ms": 1.0}
+    cmp = compare_bench(base, cand)
+    assert cmp.ok   # skipped leaves never fail the comparison
+    assert any("only in baseline" in s for s in cmp.skipped)
+    assert any("only in candidate" in s for s in cmp.skipped)
+    assert any("unclassified" in s for s in cmp.skipped)
+    assert "skipped" in cmp.summary()
+
+
+def test_identity_comparison_is_clean():
+    cmp = compare_bench(_bench(), _bench())
+    assert cmp.ok and not cmp.refusals and not cmp.regressions
+    assert all(d.rel_change == 0.0 for d in cmp.deltas)

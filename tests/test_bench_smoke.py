@@ -127,3 +127,30 @@ def test_solver_bench_runs(capsys):
         assert "kkt_stationarity" in row
     assert out["kernel"]["grad_err"] <= 1e-3
     assert out["pareto_frontier_size"] >= 1
+
+
+@pytest.mark.slow
+def test_check_bench_emits_comparable_sentinel_doc(tmp_path):
+    """benchmarks/check_bench.py (the `make bench-check` canary) runs end
+    to end and its fresh doc compares cleanly against the committed golden
+    on the objective metrics — the exact comparison CI gates on (timings
+    compared under the loose local tolerance there; skipped entirely here
+    since this runner may not match the golden's platform)."""
+    import json
+
+    from repro.obs import compare_bench, validate_bench
+
+    cb = _load("check_bench")
+    out = os.path.join(tmp_path, "BENCH_check.json")
+    assert cb.main(["--json", out]) == 0
+    doc = json.load(open(out))
+    assert validate_bench(doc) == []
+    assert doc["provenance"]["config_digest"]
+    assert doc["health"]["nonfinite_events"] == 0
+    assert doc["health"]["kkt_ticks_certified"] > 0
+    golden = json.load(open(os.path.join(BENCH_DIR, "golden",
+                                         "BENCH_check.json")))
+    cmp = compare_bench(golden, doc, allow_cross_platform=True)
+    assert not cmp.refusals, cmp.summary()
+    obj = [d for d in cmp.deltas if d.kind in ("objective", "quality")]
+    assert obj and all(d.ok for d in obj), cmp.summary()

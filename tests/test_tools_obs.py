@@ -1,0 +1,144 @@
+"""CLI-level tests for the observability tools: ``trace_demo --validate``
+must exit non-zero on corrupted artifacts (ISSUE satellite), the
+``bench_compare`` CLI must map comparison outcomes to its documented exit
+codes, and the committed ``benchmarks/golden/BENCH_check.json`` must stay
+consistent with ``check_bench``'s CONFIG (a stale golden refuses instead
+of producing nonsense deltas — catch it here, not in CI archaeology)."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+from repro.obs import (compare_bench, config_digest, telemetry,
+                       validate_bench, write_chrome_trace, write_jsonl)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(REPO, "benchmarks", "golden", "BENCH_check.json")
+
+
+def _load(relpath: str):
+    name = os.path.splitext(os.path.basename(relpath))[0]
+    spec = importlib.util.spec_from_file_location(
+        f"tools_obs_{name}", os.path.join(REPO, relpath))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def trace_demo():
+    return _load("tools/trace_demo.py")
+
+
+@pytest.fixture(scope="module")
+def bench_compare():
+    return _load("tools/bench_compare.py")
+
+
+# ---------------------------------------------------------------------------
+# trace_demo --validate
+# ---------------------------------------------------------------------------
+
+def _artifact_pair(tmp_path):
+    """A real (trace.json, trace.jsonl) pair from a tiny recorder."""
+    with telemetry() as rec:
+        with rec.span("replay/tick", cat="replay", compile_key=("t", 0)):
+            pass
+    trace = write_chrome_trace(rec, tmp_path / "trace.json")
+    write_jsonl(rec, tmp_path / "trace.jsonl")
+    return trace
+
+
+def test_trace_demo_validate_ok_on_valid_pair(trace_demo, tmp_path, capsys):
+    trace = _artifact_pair(tmp_path)
+    assert trace_demo.main(["--validate", str(trace)]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_trace_demo_validate_nonzero_on_corrupt_jsonl(trace_demo, tmp_path,
+                                                      capsys):
+    trace = _artifact_pair(tmp_path)
+    (tmp_path / "trace.jsonl").write_text('{"type": "mystery"}\n')
+    assert trace_demo.main(["--validate", str(trace)]) == 1
+    assert "jsonl schema" in capsys.readouterr().out
+
+
+def test_trace_demo_validate_nonzero_on_corrupt_trace(trace_demo, tmp_path,
+                                                      capsys):
+    trace = _artifact_pair(tmp_path)
+    trace.write_text(json.dumps({"traceEvents": [{"ph": "Z", "ts": -1}]}))
+    assert trace_demo.main(["--validate", str(trace)]) == 1
+    assert "trace schema" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# bench_compare CLI exit codes
+# ---------------------------------------------------------------------------
+
+def _doc(digest="d1", cost=100.0, p50=10.0):
+    return {"provenance": {"platform": "linux", "backend": "cpu",
+                           "config_digest": digest},
+            "objective": {"cost_integral": cost},
+            "steady_state": {"tick_ms": {"p50": p50}}}
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_cli_exit_0_on_clean_pair(bench_compare, tmp_path, capsys):
+    a = _write(tmp_path, "a.json", _doc())
+    b = _write(tmp_path, "b.json", _doc(cost=100.2, p50=10.5))
+    assert bench_compare.main([a, b]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_cli_exit_1_on_regression(bench_compare, tmp_path, capsys):
+    a = _write(tmp_path, "a.json", _doc())
+    b = _write(tmp_path, "b.json", _doc(cost=105.0))   # +5% objective
+    assert bench_compare.main([a, b]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    # a looser tolerance turns the same pair green
+    assert bench_compare.main([a, b, "--objective-rtol", "0.10"]) == 0
+
+
+def test_cli_exit_2_on_refusal(bench_compare, tmp_path, capsys):
+    a = _write(tmp_path, "a.json", _doc())
+    b = _write(tmp_path, "b.json", _doc(digest="d2"))
+    assert bench_compare.main([a, b]) == 2
+    assert "REFUSED" in capsys.readouterr().out
+
+
+def test_cli_set_path_helper(bench_compare):
+    doc = {"a": {"b": [1.0, {"c": 2.0}]}}
+    bench_compare._set_path(doc, "a.b.1.c", 9.0)
+    bench_compare._set_path(doc, "a.b.0", 7.0)
+    assert doc == {"a": {"b": [7.0, {"c": 9.0}]}}
+
+
+def test_cli_selftest_passes_on_golden(bench_compare, capsys):
+    """The acceptance-criteria injection test: +25% timing and +2%
+    objective perturbations of the committed golden must both be caught."""
+    assert bench_compare.main(["--selftest", GOLDEN]) == 0
+    assert "selftest OK" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# committed golden consistency
+# ---------------------------------------------------------------------------
+
+def test_golden_is_valid_and_matches_check_bench_config():
+    golden = json.load(open(GOLDEN))
+    assert validate_bench(golden) == []
+    check_bench = _load("benchmarks/check_bench.py")
+    assert (golden["provenance"]["config_digest"]
+            == config_digest(check_bench.CONFIG)), (
+        "benchmarks/golden/BENCH_check.json was produced by a different "
+        "check_bench CONFIG — regenerate it with "
+        "`python benchmarks/check_bench.py --golden`")
+    assert golden["provenance"]["seeds"] == check_bench.SEEDS
+    cmp = compare_bench(golden, golden)
+    assert cmp.ok and not cmp.refusals

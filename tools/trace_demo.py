@@ -4,11 +4,16 @@
 Runs a SMALL fully-instrumented fleet replay (telemetry recorder + per-lane
 solver-trace capture), writes the Perfetto-loadable Chrome trace to
 ``benchmarks/artifacts/trace.json`` (plus the JSONL event log next to it),
-re-validates the emitted file against the trace-event schema
-(``repro.obs.export.validate_chrome_trace``), and prints the
-``ReplayReport`` rollup. Exit 1 on any schema violation, on a trace with
-no compile-tagged solve span, or on a replay that captured no solver
-trace — the three things the export pipeline exists to deliver.
+re-validates BOTH emitted files against their schemas
+(``repro.obs.export.validate_chrome_trace`` / ``validate_jsonl``), and
+prints the ``ReplayReport`` rollup. Exit 1 on any schema violation, on a
+trace with no compile-tagged solve span, or on a replay that captured no
+solver trace — the things the export pipeline exists to deliver.
+
+``--validate TRACE.json`` skips the replay and only re-validates an
+already-emitted artifact pair (the JSONL is looked up next to the trace),
+exiting non-zero on problems — the mode the validator regression tests
+drive with deliberately corrupted files.
 
 Run:  PYTHONPATH=src python tools/trace_demo.py [--out PATH]
 Open: https://ui.perfetto.dev  →  drag benchmarks/artifacts/trace.json in.
@@ -17,11 +22,23 @@ from __future__ import annotations
 
 import os
 import sys
+from typing import List
 
 import numpy as np
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(REPO, "benchmarks", "artifacts", "trace.json")
+
+
+def validate_artifacts(trace_path: str, jsonl_path: str) -> List[str]:
+    """Validate an emitted (Chrome trace, JSONL event log) pair against
+    both export schemas; returns all problems, each prefixed with the file
+    it came from (empty list = both valid)."""
+    from repro.obs import validate_chrome_trace, validate_jsonl
+
+    problems = [f"trace schema: {p}" for p in validate_chrome_trace(trace_path)]
+    problems += [f"jsonl schema: {p}" for p in validate_jsonl(jsonl_path)]
+    return problems
 
 
 def main(argv) -> int:
@@ -31,11 +48,25 @@ def main(argv) -> int:
         if i + 1 >= len(argv):
             raise SystemExit("--out requires a path argument")
         out = argv[i + 1]
+    if "--validate" in argv:
+        i = argv.index("--validate")
+        if i + 1 >= len(argv):
+            raise SystemExit("--validate requires a trace path argument")
+        trace_path = argv[i + 1]
+        jsonl_path = os.path.splitext(trace_path)[0] + ".jsonl"
+        failures = validate_artifacts(trace_path, jsonl_path)
+        if failures:
+            print(f"[trace-demo] INVALID — {len(failures)} problem(s):")
+            for f in failures:
+                print(f"  {f}")
+            return 1
+        print(f"[trace-demo] OK — {trace_path} and {jsonl_path} validate")
+        return 0
 
     from repro.core import Catalog, make_cloud_catalog
     from repro.fleet import TenantSpec, make_trace, replay_fleet
-    from repro.obs import (ReplayReport, telemetry, validate_chrome_trace,
-                           write_chrome_trace, write_jsonl)
+    from repro.obs import (ReplayReport, telemetry, write_chrome_trace,
+                           write_jsonl)
 
     catalog = Catalog(make_cloud_catalog().instances[::40])
     base = np.array([8.0, 16.0, 4.0, 100.0])
@@ -52,11 +83,9 @@ def main(argv) -> int:
         res = replay_fleet(catalog, specs, run_ca_baseline=False,
                            replay_mode="batched", capture_solver_trace=True)
 
-    failures = []
     path = write_chrome_trace(rec, out)
     jsonl = write_jsonl(rec, os.path.splitext(out)[0] + ".jsonl")
-    problems = validate_chrome_trace(path)
-    failures += [f"schema: {p}" for p in problems]
+    failures = validate_artifacts(str(path), str(jsonl))
     if not rec.spans("replay/solve", phase="compile"):
         failures.append("no compile-tagged replay/solve span recorded")
     n_traces = sum(len(t) for t in (res.solver_traces or []))
@@ -71,7 +100,7 @@ def main(argv) -> int:
         for f in failures:
             print(f"  {f}")
         return 1
-    print("[trace-demo] OK — trace validates; open it at "
+    print("[trace-demo] OK — both artifacts validate; open the trace at "
           "https://ui.perfetto.dev")
     return 0
 
