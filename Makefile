@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast docs-check bench bench-fleet bench-json bench-horizon bench-scenarios bench-check example-fleet trace-demo
+.PHONY: test test-fast docs-check bench bench-fleet bench-json bench-horizon bench-scenarios bench-serve bench-check example-fleet trace-demo
 
 test:            ## tier-1 verify: the full test suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -30,6 +30,10 @@ bench-horizon:   ## quick MPC-vs-myopic sweep -> benchmarks/BENCH_horizon.json
 bench-scenarios: ## scenario frontiers (SLO/priority/spot vs CA) -> benchmarks/BENCH_scenarios.json
 	PYTHONPATH=src $(PY) benchmarks/scenario_bench.py \
 	    --json benchmarks/BENCH_scenarios.json
+
+bench-serve:     ## serving bench: p50/p99 decision latency + anytime degradation -> benchmarks/BENCH_serve.json (--quick grid; drop --quick for the committed full sweep)
+	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --quick \
+	    --json benchmarks/BENCH_serve.json
 
 bench-check:     ## regression sentinel: rerun the canary bench, compare vs committed golden, prove the comparator bites
 	PYTHONPATH=src $(PY) benchmarks/check_bench.py \

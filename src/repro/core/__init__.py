@@ -7,7 +7,8 @@ from .problem import AllocationProblem, PenaltyParams
 from .objective import objective as objective_value
 from .objective import (objective_terms, grad_objective,
                         constraint_residuals, is_feasible)
-from .pgd import PGDConfig, pgd_minimize
+from .pgd import (AnytimeConfig, AnytimeReport, PGDConfig, PGDTrace,
+                  pgd_minimize, pgd_minimize_traced)
 from .solver import SolverConfig, SolveResult, solve_relaxation
 from .multistart import multistart_solve, make_starts
 from .rounding import greedy_round, round_and_polish, scale_down
@@ -33,7 +34,8 @@ from . import workloads
 __all__ = [
     "AllocationProblem", "PenaltyParams", "objective_value", "objective_terms",
     "grad_objective", "constraint_residuals", "is_feasible", "PGDConfig",
-    "pgd_minimize", "SolverConfig",
+    "AnytimeConfig", "AnytimeReport", "PGDTrace",
+    "pgd_minimize", "pgd_minimize_traced", "SolverConfig",
     "SolveResult", "solve_relaxation", "multistart_solve", "make_starts",
     "greedy_round", "round_and_polish", "scale_down", "branch_and_bound",
     "BnBResult", "project_l1_ball", "project_incremental", "solve_incremental",

@@ -16,6 +16,7 @@ import numpy as np
 from .api import problem_from_demand
 from .catalog import Catalog
 from .incremental import solve_incremental_info
+from .pgd import AnytimeConfig
 from .metrics import AllocationMetrics, evaluate
 from .multistart import multistart_solve
 from .problem import AllocationProblem, PenaltyParams
@@ -38,7 +39,12 @@ class ControllerStep:
     ``solver_iters`` records the PGD iterations the solve behind this tick
     actually took (0 where the engine did not report one, e.g. cold-start
     multistart ticks) — the adaptive-vs-fixed speedup evidence
-    ``benchmarks/horizon_bench.py`` aggregates per cell."""
+    ``benchmarks/horizon_bench.py`` aggregates per cell.
+
+    ``deadline_hit`` marks ticks whose solve was truncated by an enforced
+    anytime deadline (``core.pgd.AnytimeConfig``) — the allocation is the
+    solve's best-so-far feasible iterate, not its converged answer. Always
+    False without an anytime budget."""
 
     demand: np.ndarray
     counts: np.ndarray
@@ -47,6 +53,7 @@ class ControllerStep:
     replanned: bool
     churn_violation: float = 0.0  # max(0, churn - delta_max) on warm ticks
     solver_iters: int = 0         # inner PGD iterations spent on this tick
+    deadline_hit: bool = False    # anytime budget truncated this tick's solve
 
 
 @dataclass
@@ -78,10 +85,19 @@ class InfrastructureOptimizationController:
     # the same solution — see repro.obs.solver_trace.
     capture_solver_trace: bool = False
     solver_traces: List = field(default_factory=list)
+    # enforced anytime budget (core.pgd.AnytimeConfig): when set with a
+    # deadline, every warm solve runs chunked against the injectable clock
+    # and deploys its best-so-far feasible iterate at expiry. None (or a
+    # config without a deadline) keeps the untruncated engine — the exact
+    # pre-anytime compiled program.
+    anytime: Optional[AnytimeConfig] = None
 
     # not a dataclass field: last warm solve's PGD iteration count, consumed
     # by step() when recording the tick (0 until a warm solve has run)
     _last_solver_iters = 0
+    # not a dataclass field: whether the last warm solve's anytime budget
+    # expired before convergence (False without an anytime deadline)
+    _last_deadline_hit = False
     # not a dataclass field: the last solve's RELAXED solution (set by both
     # cold and warm solves, and by the batched fleet engine). Health
     # monitoring (repro.obs.health) certifies THIS point through kkt_report
@@ -133,7 +149,18 @@ class InfrastructureOptimizationController:
         :meth:`apply_counts` bookkeeping; with ``capture_solver_trace`` the
         engine's convergence rows are appended to ``solver_traces``."""
         x_init = None if x_init is None else jnp.asarray(x_init, jnp.float32)
-        if self.capture_solver_trace:
+        self._last_deadline_hit = False
+        if self.anytime is not None and self.anytime.enabled:
+            if self.capture_solver_trace:
+                raise ValueError("anytime deadlines and "
+                                 "capture_solver_trace are mutually "
+                                 "exclusive; drop one")
+            x_rel, iters, report = solve_incremental_info(
+                prob, jnp.asarray(self.x_current, jnp.float32),
+                jnp.asarray(self.delta_max, jnp.float32), x_init=x_init,
+                anytime=self.anytime)
+            self._last_deadline_hit = bool(report.deadline_hit)
+        elif self.capture_solver_trace:
             x_rel, iters, trace = solve_incremental_info(
                 prob, jnp.asarray(self.x_current, jnp.float32),
                 jnp.asarray(self.delta_max, jnp.float32),
@@ -151,12 +178,14 @@ class InfrastructureOptimizationController:
         return np.asarray(round_and_polish(prob, x_rel), np.float64)
 
     def apply_counts(self, demand: np.ndarray, counts: np.ndarray,
-                     replanned: bool, solver_iters: int = 0) -> ControllerStep:
+                     replanned: bool, solver_iters: int = 0,
+                     deadline_hit: bool = False) -> ControllerStep:
         """Record an allocation computed for this tick (by :meth:`step`, or
         externally by the batched fleet engine): compute churn and metrics,
         advance ``x_current``, append to history. ``solver_iters`` optionally
         records the inner PGD iterations the solve took (see
-        ``ControllerStep.solver_iters``)."""
+        ``ControllerStep.solver_iters``); ``deadline_hit`` whether an
+        anytime budget truncated it."""
         demand = np.asarray(demand, np.float64)
         x = np.asarray(counts, np.float64)
         churn = float(np.abs(x - (self.x_current if self.x_current is not None
@@ -169,7 +198,8 @@ class InfrastructureOptimizationController:
                               metrics=evaluate(self.catalog, x, demand),
                               churn=churn, replanned=replanned,
                               churn_violation=violation,
-                              solver_iters=int(solver_iters))
+                              solver_iters=int(solver_iters),
+                              deadline_hit=bool(deadline_hit))
         self.history.append(step)
         return step
 
@@ -182,10 +212,12 @@ class InfrastructureOptimizationController:
         if self.x_current is None:
             x, replanned = self.cold_start_counts(prob), True
             self._last_solver_iters = 0
+            self._last_deadline_hit = False
         else:
             x, replanned = self.incremental_counts(prob, x_init=x_init), False
         return self.apply_counts(demand, x, replanned,
-                                 solver_iters=self._last_solver_iters)
+                                 solver_iters=self._last_solver_iters,
+                                 deadline_hit=self._last_deadline_hit)
 
     def replan_on_failure(self, failed_counts: np.ndarray,
                           demand: np.ndarray) -> ControllerStep:

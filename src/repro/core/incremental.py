@@ -23,7 +23,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .pgd import PGDConfig, pgd_minimize, pgd_minimize_traced
+from .pgd import (AnytimeConfig, PGDConfig, pgd_chunk_init, pgd_chunk_run,
+                  pgd_minimize, pgd_minimize_traced, run_anytime)
 from .problem import AllocationProblem
 import repro.core.objective as obj
 
@@ -61,15 +62,53 @@ def project_incremental(
     return jax.lax.fori_loop(0, n_alternations, body, obj.project(prob, x))
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _solve_incremental_impl(prob, x_current, delta_max, x0, cfg: PGDConfig):
+def _incremental_merit_fns(prob, x_current, delta_max):
+    """The warm tick's ``(value, grad, project)`` triple — the eq.(1)
+    objective (terms-registry sum) over box ∩ L1 churn ball. One builder
+    shared by the monolithic, traced, and chunked-anytime engines so all
+    three run the exact same merit graph."""
     F = partial(obj.objective, prob)
     G = partial(obj.grad_objective, prob)
 
     def proj(x):
         return project_incremental(prob, x, x_current, delta_max)
 
+    return F, G, proj
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _solve_incremental_impl(prob, x_current, delta_max, x0, cfg: PGDConfig):
+    F, G, proj = _incremental_merit_fns(prob, x_current, delta_max)
     return pgd_minimize(F, G, proj, x0, cfg)
+
+
+def incremental_anytime_init(prob, x_current, delta_max, x0,
+                             cfg: PGDConfig):
+    """Unjitted chunk-state init for the warm tick's anytime mode (same
+    merit triple as ``_solve_incremental_impl``). Exposed unjitted so the
+    fleet engine can vmap it inside its own jitted impl."""
+    F, G, proj = _incremental_merit_fns(prob, x_current, delta_max)
+    return pgd_chunk_init(F, G, proj, x0, cfg)
+
+
+def incremental_anytime_chunk(prob, x_current, delta_max, state, it_end,
+                              cfg: PGDConfig):
+    """Unjitted chunk advance for the warm tick's anytime mode — run the
+    shared engine until the traced cap ``it_end`` or convergence."""
+    F, G, proj = _incremental_merit_fns(prob, x_current, delta_max)
+    return pgd_chunk_run(F, G, proj, state, it_end, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _anytime_init_impl(prob, x_current, delta_max, x0, cfg: PGDConfig):
+    return incremental_anytime_init(prob, x_current, delta_max, x0, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _anytime_chunk_impl(prob, x_current, delta_max, state, it_end,
+                        cfg: PGDConfig):
+    return incremental_anytime_chunk(prob, x_current, delta_max, state,
+                                     it_end, cfg)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -77,12 +116,7 @@ def _solve_incremental_traced_impl(prob, x_current, delta_max, x0,
                                    cfg: PGDConfig):
     """The traced twin of ``_solve_incremental_impl``: same merit triple,
     same engine, plus the fixed-size per-iteration PGDTrace capture."""
-    F = partial(obj.objective, prob)
-    G = partial(obj.grad_objective, prob)
-
-    def proj(x):
-        return project_incremental(prob, x, x_current, delta_max)
-
+    F, G, proj = _incremental_merit_fns(prob, x_current, delta_max)
     return pgd_minimize_traced(F, G, proj, x0, cfg)
 
 
@@ -114,6 +148,7 @@ def solve_incremental_info(
     steps: int = 600,
     cfg: PGDConfig | None = None,
     capture_trace: bool = False,
+    anytime: AnytimeConfig | None = None,
 ):
     """:func:`solve_incremental` variant returning ``(x, iters)`` — the
     relaxed solution plus the PGD iterations actually taken (the early-
@@ -124,11 +159,31 @@ def solve_incremental_info(
     (fixed-size ``(steps,)`` arrays — vmap-safe, so the batched fleet tick
     can surface one trace per lane; see ``repro.obs.solver_trace``). The
     solution and iteration count match the untraced call: the trace is
-    extra loop state, not extra math."""
+    extra loop state, not extra math.
+
+    With an *enabled* ``anytime`` config (``deadline_ms`` set) the solve
+    runs chunked against ``anytime.clock`` and returns ``(x_best, iters,
+    AnytimeReport)`` — the best-so-far feasible iterate by merit when the
+    budget expires (see ``core.pgd.AnytimeConfig``). ``anytime=None`` or a
+    disabled config takes the untruncated path above, byte-for-byte the
+    same compiled program as before the anytime mode existed. Anytime and
+    ``capture_trace`` are mutually exclusive."""
     delta_max = jnp.asarray(delta_max, jnp.float32)
     x0 = x_current if x_init is None else x_init
     if cfg is None:
         cfg = PGDConfig(max_iters=int(steps))
+    if anytime is not None and anytime.enabled:
+        if capture_trace:
+            raise ValueError("anytime deadlines and capture_trace are "
+                             "mutually exclusive (truncated traces would "
+                             "be misleading); drop one")
+        xc = jnp.asarray(x_current)
+        x0j = jnp.asarray(x0)
+        state, report = run_anytime(
+            lambda: _anytime_init_impl(prob, xc, delta_max, x0j, cfg),
+            lambda s, e: _anytime_chunk_impl(prob, xc, delta_max, s, e, cfg),
+            cfg, anytime)
+        return state.x_best, state.it, report
     if capture_trace:
         x, _, iters, tr = _solve_incremental_traced_impl(
             prob, jnp.asarray(x_current), delta_max, jnp.asarray(x0), cfg)

@@ -27,10 +27,12 @@ batched ≡ sequential equivalence test in this repo leans on).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Tuple
+import time
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class PGDConfig(NamedTuple):
@@ -115,6 +117,53 @@ def _empty_trace(L: int) -> PGDTrace:
                     move=jnp.full((L,), jnp.nan, jnp.float32))
 
 
+def _pgd_iteration(value_fn, grad_fn, project_fn, cfg, ratios,
+                   x, fx, g, bb, it, flat):
+    """One BB/Armijo iteration — the exact op sequence of the monolithic
+    loop body, shared by :func:`_pgd_minimize_impl` and the chunked anytime
+    loop so a chunked trajectory is bit-identical to the monolithic one.
+
+    Returns ``(x_new, f_new, g_new, bb_new, it_new, flat_new, done,
+    any_ok, idx, move)`` — the first seven are the loop-carried solver
+    state, the last three feed the optional trace row."""
+    steps = bb * ratios
+    cands = jax.vmap(
+        lambda s: project_fn(x - s * g))(steps)            # (L, *x.shape)
+    fcands = jax.vmap(value_fn)(cands)                     # (L,)
+    # Armijo on the projected step: F(x+) <= F(x) + c * <g, x+ - x>
+    diff = cands - x[None]
+    dec = fcands - (fx + cfg.armijo_c *
+                    jnp.sum(diff * g[None],
+                            axis=tuple(range(1, diff.ndim))))
+    ok = (dec <= 0.0) & jnp.isfinite(fcands)
+    idx = jnp.argmax(ok)          # first (largest) accepting step
+    any_ok = jnp.any(ok)
+    x_new = jnp.where(any_ok, cands[idx], x)
+    f_new = jnp.where(any_ok, fcands[idx], fx)
+    g_new = grad_fn(x_new)
+    # BB1 step from the accepted move (safeguarded into [1e-8, 1e4])
+    dx = x_new - x
+    dg = g_new - g
+    denom = _flat_dot(dx, dg)
+    bb_new = jnp.where(jnp.abs(denom) > 1e-12,
+                       jnp.abs(_flat_dot(dx, dx) / denom), cfg.step0)
+    bb_new = jnp.clip(bb_new, 1e-8, 1e4)
+    bb_new = jnp.where(any_ok, bb_new,
+                       bb * cfg.backtrack ** cfg.n_backtracks)
+    move = jnp.max(jnp.abs(dx))
+    # converged when an ACCEPTED step barely moves, or when max_flat
+    # CONSECUTIVE accepted steps barely improved the merit (boundary
+    # cycling: the alternating projection keeps the iterate drifting
+    # along a flat ridge). One flat step alone never stops the loop —
+    # BB progress comes in bursts separated by plateaus.
+    is_flat = any_ok & (f_new >= fx - cfg.ftol * (1.0 + jnp.abs(fx)))
+    flat_new = jnp.where(is_flat, flat + 1, jnp.where(any_ok, 0, flat))
+    done = ((~any_ok) & (bb < 1e-7)) | (any_ok & (move < cfg.tol)) \
+        | (flat_new >= cfg.max_flat)
+    return x_new, f_new, g_new, bb_new, it + 1, flat_new, done, \
+        any_ok, idx, move
+
+
 def _pgd_minimize_impl(
     value_fn: Callable[[jnp.ndarray], jnp.ndarray],
     grad_fn: Callable[[jnp.ndarray], jnp.ndarray],
@@ -140,41 +189,11 @@ def _pgd_minimize_impl(
 
     def body(state):
         x, fx, g, bb, it, flat = state[:6]
-        steps = bb * ratios
-        cands = jax.vmap(
-            lambda s: project_fn(x - s * g))(steps)            # (L, *x.shape)
-        fcands = jax.vmap(value_fn)(cands)                     # (L,)
-        # Armijo on the projected step: F(x+) <= F(x) + c * <g, x+ - x>
-        diff = cands - x[None]
-        dec = fcands - (fx + cfg.armijo_c *
-                        jnp.sum(diff * g[None],
-                                axis=tuple(range(1, diff.ndim))))
-        ok = (dec <= 0.0) & jnp.isfinite(fcands)
-        idx = jnp.argmax(ok)          # first (largest) accepting step
-        any_ok = jnp.any(ok)
-        x_new = jnp.where(any_ok, cands[idx], x)
-        f_new = jnp.where(any_ok, fcands[idx], fx)
-        g_new = grad_fn(x_new)
-        # BB1 step from the accepted move (safeguarded into [1e-8, 1e4])
-        dx = x_new - x
-        dg = g_new - g
-        denom = _flat_dot(dx, dg)
-        bb_new = jnp.where(jnp.abs(denom) > 1e-12,
-                           jnp.abs(_flat_dot(dx, dx) / denom), cfg.step0)
-        bb_new = jnp.clip(bb_new, 1e-8, 1e4)
-        bb_new = jnp.where(any_ok, bb_new,
-                           bb * cfg.backtrack ** cfg.n_backtracks)
-        move = jnp.max(jnp.abs(dx))
-        # converged when an ACCEPTED step barely moves, or when max_flat
-        # CONSECUTIVE accepted steps barely improved the merit (boundary
-        # cycling: the alternating projection keeps the iterate drifting
-        # along a flat ridge). One flat step alone never stops the loop —
-        # BB progress comes in bursts separated by plateaus.
-        is_flat = any_ok & (f_new >= fx - cfg.ftol * (1.0 + jnp.abs(fx)))
-        flat_new = jnp.where(is_flat, flat + 1, jnp.where(any_ok, 0, flat))
-        done = ((~any_ok) & (bb < 1e-7)) | (any_ok & (move < cfg.tol)) \
-            | (flat_new >= cfg.max_flat)
-        out = (x_new, f_new, g_new, bb_new, it + 1, flat_new, done)
+        (x_new, f_new, g_new, bb_new, it_new, flat_new, done,
+         any_ok, idx, move) = _pgd_iteration(
+            value_fn, grad_fn, project_fn, cfg, ratios,
+            x, fx, g, bb, it, flat)
+        out = (x_new, f_new, g_new, bb_new, it_new, flat_new, done)
         if trace:
             tr: PGDTrace = state[7]
             tr = PGDTrace(
@@ -246,3 +265,158 @@ def pgd_minimize_traced(
     x, fx, it, tr = _pgd_minimize_impl(value_fn, grad_fn, project_fn, x0, cfg,
                                        trace=True)
     return x, fx, it, tr
+
+
+class AnytimeConfig(NamedTuple):
+    """Host-side knobs of the chunked-budget *anytime* mode.
+
+    The anytime driver runs the engine in ``chunk_iters``-iteration chunks
+    (each chunk one jitted ``while_loop`` call with a TRACED iteration cap,
+    so every chunk reuses one compiled program) and checks ``clock``
+    between chunks: once ``deadline_ms`` wall milliseconds have elapsed it
+    stops and the caller returns the best-so-far iterate *by merit*, not
+    the last iterate. ``clock`` is injectable (seconds, monotonic;
+    ``time.perf_counter`` by default) so tests and the degradation bench
+    can drive deterministic fake time — it is only ever called host-side,
+    never under jit.
+
+    ``deadline_ms=None`` means "no budget": every consumer branches on it
+    at PYTHON level and takes its pre-anytime untruncated path, so the
+    compiled graph — and therefore the allocations, bit for bit — are
+    exactly the non-anytime engine's (test-enforced)."""
+
+    deadline_ms: Optional[float] = None   # wall budget; None = disabled
+    chunk_iters: int = 32                 # iterations per clock check
+    clock: Callable[[], float] = time.perf_counter   # injectable, host-only
+
+    @property
+    def enabled(self) -> bool:
+        """Whether this config actually enforces a budget (``deadline_ms``
+        is set). Consumers branch on this at Python level."""
+        return self.deadline_ms is not None
+
+
+class AnytimeReport(NamedTuple):
+    """Host-side outcome of one :func:`run_anytime` drive.
+
+    ``deadline_hit`` is True iff the clock expired while iterations
+    remained (the returned iterate was truncated); a solve that converges
+    or exhausts ``max_iters`` inside the budget reports False. ``chunks``
+    counts chunk launches (0 when the budget was spent before the first
+    chunk — the caller then holds the projected, feasible warm start)."""
+
+    deadline_hit: bool
+    elapsed_ms: float
+    chunks: int
+
+
+class PGDChunkState(NamedTuple):
+    """Resumable loop-carried state of the chunked anytime engine.
+
+    Fields 0–6 are EXACTLY the monolithic loop's state tuple (same dtypes,
+    same update ops via :func:`_pgd_iteration`), plus the best-so-far pair
+    ``(x_best, f_best)`` tracked across chunks. ``x_best`` is always a
+    PROJECTED (feasible) point: it starts at the projected warm start and
+    only ever moves to accepted (projected) iterates with strictly better
+    merit. Works unbatched or vmapped (leaves gain a leading lane axis;
+    ``done`` becomes a per-lane vector)."""
+
+    x: jnp.ndarray        # current iterate
+    fx: jnp.ndarray       # merit at x
+    g: jnp.ndarray        # gradient at x
+    bb: jnp.ndarray       # BB step
+    it: jnp.ndarray       # iterations taken
+    flat: jnp.ndarray     # consecutive flat-step counter
+    done: jnp.ndarray     # converged / stalled flag
+    x_best: jnp.ndarray   # best-merit iterate so far (feasible)
+    f_best: jnp.ndarray   # merit at x_best
+
+
+def pgd_chunk_init(
+    value_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    grad_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    project_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    x0: jnp.ndarray,
+    cfg: PGDConfig,
+) -> PGDChunkState:
+    """Build the iteration-0 :class:`PGDChunkState` (projects ``x0`` first,
+    exactly like the monolithic loop — so the zero-budget answer is already
+    feasible). Jit/vmap-safe; callers wrap it in their own jitted impl."""
+    x0 = project_fn(x0)
+    fx = value_fn(x0)
+    return PGDChunkState(
+        x=x0, fx=fx, g=grad_fn(x0), bb=jnp.asarray(cfg.step0),
+        it=jnp.asarray(0), flat=jnp.asarray(0), done=jnp.asarray(False),
+        x_best=x0, f_best=fx)
+
+
+def pgd_chunk_run(
+    value_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    grad_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    project_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    state: PGDChunkState,
+    it_end: jnp.ndarray,
+    cfg: PGDConfig,
+) -> PGDChunkState:
+    """Advance the chunked engine until ``it >= it_end`` (a TRACED scalar:
+    one compiled program serves every chunk) or convergence. Each
+    iteration is :func:`_pgd_iteration` — the monolithic loop's exact op
+    sequence — plus the best-so-far merit tracking, so running chunks
+    back-to-back reproduces the monolithic trajectory iterate for
+    iterate."""
+    ratios = cfg.backtrack ** jnp.arange(-1, cfg.n_backtracks - 1)  # 1 upscale
+    it_cap = jnp.minimum(it_end, cfg.max_iters)
+
+    def cond(s: PGDChunkState):
+        return (~s.done) & (s.it < it_cap)
+
+    def body(s: PGDChunkState):
+        (x, fx, g, bb, it, flat, done, _any_ok, _idx, _move) = \
+            _pgd_iteration(value_fn, grad_fn, project_fn, cfg, ratios,
+                           s.x, s.fx, s.g, s.bb, s.it, s.flat)
+        better = fx < s.f_best
+        return PGDChunkState(
+            x=x, fx=fx, g=g, bb=bb, it=it, flat=flat, done=done,
+            x_best=jnp.where(better, x, s.x_best),
+            f_best=jnp.where(better, fx, s.f_best))
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def run_anytime(init_fn, chunk_fn, cfg: PGDConfig,
+                anytime: AnytimeConfig):
+    """Drive a chunked solve against the wall clock; the generic host loop
+    behind every anytime consumer (incremental, fleet, horizon).
+
+    ``init_fn()`` returns the initial (possibly vmapped) state pytree with
+    ``done``/``it``/``x_best``/``f_best`` leaves; ``chunk_fn(state,
+    it_end)`` advances it to the traced iteration cap. Between chunks the
+    driver syncs ``state.done`` to the host (which fences the previous
+    chunk, so the clock reads true elapsed compute) and stops when all
+    lanes converged, ``cfg.max_iters`` is reached, or ``deadline_ms``
+    expires — whichever first. A non-positive ``deadline_ms`` returns the
+    init state untouched: the projected warm start, always feasible.
+
+    Returns ``(state, AnytimeReport)``."""
+    if anytime.deadline_ms is None:
+        raise ValueError("run_anytime requires AnytimeConfig.deadline_ms; "
+                         "branch to the untruncated engine when it is None")
+    clock = anytime.clock
+    chunk = max(1, int(anytime.chunk_iters))
+    deadline = float(anytime.deadline_ms)
+    t0 = clock()
+    state = init_fn()
+    it_end = 0
+    deadline_hit = False
+    chunks = 0
+    max_iters = int(cfg.max_iters)
+    while it_end < max_iters and not bool(np.all(np.asarray(state.done))):
+        if (clock() - t0) * 1e3 >= deadline:
+            deadline_hit = True
+            break
+        it_end = min(it_end + chunk, max_iters)
+        state = chunk_fn(state, jnp.asarray(it_end))
+        chunks += 1
+    elapsed_ms = (clock() - t0) * 1e3
+    return state, AnytimeReport(deadline_hit=deadline_hit,
+                                elapsed_ms=elapsed_ms, chunks=chunks)

@@ -68,6 +68,7 @@ from repro.core.catalog import M as RESOURCE_DIM
 from repro.core.controller import (ControllerStep,
                                    InfrastructureOptimizationController)
 from repro.core.metrics import AllocationMetrics, evaluate
+from repro.core.pgd import AnytimeConfig
 from repro.core.problem import PenaltyParams
 from repro.obs import metrics as obs_metrics
 from repro.obs.health import HealthMonitor
@@ -373,9 +374,13 @@ class _TickObserver:
         if self.active:
             self._t0 = self.clock()
 
-    def tick_end(self, t: int, solver_iters: int) -> None:
+    def tick_end(self, t: int, solver_iters: int,
+                 compile_key=None) -> None:
         """Close the tick: duration to the latency histogram + deadline
-        budget, iteration count to the effort histogram."""
+        budget, iteration count to the effort histogram. ``compile_key``
+        (the engine's tick-span compile key) lets the health monitor split
+        first-sighting compile time out of the deadline budget instead of
+        flagging every first warm tick after a jit cache miss as a miss."""
         if not self.active:
             return
         dur_ms = (self.clock() - self._t0) * 1e3
@@ -383,7 +388,7 @@ class _TickObserver:
             self.reg.histogram("replay/tick_ms").observe(dur_ms)
             self.reg.histogram("replay/solver_iters").observe(solver_iters)
         if self.health is not None:
-            self.health.observe_tick(t, dur_ms)
+            self.health.observe_tick(t, dur_ms, compile_key=compile_key)
 
     def step(self, **kw) -> None:
         """Forward one committed (tenant, tick) to the health monitor."""
@@ -393,7 +398,8 @@ class _TickObserver:
 
 def _replay_sequential(ctls, tenants: Sequence[TenantSpec], controller: str,
                        capture_solver_trace: bool,
-                       health: Optional[HealthMonitor] = None):
+                       health: Optional[HealthMonitor] = None,
+                       anytime: Optional[AnytimeConfig] = None):
     """The instrumented sequential loop shared by both controllers: one
     ``replay/tick`` span per (tenant, tick), warm ticks optionally tracing
     the solver through the controller's ``capture_solver_trace`` flag.
@@ -408,6 +414,7 @@ def _replay_sequential(ctls, tenants: Sequence[TenantSpec], controller: str,
     obs = _TickObserver(health)
     for ctl, spec in zip(ctls, tenants):
         ctl.capture_solver_trace = capture_solver_trace
+        ctl.anytime = anytime
         steps = []
         for t, demand in enumerate(np.asarray(spec.trace, np.float64)):
             prob = ctl.make_problem(demand) if health is not None else None
@@ -415,14 +422,16 @@ def _replay_sequential(ctls, tenants: Sequence[TenantSpec], controller: str,
             obs.tick_start()
             # compile key: the cold (t=0) and warm programs compile
             # separately, per problem shape and per traced/untraced variant
+            # (and per anytime on/off — the chunked driver is its own program)
+            tick_key = ("seq_tick", controller, ctl.catalog.n, t > 0,
+                        capture_solver_trace,
+                        anytime is not None and anytime.enabled)
             with span("replay/tick", cat="replay", tick=t,
                       engine="sequential", controller=controller,
-                      tenant=spec.name,
-                      compile_key=("seq_tick", controller, ctl.catalog.n,
-                                   t > 0, capture_solver_trace)):
+                      tenant=spec.name, compile_key=tick_key):
                 step = ctl.step(demand)
                 steps.append(step)
-            obs.tick_end(t, step.solver_iters)
+            obs.tick_end(t, step.solver_iters, compile_key=tick_key)
             gauge("replay/solver_iters", step.solver_iters)
             solver = ("multistart" if step.replanned
                       else ctl.solver_config.solver if controller == "mpc"
@@ -465,7 +474,8 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                           solver_steps: int = 600,
                           hot_loop: Optional[str] = None,
                           capture_solver_trace: bool = False,
-                          health: Optional[HealthMonitor] = None):
+                          health: Optional[HealthMonitor] = None,
+                          anytime: Optional[AnytimeConfig] = None):
     """Step ALL tenants through their traces with one batched solve per shape
     bucket per tick. Returns ``(histories, solver_traces)``: per-tenant step
     histories (controller objects hold the same state the sequential engine
@@ -510,9 +520,9 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
         # ticks 0 (cold program) and 1 (warm program) each trigger an XLA
         # compile; min(t, 1) makes exactly those two first-seen (tagged
         # phase="compile"), so tick percentiles reflect steady state
+        tick_key = ("tick", "batched", "myopic", min(t, 1))
         with span("replay/tick", cat="replay", tick=t, engine="batched",
-                  controller="myopic",
-                  compile_key=("tick", "batched", "myopic", min(t, 1))):
+                  controller="myopic", compile_key=tick_key):
             tick_iters = 0
             for b, ctl in enumerate(ctls):
                 if t < T_len[b]:
@@ -541,6 +551,7 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                     X_int = np.asarray(res.x_int, np.float64)
                     lane_iters = np.zeros(len(idx), np.int64)
                     tick_iters += int(res.iters)
+                    bucket_hit = False
                 else:
                     X_cur = embed_solutions(
                         batch, [ctls[b].x_current for b in idx])
@@ -553,15 +564,19 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                                        np.float32)
                     with span("replay/solve", cat="replay", bucket=str(key),
                               compile_key=("solve_fleet_step", key, len(idx),
-                                           capture_solver_trace)) as sp:
+                                           capture_solver_trace,
+                                           anytime is not None
+                                           and anytime.enabled)) as sp:
                         res = solve_fleet_step(
                             batch, X_cur, delta, x_init=X_init,
                             steps=solver_steps,
-                            capture_trace=capture_solver_trace)
+                            capture_trace=capture_solver_trace,
+                            anytime=anytime)
                         sp.fence(res.x_int)
                     X_int = np.asarray(res.x_int, np.float64)
                     lane_iters = np.asarray(res.iters, np.int64)
                     tick_iters += int(lane_iters.sum())
+                    bucket_hit = bool(res.deadline_hit or False)
                 # only pay the relaxed-solution transfer when it will be
                 # used (warm start or the health monitor's KKT gauge)
                 X_rel = (np.asarray(res.x)
@@ -580,7 +595,8 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                         step = ctls[b].apply_counts(
                             traces[b][t], X_int[i, :n_true],
                             replanned=(t == 0),
-                            solver_iters=int(lane_iters[i]))
+                            solver_iters=int(lane_iters[i]),
+                            deadline_hit=bucket_hit)
                         tr_b = (None if lane_tr is None else
                                 type(batch_tr)(*(f[i] for f in lane_tr)))
                         if tr_b is not None:
@@ -597,7 +613,7 @@ def _replay_fleet_batched(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                                  spot_unavailable=_spot_unavailable(
                                      tenants[b], t))
             gauge("replay/solver_iters", tick_iters)
-        obs.tick_end(t, tick_iters)
+        obs.tick_end(t, tick_iters, compile_key=tick_key)
     return [ctl.history for ctl in ctls], solver_traces
 
 
@@ -609,7 +625,8 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                               cold_start: str = "myopic",
                               hot_loop: Optional[str] = None,
                               capture_solver_trace: bool = False,
-                              health: Optional[HealthMonitor] = None):
+                              health: Optional[HealthMonitor] = None,
+                              anytime: Optional[AnytimeConfig] = None):
     """Batched receding-horizon replay: one ``solve_horizon_fleet_step``
     call per shape bucket per warm tick, the fleet analogue of
     ``ModelPredictiveController.step``. Returns ``(histories,
@@ -662,9 +679,9 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
     for t in range(int(T_len.max())):
       obs.tick_start()
       # same compile-tick tagging rationale as the myopic engine above
+      tick_key = ("tick", "batched", "mpc", min(t, 1))
       with span("replay/tick", cat="replay", tick=t, engine="batched",
-                controller="mpc",
-                compile_key=("tick", "batched", "mpc", min(t, 1))):
+                controller="mpc", compile_key=tick_key):
         tick_iters = 0
         for b, ctl in enumerate(ctls):
             if t < T_len[b]:
@@ -748,16 +765,20 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
             # (built in __post_init__ when solver_config was None)
             with span("replay/solve", cat="replay", bucket=str(key),
                       compile_key=("solve_horizon_fleet_step", key, len(idx),
-                                   horizon, capture_solver_trace)) as sp:
+                                   horizon, capture_solver_trace,
+                                   anytime is not None
+                                   and anytime.enabled)) as sp:
                 res = solve_horizon_fleet_step(
                     hp, X_cur, delta, x_init=X_init, active=active,
                     cfg=ctls[idx[0]].solver_config,
-                    capture_trace=capture_solver_trace)
+                    capture_trace=capture_solver_trace,
+                    anytime=anytime)
                 sp.fence(res.x_int)
             X_int = np.asarray(res.x_int, np.float64)
             plans = np.asarray(res.plan, np.float64)
             lane_iters = np.asarray(res.iters, np.int64)
             tick_iters += int(lane_iters.sum())
+            bucket_hit = bool(res.deadline_hit or False)
             lane_tr = (None if res.trace is None
                        else [np.asarray(f) for f in res.trace])
             diag_np = (None if res.diag is None
@@ -769,7 +790,8 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                     n_true = ctls[b].catalog.n
                     step = ctls[b].apply_counts(
                         traces[b][t], X_int[i, :n_true], replanned=False,
-                        solver_iters=int(lane_iters[i]))
+                        solver_iters=int(lane_iters[i]),
+                        deadline_hit=bucket_hit)
                     ctls[b].plan = plans[i, :, :n_true]
                     tr_b = (None if lane_tr is None else
                             type(res.trace)(*(f[i] for f in lane_tr)))
@@ -785,7 +807,7 @@ def _replay_fleet_batched_mpc(catalog: Catalog, tenants: Sequence[TenantSpec],
                              spot_unavailable=_spot_unavailable(
                                  tenants[b], t))
         gauge("replay/solver_iters", tick_iters)
-      obs.tick_end(t, tick_iters)
+      obs.tick_end(t, tick_iters, compile_key=tick_key)
     return [ctl.history for ctl in ctls], solver_traces
 
 
@@ -808,7 +830,8 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
                  solver_steps: int = 600,
                  hot_loop: Optional[str] = None,
                  capture_solver_trace: bool = False,
-                 health: Optional[HealthMonitor] = None) -> FleetReplayResult:
+                 health: Optional[HealthMonitor] = None,
+                 anytime: Optional[AnytimeConfig] = None) -> FleetReplayResult:
     """Replay every tenant; returns per-tenant histories + fleet aggregates.
 
     ``replay_mode`` selects the optimizer engine:
@@ -894,13 +917,31 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
     ``replay/tick_ms`` and ``replay/solver_iters`` histograms on ``reg``
     (Prometheus/JSON exportable). Health and metrics observe only:
     per-tenant integer allocations are bit-identical with them on or off
-    (test-enforced)."""
+    (test-enforced).
+
+    ``anytime`` (a ``repro.core.AnytimeConfig`` with a ``deadline_ms``)
+    enforces a per-solve deadline on every WARM tick in both engines and
+    both controllers: the solve runs in iteration chunks against the
+    config's injectable clock and deploys its best-so-far feasible iterate
+    when the budget expires, marking the tick's ``ControllerStep`` with
+    ``deadline_hit`` (batched engines flag every lane of a truncated
+    bucket solve — the bucket shares one chunked program). Cold multistart
+    ticks are never truncated (there is no prior allocation to fall back
+    on). ``None`` — or a config without a deadline — keeps the untruncated
+    engines bit-exactly (Python-level branch, test-enforced). Mutually
+    exclusive with ``capture_solver_trace`` (a truncated trace is not the
+    convergence evidence the trace consumers expect), and MPC replays
+    require the adaptive engine (the fixed and admm engines have no
+    chunk-resumable state)."""
     if len(tenants) == 0:
         raise ValueError("replay_fleet needs at least one TenantSpec; got an "
                          "empty tenant list")
     assert replay_mode in ("sequential", "batched"), replay_mode
     assert controller in ("myopic", "mpc"), controller
     assert ca_engine in ("vectorized", "sequential"), ca_engine
+    if (anytime is not None and anytime.enabled and capture_solver_trace):
+        raise ValueError("anytime deadlines and capture_solver_trace are "
+                         "mutually exclusive; drop one")
     if run_oracle_baseline and controller != "mpc":
         raise ValueError("run_oracle_baseline compares a forecast-driven MPC "
                          "replay against its oracle-forecast twin; it "
@@ -923,21 +964,24 @@ def replay_fleet(catalog: Catalog, tenants: Sequence[TenantSpec], *,
             ctls = [_make_mpc_controller(catalog, spec, **mpc_kwargs)
                     for spec in tenants]
             histories, traces_out = _replay_sequential(
-                ctls, tenants, "mpc", capture_solver_trace, health=health)
+                ctls, tenants, "mpc", capture_solver_trace, health=health,
+                anytime=anytime)
         else:
             histories, traces_out = _replay_fleet_batched_mpc(
                 catalog, tenants, hot_loop=hot_loop,
                 capture_solver_trace=capture_solver_trace, health=health,
-                **mpc_kwargs)
+                anytime=anytime, **mpc_kwargs)
     elif replay_mode == "sequential":
         ctls = [_make_controller(catalog, spec) for spec in tenants]
         histories, traces_out = _replay_sequential(
-            ctls, tenants, "myopic", capture_solver_trace, health=health)
+            ctls, tenants, "myopic", capture_solver_trace, health=health,
+            anytime=anytime)
     else:
         histories, traces_out = _replay_fleet_batched(
             catalog, tenants, warm_start=warm_start,
             solver_steps=solver_steps, hot_loop=hot_loop,
-            capture_solver_trace=capture_solver_trace, health=health)
+            capture_solver_trace=capture_solver_trace, health=health,
+            anytime=anytime)
     if not run_ca_baseline:
         cas = [None] * len(tenants)
     elif ca_engine == "vectorized":

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import terms as core_terms
-from repro.core.incremental import solve_incremental_info
+from repro.core.incremental import (incremental_anytime_chunk,
+                                    incremental_anytime_init,
+                                    solve_incremental_info)
 from repro.core.multistart import make_starts
-from repro.core.pgd import PGDTrace
+from repro.core.pgd import AnytimeConfig, PGDConfig, PGDTrace, run_anytime
 from repro.core.objective import is_feasible, objective
 from repro.core.problem import AllocationProblem
 from repro.core.rounding import round_and_polish
@@ -454,6 +456,7 @@ class FleetStepResult(NamedTuple):
     feasible: jnp.ndarray  # (B,) integer-solution feasibility
     iters: jnp.ndarray     # (B,) adaptive-PGD iterations per lane
     trace: Optional[PGDTrace] = None  # (B, steps) per-lane convergence rows
+    deadline_hit: Optional[bool] = None  # anytime tick truncated (None: n/a)
 
 
 @partial(jax.jit, static_argnames=("steps",))
@@ -496,6 +499,42 @@ def _step_fleet_traced_impl(prob: AllocationProblem, x_current: jnp.ndarray,
                            iters=jnp.where(active, iters, 0), trace=trace)
 
 
+@partial(jax.jit, static_argnames=("cfg",))
+def _step_fleet_anytime_init_impl(prob, x_current, delta_max, x_init,
+                                  cfg: PGDConfig):
+    """Vmapped chunk-state init: every lane's projected warm start plus the
+    best-so-far trackers, stacked on a leading (B,) axis."""
+    return jax.vmap(
+        lambda pb, xc, dm, xi: incremental_anytime_init(pb, xc, dm, xi, cfg)
+    )(prob, x_current, delta_max, x_init)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _step_fleet_anytime_chunk_impl(prob, x_current, delta_max, state, it_end,
+                                   cfg: PGDConfig):
+    """Advance every lane to the traced iteration cap ``it_end`` (closed
+    over, so it broadcasts across the vmap). Per-lane op structure is the
+    sequential chunk's — converged lanes freeze in place."""
+    return jax.vmap(
+        lambda pb, xc, dm, s: incremental_anytime_chunk(pb, xc, dm, s,
+                                                        it_end, cfg)
+    )(prob, x_current, delta_max, state)
+
+
+@jax.jit
+def _step_fleet_anytime_finalize_impl(prob, x_rel, x_current, active, iters):
+    """The untruncated tick's tail — rounding, frozen-lane masking,
+    objective and feasibility — applied to the anytime best-so-far
+    iterates."""
+    x_int = jax.vmap(round_and_polish)(prob, x_rel)
+    x_rel = jnp.where(active[:, None], x_rel, x_current)
+    x_int = jnp.where(active[:, None], x_int, x_current)
+    f_int = jax.vmap(objective)(prob, x_int)
+    feas = jax.vmap(lambda pb, xi: is_feasible(pb, xi, 1e-3))(prob, x_int)
+    return FleetStepResult(x=x_rel, x_int=x_int, fun_int=f_int, feasible=feas,
+                           iters=jnp.where(active, iters, 0))
+
+
 def solve_fleet_step(
     fleet: Union[FleetBatch, AllocationProblem],
     x_current: jnp.ndarray,
@@ -504,6 +543,7 @@ def solve_fleet_step(
     steps: int = 600,
     active: Optional[np.ndarray] = None,
     capture_trace: bool = False,
+    anytime: Optional[AnytimeConfig] = None,
 ) -> FleetStepResult:
     """One incremental-adoption tick for EVERY tenant in one jitted program.
 
@@ -530,7 +570,14 @@ def solve_fleet_step(
 
     ``capture_trace=True`` additionally returns per-lane PGD convergence
     rows in ``FleetStepResult.trace`` (a separately-compiled program whose
-    solves agree with the untraced one — test-enforced)."""
+    solves agree with the untraced one — test-enforced).
+
+    An *enabled* ``anytime`` config (``core.pgd.AnytimeConfig`` with
+    ``deadline_ms`` set) runs the tick chunked against the injectable
+    clock and returns each lane's best-so-far feasible iterate when the
+    fleet-wide budget expires, with ``FleetStepResult.deadline_hit``
+    reporting the truncation; a disabled/absent config takes the exact
+    pre-anytime program (Python-level branch — bit-identical results)."""
     prob = fleet.problem if isinstance(fleet, FleetBatch) else fleet
     if active is None and isinstance(fleet, FleetBatch):
         active = fleet.active_mask
@@ -540,5 +587,19 @@ def solve_fleet_step(
     x_init = x_current if x_init is None else jnp.asarray(x_init, jnp.float32)
     active = (jnp.ones(B, bool) if active is None
               else jnp.asarray(np.asarray(active, bool)))
+    if anytime is not None and anytime.enabled:
+        if capture_trace:
+            raise ValueError("anytime deadlines and capture_trace are "
+                             "mutually exclusive; drop one")
+        cfg = PGDConfig(max_iters=int(steps))
+        state, report = run_anytime(
+            lambda: _step_fleet_anytime_init_impl(prob, x_current, delta_max,
+                                                  x_init, cfg),
+            lambda s, e: _step_fleet_anytime_chunk_impl(prob, x_current,
+                                                        delta_max, s, e, cfg),
+            cfg, anytime)
+        res = _step_fleet_anytime_finalize_impl(prob, state.x_best, x_current,
+                                                active, state.it)
+        return res._replace(deadline_hit=report.deadline_hit)
     impl = _step_fleet_traced_impl if capture_trace else _step_fleet_impl
     return impl(prob, x_current, delta_max, x_init, active, int(steps))

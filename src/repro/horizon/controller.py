@@ -210,19 +210,24 @@ class ModelPredictiveController(InfrastructureOptimizationController):
         plan-respectingly when H > 1 (``round_committed``), so the polish
         scale-down cannot strip pre-provisioned capacity. With the inherited
         ``capture_solver_trace`` flag the engine's convergence rows are
-        appended to ``solver_traces`` (adaptive engine only)."""
+        appended to ``solver_traces`` (adaptive engine only). The inherited
+        ``anytime`` budget (when enabled) truncates the window solve to its
+        best-so-far plan at deadline expiry, recorded on
+        ``_last_deadline_hit``."""
         hp = expand_problems(probs, coupling_w=self.coupling_w,
                              coupling_eps=self.coupling_eps)
         with span("mpc/plan", cat="mpc",
                   compile_key=("solve_horizon", self.horizon, self.catalog.n,
-                               self.solver_config,
-                               self.capture_solver_trace)) as sp:
+                               self.solver_config, self.capture_solver_trace,
+                               self.anytime is not None and
+                               self.anytime.enabled)) as sp:
             res = solve_horizon_info(
                 hp, jnp.asarray(self.x_current, jnp.float32),
                 jnp.asarray(self.delta_max, jnp.float32),
                 x_init=jnp.asarray(self.shifted_plan(), jnp.float32),
                 cfg=self.solver_config,
-                capture_trace=self.capture_solver_trace)
+                capture_trace=self.capture_solver_trace,
+                anytime=self.anytime)
             sp.fence(res.plan)
         if res.trace is not None:
             self.solver_traces.append(
@@ -232,6 +237,7 @@ class ModelPredictiveController(InfrastructureOptimizationController):
         # certifies through kkt_report (tick 0 of the relaxed plan)
         self.last_x_rel = self.plan[0]
         self._last_solver_iters = int(res.iters)
+        self._last_deadline_hit = bool(res.deadline_hit or False)
         with span("mpc/commit", cat="mpc"):
             return np.asarray(round_committed(probs[0], res.plan[0],
                                               respect_plan=(self.horizon > 1)),
@@ -258,8 +264,10 @@ class ModelPredictiveController(InfrastructureOptimizationController):
                  else self.cold_start_counts(probs[0]))
             replanned = True
             self._last_solver_iters = 0
+            self._last_deadline_hit = False
             self.plan = np.tile(x, (self.horizon, 1))
         else:
             x, replanned = self.plan_counts(probs), False
         return self.apply_counts(demand, x, replanned,
-                                 solver_iters=self._last_solver_iters)
+                                 solver_iters=self._last_solver_iters,
+                                 deadline_hit=self._last_deadline_hit)

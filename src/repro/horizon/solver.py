@@ -81,8 +81,9 @@ import numpy as np
 import repro.core.objective as obj
 from repro.core.incremental import project_incremental
 from repro.core.objective import is_feasible, objective
-from repro.core.pgd import (PGDConfig, PGDTrace, pgd_minimize,
-                            pgd_minimize_traced)
+from repro.core.pgd import (AnytimeConfig, PGDConfig, PGDTrace,
+                            pgd_chunk_init, pgd_chunk_run, pgd_minimize,
+                            pgd_minimize_traced, run_anytime)
 from repro.core.rounding import round_and_polish
 from repro.obs.telemetry import current_recorder, gauge
 
@@ -180,6 +181,7 @@ class HorizonSolveResult(NamedTuple):
     iters: jnp.ndarray      # PGD iterations actually taken (== steps, fixed)
     trace: Optional[Union[PGDTrace, ADMMTrace]] = None  # opt-in capture
     diag: Optional[ADMMDiag] = None   # admm-only residual certificate
+    deadline_hit: Optional[bool] = None  # anytime solve truncated (None: n/a)
 
 
 def _tick_lipschitz(prob) -> jnp.ndarray:
@@ -345,6 +347,38 @@ def _solve_horizon_traced_impl(hp, x_current, delta_max, x_init,
                                trace=True)
 
 
+@partial(jax.jit, static_argnames=("cfg",))
+def _horizon_anytime_init_impl(hp, x_current, delta_max, x_init,
+                               cfg: HorizonSolverConfig):
+    """Chunk-state init of the anytime horizon solve (adaptive engine's
+    merit triple — exactly ``_solve_horizon_body``'s adaptive dispatch)."""
+    value, grad, proj = _horizon_merit_fns(hp, x_current, delta_max,
+                                           cfg.penalty_w, cfg.delta_penalty_w)
+    return pgd_chunk_init(value, grad, proj, x_init, cfg.pgd())
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _horizon_anytime_chunk_impl(hp, x_current, delta_max, state, it_end,
+                                cfg: HorizonSolverConfig):
+    """Advance the anytime horizon solve to the traced cap ``it_end``."""
+    value, grad, proj = _horizon_merit_fns(hp, x_current, delta_max,
+                                           cfg.penalty_w, cfg.delta_penalty_w)
+    return pgd_chunk_run(value, grad, proj, state, it_end, cfg.pgd())
+
+
+def _require_anytime_adaptive(cfg: HorizonSolverConfig,
+                              capture_trace: bool) -> None:
+    """The anytime contract is defined on the chunked BB/Armijo engine;
+    reject the engines (and the trace capture) it cannot truncate."""
+    if cfg.solver != "adaptive":
+        raise ValueError("anytime deadlines require solver='adaptive' "
+                         f"(got {cfg.solver!r}): the fixed and admm "
+                         "engines have no chunk-resumable state")
+    if capture_trace:
+        raise ValueError("anytime deadlines and capture_trace are "
+                         "mutually exclusive; drop one")
+
+
 def _resolve_cfg(cfg: Optional[HorizonSolverConfig], steps: Optional[int],
                  step_scale: Optional[float], penalty_w: Optional[float],
                  delta_penalty_w: Optional[float]) -> HorizonSolverConfig:
@@ -372,14 +406,23 @@ def solve_horizon_info(hp: HorizonProblem, x_current, delta_max,
                        penalty_w: Optional[float] = None,
                        delta_penalty_w: Optional[float] = None,
                        cfg: Optional[HorizonSolverConfig] = None,
-                       capture_trace: bool = False) -> HorizonSolveResult:
+                       capture_trace: bool = False,
+                       anytime: Optional[AnytimeConfig] = None
+                       ) -> HorizonSolveResult:
     """:func:`solve_horizon` variant returning the plan AND the iteration
     count the engine actually spent (== ``steps`` for the fixed engine; the
     early-stopping win for the adaptive one — what the benchmark's
     ``solver_iters`` cells aggregate). ``capture_trace=True`` additionally
     fills ``HorizonSolveResult.trace`` with the engine's per-iteration
     convergence rows; the fixed engine has no ladder to trace, so that
-    combination raises ``ValueError``."""
+    combination raises ``ValueError``.
+
+    An *enabled* ``anytime`` config (``core.pgd.AnytimeConfig`` with
+    ``deadline_ms`` set; adaptive engine only) runs the solve chunked
+    against the injectable clock and returns the best-so-far plan by merit
+    when the budget expires, reporting the truncation in
+    ``HorizonSolveResult.deadline_hit``; disabled/absent configs take the
+    untruncated path — the exact pre-anytime compiled program."""
     cfg = _resolve_cfg(cfg, steps, step_scale, penalty_w, delta_penalty_w)
     if capture_trace and cfg.solver == "fixed":
         raise ValueError("capture_trace requires the adaptive or admm "
@@ -390,6 +433,16 @@ def solve_horizon_info(hp: HorizonProblem, x_current, delta_max,
     if x_init is None:
         x_init = jnp.tile(x_current[None, :], (hp.H, 1))
     x_init = jnp.asarray(x_init, jnp.float32)
+    if anytime is not None and anytime.enabled:
+        _require_anytime_adaptive(cfg, capture_trace)
+        state, report = run_anytime(
+            lambda: _horizon_anytime_init_impl(hp, x_current, delta_max,
+                                               x_init, cfg),
+            lambda s, e: _horizon_anytime_chunk_impl(hp, x_current, delta_max,
+                                                     s, e, cfg),
+            cfg.pgd(), anytime)
+        return HorizonSolveResult(plan=state.x_best, iters=state.it,
+                                  deadline_hit=report.deadline_hit)
     has_diag = cfg.solver == "admm" and hp.H > 1
     impl = (_solve_horizon_traced_impl if capture_trace
             else _solve_horizon_impl)
@@ -492,6 +545,7 @@ class HorizonFleetStepResult(NamedTuple):
     iters: jnp.ndarray      # (B,) PGD iterations per lane (frozen lanes: 0)
     trace: Optional[Union[PGDTrace, ADMMTrace]] = None  # (B, L) rows (opt-in)
     diag: Optional[ADMMDiag] = None   # admm-only per-lane residuals
+    deadline_hit: Optional[bool] = None  # anytime tick truncated (None: n/a)
 
 
 def _horizon_fleet_step_body(hp: HorizonProblem, x_current: jnp.ndarray,
@@ -544,6 +598,54 @@ def _horizon_fleet_step_traced_impl(hp: HorizonProblem, x_current, delta_max,
                                     cfg, respect_plan, trace=True)
 
 
+@partial(jax.jit, static_argnames=("cfg",))
+def _horizon_fleet_anytime_init_impl(hp: HorizonProblem, x_current, delta_max,
+                                     x_init, cfg: HorizonSolverConfig):
+    """Vmapped chunk-state init of the anytime fleet horizon tick (per-lane
+    adaptive merit triples, leaves stacked on a leading (B,) axis)."""
+    return jax.vmap(
+        lambda pb, xc, dm, xi: pgd_chunk_init(
+            *_horizon_merit_fns(HorizonProblem(pb, hp.coupling_w,
+                                               hp.coupling_eps),
+                                xc, dm, cfg.penalty_w, cfg.delta_penalty_w),
+            xi, cfg.pgd())
+    )(hp.problem, x_current, delta_max, x_init)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _horizon_fleet_anytime_chunk_impl(hp: HorizonProblem, x_current,
+                                      delta_max, state, it_end,
+                                      cfg: HorizonSolverConfig):
+    """Advance every lane's anytime horizon solve to the traced cap."""
+    return jax.vmap(
+        lambda pb, xc, dm, s: pgd_chunk_run(
+            *_horizon_merit_fns(HorizonProblem(pb, hp.coupling_w,
+                                               hp.coupling_eps),
+                                xc, dm, cfg.penalty_w, cfg.delta_penalty_w),
+            s, it_end, cfg.pgd())
+    )(hp.problem, x_current, delta_max, state)
+
+
+@partial(jax.jit, static_argnames=("respect_plan",))
+def _horizon_fleet_anytime_finalize_impl(hp: HorizonProblem, plan, x_current,
+                                         active, iters, respect_plan: bool
+                                         ) -> HorizonFleetStepResult:
+    """The untruncated fleet tick's tail — committed-tick rounding,
+    frozen-lane masking, objective and feasibility — applied to the anytime
+    best-so-far plans."""
+    p0 = jax.tree_util.tree_map(lambda a: a[:, 0], hp.problem)   # (B, ...)
+    x_int = jax.vmap(lambda pb, xr: round_committed(pb, xr, respect_plan)
+                     )(p0, plan[:, 0])
+    plan = jnp.where(active[:, None, None], plan,
+                     jnp.broadcast_to(x_current[:, None, :], plan.shape))
+    x_int = jnp.where(active[:, None], x_int, x_current)
+    f_int = jax.vmap(objective)(p0, x_int)
+    feas = jax.vmap(lambda pb, xi: is_feasible(pb, xi, 1e-3))(p0, x_int)
+    return HorizonFleetStepResult(plan=plan, x_int=x_int, fun_int=f_int,
+                                  feasible=feas,
+                                  iters=jnp.where(active, iters, 0))
+
+
 def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
                              delta_max: Union[float, jnp.ndarray],
                              x_init: Optional[jnp.ndarray] = None,
@@ -552,7 +654,8 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
                              penalty_w: Optional[float] = None,
                              delta_penalty_w: Optional[float] = None,
                              cfg: Optional[HorizonSolverConfig] = None,
-                             capture_trace: bool = False
+                             capture_trace: bool = False,
+                             anytime: Optional[AnytimeConfig] = None
                              ) -> HorizonFleetStepResult:
     """One receding-horizon tick for EVERY tenant lane in one jitted program.
 
@@ -575,7 +678,13 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
     engine, ``ADMMTrace`` for admm at H>1; ``solver='fixed'`` raises
     ``ValueError``). ADMM solves also fill the per-lane residual
     certificate ``HorizonFleetStepResult.diag`` and gauge the worst lane's
-    residuals (``horizon/admm_*``) when a telemetry recorder is active."""
+    residuals (``horizon/admm_*``) when a telemetry recorder is active.
+
+    An *enabled* ``anytime`` config (adaptive engine only) runs the tick
+    chunked against the injectable clock and commits each lane's
+    best-so-far plan when the fleet-wide budget expires
+    (``HorizonFleetStepResult.deadline_hit`` reports the truncation);
+    disabled/absent configs take the exact pre-anytime program."""
     cfg = _resolve_cfg(cfg, steps, None, penalty_w, delta_penalty_w)
     if capture_trace and cfg.solver == "fixed":
         raise ValueError("capture_trace requires the adaptive or admm "
@@ -589,6 +698,19 @@ def solve_horizon_fleet_step(hp: HorizonProblem, x_current: jnp.ndarray,
         x_init = jnp.tile(x_current[:, None, :], (1, H, 1))
     active = (jnp.ones(B, bool) if active is None
               else jnp.asarray(np.asarray(active, bool)))
+    if anytime is not None and anytime.enabled:
+        _require_anytime_adaptive(cfg, capture_trace)
+        x_init = jnp.asarray(x_init, jnp.float32)
+        state, report = run_anytime(
+            lambda: _horizon_fleet_anytime_init_impl(hp, x_current, delta_max,
+                                                     x_init, cfg),
+            lambda s, e: _horizon_fleet_anytime_chunk_impl(
+                hp, x_current, delta_max, s, e, cfg),
+            cfg.pgd(), anytime)
+        res = _horizon_fleet_anytime_finalize_impl(
+            hp, state.x_best, x_current, active, state.it,
+            respect_plan=(H > 1))
+        return res._replace(deadline_hit=report.deadline_hit)
     impl = (_horizon_fleet_step_traced_impl if capture_trace
             else _horizon_fleet_step_impl)
     res = impl(hp, x_current, delta_max, jnp.asarray(x_init, jnp.float32),

@@ -32,9 +32,15 @@ committed (tenant, tick):
 * **Deadline budget** — an observe-only per-tick ``deadline_ms``: tick
   durations (measured by the ENGINE via ``monitor.clock``, injectable for
   deterministic tests) land in a latency histogram and every overrun bumps
-  a deadline-miss counter. Nothing is interrupted — this is the
-  instrumentation hook the anytime serving contract (ROADMAP, online
-  serving) will consume.
+  a deadline-miss counter. Nothing is interrupted — the ENFORCED budget is
+  ``core.pgd.AnytimeConfig`` (``replay_fleet(..., anytime=...)``,
+  ``repro.serve``); ticks whose solve that budget truncated are counted
+  separately as ``deadline_truncated_ticks``. Ticks that are the FIRST
+  sighting of their engine's ``compile_key`` pay one-off XLA compilation,
+  not steady-state solve latency; they are excluded from the miss counter
+  and counted (and histogrammed) separately as ``compile_excluded_ticks``
+  — before this split, every first warm tick after any jit cache miss was
+  reported as a deadline miss.
 
 Everything is observe-only: the monitor never touches solver state, so
 per-tenant integer allocations are bit-identical with health monitoring on
@@ -117,6 +123,11 @@ class HealthReport:
     churn_violation_ticks: int = 0
     spot_interruption_ticks: int = 0
     deadline_miss_ticks: int = 0
+    # first-sighting-of-compile-key ticks: their duration is dominated by
+    # one-off XLA compilation, so they are excluded from the miss counter
+    compile_excluded_ticks: int = 0
+    # committed steps whose solve an ENFORCED anytime budget truncated
+    deadline_truncated_ticks: int = 0
     stall_events: int = 0
     nonfinite_events: int = 0
     ticks_observed: int = 0
@@ -138,6 +149,8 @@ class HealthReport:
             "churn_violation_ticks": self.churn_violation_ticks,
             "spot_interruption_ticks": self.spot_interruption_ticks,
             "deadline_miss_ticks": self.deadline_miss_ticks,
+            "compile_excluded_ticks": self.compile_excluded_ticks,
+            "deadline_truncated_ticks": self.deadline_truncated_ticks,
             "stall_events": self.stall_events,
             "nonfinite_events": self.nonfinite_events,
             "ticks_observed": self.ticks_observed,
@@ -160,7 +173,12 @@ class HealthReport:
         if self.deadline_ms is not None:
             lines.append(f"  health: deadline miss : "
                          f"{self.deadline_miss_ticks} ticks "
-                         f"(budget {self.deadline_ms:g} ms)")
+                         f"(budget {self.deadline_ms:g} ms, "
+                         f"{self.compile_excluded_ticks} compile ticks "
+                         f"excluded)")
+        if self.deadline_truncated_ticks:
+            lines.append(f"  health: anytime trunc : "
+                         f"{self.deadline_truncated_ticks} steps")
         if self.worst_kkt_stationarity is not None:
             prov = self.worst_kkt or {}
             lines.append(
@@ -267,6 +285,10 @@ class HealthMonitor:
         self.clock = clock
         self._report = HealthReport(deadline_ms=deadline_ms)
         self._dropped_events = 0
+        # engine compile keys already sighted once; the first tick carrying
+        # a new key pays one-off XLA compilation and is excluded from the
+        # deadline budget (see observe_tick)
+        self._compile_seen: set = set()
 
     # -- event plumbing -----------------------------------------------------
 
@@ -296,6 +318,9 @@ class HealthMonitor:
         to an untraced replay still counts breaches and guards NaNs."""
         rep = self._report
         # breach counters ---------------------------------------------------
+        if getattr(step, "deadline_hit", False):
+            rep.deadline_truncated_ticks += 1
+            self._inc("health/deadline_truncated_ticks")
         if not step.metrics.satisfied:
             rep.slo_breach_ticks += 1
             self._inc("health/slo_breach_ticks")
@@ -399,11 +424,31 @@ class HealthMonitor:
 
     # -- per-tick latency ---------------------------------------------------
 
-    def observe_tick(self, tick: int, duration_ms: float) -> None:
+    def observe_tick(self, tick: int, duration_ms: float,
+                     compile_key=None) -> None:
         """Record one tick's wall-clock duration (measured by the engine via
         ``self.clock``; fleet-wide tick in the batched engines, per-tenant
-        tick in the sequential engine) against the deadline budget."""
+        tick in the sequential engine) against the deadline budget.
+
+        ``compile_key`` is the engine's tick-level jit-program identity (a
+        hashable tuple, same convention as telemetry span compile keys). A
+        tick carrying a key this monitor has NOT seen before is a
+        compile tick: its raw wall time is dominated by one-off XLA
+        compilation, not the solve the budget governs, so it is counted
+        (and histogrammed) under ``compile_excluded_ticks`` instead of
+        being compared against ``deadline_ms``. Before this split the
+        first warm tick after ANY jit cache miss — a new bucket shape, a
+        fresh process, an evicted program — was reported as a deadline
+        miss."""
         self._report.ticks_observed += 1
+        if compile_key is not None and compile_key not in self._compile_seen:
+            self._compile_seen.add(compile_key)
+            self._report.compile_excluded_ticks += 1
+            self._inc("health/compile_excluded_ticks")
+            if self.registry is not None:
+                self.registry.histogram(
+                    "health/tick_compile_ms").observe(duration_ms)
+            return
         if self.registry is not None:
             self.registry.histogram("health/tick_ms").observe(duration_ms)
         if self.deadline_ms is not None and duration_ms > self.deadline_ms:

@@ -1,0 +1,13 @@
+"""repro.serve — anytime online allocation serving (docs/serving.md).
+
+The event-driven counterpart of ``repro.fleet.replay``: asynchronous
+demand arrival, dynamic tenant register/depart over a fixed bank of batch
+lanes (compiled programs never change while the service is live), and an
+ENFORCED per-tick wall-clock budget via ``core.pgd.AnytimeConfig`` — each
+tick deploys the chunked solve's best-so-far feasible iterate when the
+budget expires. ``python -m repro.serve`` runs a flash-crowd demo;
+``benchmarks/serve_bench.py`` measures p50/p99 decision latency and the
+staleness-vs-objective tradeoff."""
+from .engine import DecisionRecord, ServeEngine, ServeSummary
+
+__all__ = ["DecisionRecord", "ServeEngine", "ServeSummary"]

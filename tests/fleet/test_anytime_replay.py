@@ -1,0 +1,116 @@
+"""Anytime deadlines through the replay stack (ISSUE tentpole plumbing):
+``replay_fleet(..., anytime=...)`` must actually truncate warm solves in
+the sequential AND batched engine under the myopic AND MPC controller —
+and ``deadline=None`` must replay bit-identically to no config at all.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import Catalog, make_cloud_catalog
+from repro.core.pgd import AnytimeConfig
+from repro.fleet import TenantSpec, make_trace, replay_fleet
+
+BASE = np.array([8.0, 16.0, 4.0, 100.0])
+
+
+@pytest.fixture(scope="module")
+def tiny_catalog():
+    return Catalog(make_cloud_catalog().instances[::40])
+
+
+def _fleet(T=3):
+    return [TenantSpec(name="a", n_starts=2,
+                       trace=make_trace("diurnal", BASE, T)),
+            TenantSpec(name="b", n_starts=2,
+                       trace=make_trace("ramp", BASE * 0.6, T))]
+
+
+def _tight_anytime():
+    """A deterministic config that must truncate every warm solve: the
+    fake clock burns 5ms per reading against a 12ms budget, so at most a
+    couple of 4-iteration chunks fit."""
+    fake = SimpleNamespace(t=0.0)
+
+    def clock():
+        fake.t += 5e-3
+        return fake.t
+
+    return AnytimeConfig(deadline_ms=12.0, chunk_iters=4, clock=clock)
+
+
+def _counts(res):
+    return [[s.counts for s in t.steps] for t in res.tenants]
+
+
+ENGINE_COMBOS = [("sequential", "myopic"), ("batched", "myopic"),
+                 ("sequential", "mpc"), ("batched", "mpc")]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,controller", ENGINE_COMBOS)
+def test_deadline_truncates_warm_solves_in_every_combo(tiny_catalog, mode,
+                                                       controller):
+    """Reachability (ISSUE satellite): the enforced deadline must reach
+    the inner solve in all four engine×controller combos — every warm
+    tick is flagged ``deadline_hit`` with an iteration count far below
+    the untruncated budget, and cold ticks are never flagged."""
+    res = replay_fleet(tiny_catalog, _fleet(), replay_mode=mode,
+                       controller=controller, horizon=2,
+                       run_ca_baseline=False, anytime=_tight_anytime())
+    for tr in res.tenants:
+        cold, warm = tr.steps[0], tr.steps[1:]
+        assert not cold.deadline_hit
+        assert warm, "fleet must have warm ticks to truncate"
+        for s in warm:
+            assert s.deadline_hit, (mode, controller, s)
+            assert 0 < s.solver_iters <= 12, (mode, controller,
+                                              s.solver_iters)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["sequential", "batched"])
+def test_disabled_deadline_replays_bit_identical(tiny_catalog, mode):
+    """``AnytimeConfig(deadline_ms=None)`` must branch at Python level
+    into the exact engines a no-config replay compiles — per-tenant
+    integer allocations identical bit for bit."""
+    off = replay_fleet(tiny_catalog, _fleet(), replay_mode=mode,
+                       run_ca_baseline=False)
+    disabled = replay_fleet(tiny_catalog, _fleet(), replay_mode=mode,
+                            run_ca_baseline=False,
+                            anytime=AnytimeConfig(deadline_ms=None))
+    for c_off, c_dis in zip(_counts(off), _counts(disabled)):
+        for a, b in zip(c_off, c_dis):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_generous_deadline_matches_untruncated_replay(tiny_catalog):
+    """A budget that never expires must not change a single allocation:
+    the chunked engine walks the same iteration sequence."""
+    off = replay_fleet(tiny_catalog, _fleet(), replay_mode="batched",
+                       run_ca_baseline=False)
+    on = replay_fleet(tiny_catalog, _fleet(), replay_mode="batched",
+                      run_ca_baseline=False,
+                      anytime=AnytimeConfig(deadline_ms=1e9))
+    for c_off, c_on in zip(_counts(off), _counts(on)):
+        for a, b in zip(c_off, c_on):
+            np.testing.assert_array_equal(a, b)
+    assert not any(s.deadline_hit for t in on.tenants for s in t.steps)
+
+
+def test_anytime_rejects_capture_solver_trace(tiny_catalog):
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        replay_fleet(tiny_catalog, _fleet(), capture_solver_trace=True,
+                     anytime=AnytimeConfig(deadline_ms=5.0))
+
+
+@pytest.mark.slow
+def test_anytime_mpc_requires_adaptive_engine(tiny_catalog):
+    from repro.horizon import HorizonSolverConfig
+
+    with pytest.raises(ValueError, match="adaptive"):
+        replay_fleet(tiny_catalog, _fleet(), controller="mpc", horizon=2,
+                     solver_config=HorizonSolverConfig(solver="fixed"),
+                     anytime=_tight_anytime())

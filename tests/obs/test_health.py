@@ -184,9 +184,14 @@ def test_deadline_budget_observe_tick():
 
 @pytest.mark.slow
 def test_deadline_miss_under_fake_clock(tiny_catalog):
-    """ISSUE satellite: the engines time ticks through monitor.clock, so a
-    fake clock advancing 1s per reading makes every tick a deterministic
-    1000ms — over a 500ms budget, every observed tick must miss."""
+    """The engines time ticks through monitor.clock, so a fake clock
+    advancing 1s per reading makes every tick a deterministic 1000ms —
+    over a 500ms budget every STEADY-STATE tick must miss, while the two
+    compile ticks (the batched engine's cold t=0 and first-warm t=1
+    programs, identified by their first-seen compile keys) are excluded
+    from the miss counter and reported separately: before this split, the
+    first warm tick after ANY jit cache miss was reported as a deadline
+    miss even though its wall time was XLA compilation, not solving."""
     fake = SimpleNamespace(t=0.0)
 
     def clock():
@@ -195,12 +200,53 @@ def test_deadline_miss_under_fake_clock(tiny_catalog):
 
     mon = HealthMonitor(deadline_ms=500.0, kkt_every=0, clock=clock)
     spec = TenantSpec(name="t0", n_starts=2,
-                      trace=make_trace("constant", BASE, 3))
+                      trace=make_trace("constant", BASE, 4))
     replay_fleet(tiny_catalog, [spec], replay_mode="batched",
                  run_ca_baseline=False, health=mon)
     rep = mon.report()
-    assert rep.ticks_observed == 3
-    assert rep.deadline_miss_ticks == rep.ticks_observed
+    assert rep.ticks_observed == 4
+    assert rep.compile_excluded_ticks == 2     # cold + first-warm programs
+    assert rep.deadline_miss_ticks == 2        # only the steady-state ticks
+
+
+def test_compile_key_first_sighting_excluded_from_deadline_budget():
+    """Regression (ISSUE satellite, unit level): observe_tick with a
+    compile_key excludes exactly the FIRST sighting of each key from the
+    deadline budget — repeat sightings are normal budgeted ticks — and
+    routes the excluded duration to its own histogram."""
+    reg = MetricRegistry()
+    mon = HealthMonitor(deadline_ms=50.0, registry=reg)
+    mon.observe_tick(0, 900.0, compile_key=("tick", 0))   # compile: excluded
+    mon.observe_tick(1, 700.0, compile_key=("tick", 1))   # new key: excluded
+    mon.observe_tick(2, 80.0, compile_key=("tick", 1))    # seen: a real miss
+    mon.observe_tick(3, 10.0, compile_key=("tick", 1))    # seen: within budget
+    mon.observe_tick(4, 80.0)                             # keyless: a miss
+    rep = mon.report()
+    assert rep.ticks_observed == 5
+    assert rep.compile_excluded_ticks == 2
+    assert rep.deadline_miss_ticks == 2
+    assert reg.counter("health/compile_excluded_ticks").value == 2
+    assert reg.histogram("health/tick_compile_ms").count == 2
+    assert reg.histogram("health/tick_ms").count == 3
+    d = rep.to_dict()
+    assert d["compile_excluded_ticks"] == 2
+    assert d["deadline_truncated_ticks"] == 0
+
+
+def test_deadline_truncated_steps_counted():
+    """Steps committed with ``deadline_hit=True`` (an enforced anytime
+    budget truncated their solve) are rolled up separately from wall-clock
+    deadline misses."""
+    reg = MetricRegistry()
+    mon = HealthMonitor(registry=reg)
+    step = _step()
+    step.deadline_hit = True
+    mon.observe_step(tenant="a", tick=0, step=step, solver="adaptive")
+    mon.observe_step(tenant="a", tick=1, step=_step(), solver="adaptive")
+    rep = mon.report()
+    assert rep.deadline_truncated_ticks == 1
+    assert reg.counter("health/deadline_truncated_ticks").value == 1
+    assert "anytime trunc" in "\n".join(rep.summary_lines())
 
 
 # ---------------------------------------------------------------------------

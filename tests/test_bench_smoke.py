@@ -130,6 +130,28 @@ def test_solver_bench_runs(capsys):
 
 
 @pytest.mark.slow
+def test_serve_bench_cell_and_degradation_tiny(monkeypatch):
+    """benchmarks/serve_bench.py still runs: one tiny latency cell emits
+    the ServeSummary schema, and the degradation sweep's contract checks
+    hold (tighter budget -> equal-or-worse objective, always feasible)."""
+    sb = _load("serve_bench")
+    monkeypatch.setitem(sb.CONFIG, "ticks", 4)
+    monkeypatch.setitem(sb.CONFIG, "degradation_budgets_ms", [1.0, 8.0])
+    catalog = sb._make_catalog()
+    cell = sb._latency_cell(catalog, 2, None, seed=0)
+    assert cell["decisions"] > 0
+    for key in ("p50_latency_ms", "p99_latency_ms", "truncated_rate",
+                "miss_rate", "mean_staleness"):
+        assert key in cell, (key, cell)
+    assert cell["truncated_rate"] == 0.0      # no deadline in this cell
+    deg = sb._degradation_sweep()
+    assert len(deg["rows"]) == 2
+    assert deg["checks"]["monotone_objective"]
+    assert deg["checks"]["all_feasible"]
+    assert deg["checks"]["tight_budget_truncates"]
+
+
+@pytest.mark.slow
 def test_check_bench_emits_comparable_sentinel_doc(tmp_path):
     """benchmarks/check_bench.py (the `make bench-check` canary) runs end
     to end and its fresh doc compares cleanly against the committed golden

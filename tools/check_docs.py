@@ -4,8 +4,8 @@
 Fails (exit 1) when:
 
 * a public module under ``src/repro/fleet/``, ``src/repro/core/``,
-  ``src/repro/horizon/`` or ``src/repro/obs/`` lacks a module-level
-  docstring,
+  ``src/repro/horizon/``, ``src/repro/obs/`` or ``src/repro/serve/``
+  lacks a module-level docstring,
 * a public (non-underscore) top-level function or class in those packages
   lacks a docstring — NamedTuple/dataclass result containers included,
 * a ``docs/*.md`` page referenced from README.md does not exist, or any of
@@ -22,14 +22,14 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 CHECKED_PACKAGES = ("src/repro/fleet", "src/repro/core", "src/repro/horizon",
-                    "src/repro/obs")
+                    "src/repro/obs", "src/repro/serve")
 # single modules gated outside the checked packages: the property-test core
 # is public API for every test in the repo (note `src/repro/core/pgd.py`,
 # the shared PGD engine, is already covered by the core package glob)
 CHECKED_MODULES = ("src/repro/testing.py",)
 REQUIRED_DOCS = ("docs/architecture.md", "docs/math.md", "docs/fleet.md",
                  "docs/horizon.md", "docs/observability.md",
-                 "docs/scenarios.md")
+                 "docs/scenarios.md", "docs/serving.md")
 
 
 def iter_public_modules():
